@@ -1,0 +1,66 @@
+//! Failover demo on the calibrated cluster simulator: reproduce the
+//! paper's headline scenario (Fig 1 / Fig 6) — one node of an 8-node
+//! 2-instance cluster dies at t=120 s under 2 RPS — and print the
+//! side-by-side timeline of standard fault behavior vs KevlarFlow.
+//!
+//! ```sh
+//! cargo run --release --example failover_sim [RPS]
+//! ```
+
+use kevlarflow::bench;
+use kevlarflow::config::FaultPolicy;
+use kevlarflow::sim::ClusterSim;
+
+fn main() {
+    let rps: f64 = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(2.0);
+
+    println!("scenario 1 (8-node cluster, node (0,2) fails at t={}s), RPS={rps}", bench::FAILURE_T);
+
+    // full runs for the summary comparison
+    let base = ClusterSim::new(bench::scenario(1, rps, FaultPolicy::Standard)).run();
+    let kev = ClusterSim::new(bench::scenario(1, rps, FaultPolicy::KevlarFlow)).run();
+    let (sb, sk) = (base.recorder.summary(), kev.recorder.summary());
+
+    println!("\n== summary over {} / {} completed requests", sb.n, sk.n);
+    println!("                    standard    kevlarflow   improvement");
+    let row = |name: &str, b: f64, k: f64| {
+        println!("  {name:<16} {b:>10.2}s {k:>10.2}s   {:>8.1}x", b / k);
+    };
+    row("latency avg", sb.latency_avg, sk.latency_avg);
+    row("latency p99", sb.latency_p99, sk.latency_p99);
+    row("TTFT avg", sb.ttft_avg, sk.ttft_avg);
+    row("TTFT p99", sb.ttft_p99, sk.ttft_p99);
+    println!(
+        "  retries: standard={}, kevlarflow={}",
+        base.recorder.records.iter().map(|r| r.retries).sum::<u32>(),
+        kev.recorder.records.iter().map(|r| r.retries).sum::<u32>()
+    );
+    if let Some(rec) = kev.recovery.completed.first() {
+        println!(
+            "\n== recovery: node {} failed @ {:.0}s, donor {}, serving again @ {:.1}s \
+             (recovery {:.1}s; replacement swapped in @ {:.0}s)",
+            rec.failed, rec.injected_s, rec.donor, rec.resumed_s,
+            rec.recovery_time_s(), rec.replacement_s
+        );
+        println!("   vs standard fault behavior: instance down for {:.0}s (full re-init)", 600.0);
+    }
+
+    // rolling TTFT timeline (Fig 6)
+    println!("\n== rolling avg TTFT (30s windows), failure at t=120s");
+    let (rb, rk) = bench::run_rolling_ttft(1, rps, true);
+    println!("{:>7} {:>14} {:>14}", "t(s)", "standard", "kevlarflow");
+    let mut t = 30.0;
+    while t <= 900.0 {
+        let f = |s: &[kevlarflow::metrics::RollingPoint]| {
+            s.iter()
+                .find(|p| (p.t - t).abs() < 1e-6)
+                .map(|p| format!("{:>12.2}s", p.avg))
+                .unwrap_or_else(|| format!("{:>13}", "-"))
+        };
+        println!("{t:>7.0} {} {}", f(&rb), f(&rk));
+        t += 60.0;
+    }
+}

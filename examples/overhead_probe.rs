@@ -1,0 +1,30 @@
+//! Overhead probe (paper Fig 9): measure the end-to-end cost of
+//! KevlarFlow's always-on background KV replication during failure-free
+//! operation, on both paper clusters.
+//!
+//! ```sh
+//! cargo run --release --example overhead_probe
+//! ```
+
+use kevlarflow::bench;
+
+fn main() {
+    println!("replication overhead, healthy clusters (KevlarFlow vs replication-off baseline)");
+    let rows = bench::run_overhead(true);
+    println!("{:>6} {:>6} {:>12} {:>12}", "nodes", "RPS", "avg ovh", "p99 ovh");
+    for (nodes, rps, a, p) in &rows {
+        println!("{nodes:>6} {rps:>6.1} {:>11.1}% {:>11.1}%", a * 100.0, p * 100.0);
+    }
+    for nodes in [8usize, 16] {
+        let sel: Vec<_> = rows.iter().filter(|(n, ..)| *n == nodes).collect();
+        let avg = sel.iter().map(|r| r.2).sum::<f64>() / sel.len() as f64;
+        let p99 = sel.iter().map(|r| r.3).sum::<f64>() / sel.len() as f64;
+        println!(
+            "{nodes}-node mean: avg {:.1}%, p99 {:.1}%   (paper: {})",
+            avg * 100.0,
+            p99 * 100.0,
+            if nodes == 8 { "2.3% avg / 2.8% p99" } else { "4.0% avg / 3.6% p99" }
+        );
+    }
+    println!("\nnegative values = run-to-run noise, as in the paper (§4.4).");
+}

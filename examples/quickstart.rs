@@ -1,0 +1,56 @@
+//! Quickstart: load the AOT artifacts, serve a few prompts through the
+//! real 4-stage pipeline (single replica, in-process), and print tokens.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use kevlarflow::engine::{ByteTokenizer, ModelEngine};
+use kevlarflow::runtime::Runtime;
+
+fn main() -> Result<()> {
+    // 1. PJRT CPU client + artifact manifest (written by `make artifacts`)
+    let rt = Runtime::cpu_default()?;
+    println!(
+        "model: {} stages × {} layers, d={}, vocab={}, Smax={}",
+        rt.manifest.config.n_stages,
+        rt.manifest.config.layers_per_stage,
+        rt.manifest.config.d_model,
+        rt.manifest.config.vocab_size,
+        rt.manifest.config.max_seq,
+    );
+
+    // 2. compile the stage executables and upload weights (once)
+    let t0 = std::time::Instant::now();
+    let engine = ModelEngine::load(&rt)?;
+    println!("loaded {} artifacts in {:.1?}", rt.manifest.artifacts.len(), t0.elapsed());
+
+    // 3. serve a small batch of prompts with continuous decode steps
+    let tok = ByteTokenizer;
+    let prompts = ["Hello, KevlarFlow!", "resilient serving", "fail-stutter > fail-stop"];
+    let mut reqs = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let t = std::time::Instant::now();
+        let r = engine.prefill(i as u64, &tok.encode(p), 12)?;
+        println!("req {i}: prefill {:?} -> first token {} ({:.0?})", p, r.generated[0], t.elapsed());
+        reqs.push(r);
+    }
+    let t = std::time::Instant::now();
+    let mut steps = 0;
+    while reqs.iter().any(|r| r.generated.len() < r.max_new) {
+        let mut batch: Vec<&mut _> = reqs
+            .iter_mut()
+            .filter(|r| r.generated.len() < r.max_new)
+            .collect();
+        engine.decode_step(&mut batch)?;
+        steps += 1;
+    }
+    let dt = t.elapsed();
+    println!("\n{} decode iterations in {:.1?} ({:.0} ms/iter, batched)", steps, dt,
+        dt.as_millis() as f64 / steps as f64);
+    for (p, r) in prompts.iter().zip(&reqs) {
+        println!("  {:?} => {:?} {:?}", p, r.generated, tok.decode(&r.generated));
+    }
+    Ok(())
+}

@@ -1,0 +1,178 @@
+"""AOT lowering: JAX stage functions → HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, never ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``--out-dir``, default ``../artifacts``):
+
+  stage{K}_prefill_s{S}.hlo.txt   one per (stage, prefill bucket)
+  stage{K}_decode_b{B}.hlo.txt    one per (stage, decode batch bucket)
+  weights.npz                     "s{K}.{param}" → f32 array (seeded init)
+  manifest.json                   config + flat ABI + artifact table + goldens
+
+Python runs ONCE (``make artifacts``); the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .config import PRESETS
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default elides any
+    # constant with more than a few elements as "{...}", and the pinned
+    # XLA 0.5.1 text parser silently zero-fills elided constants —
+    # producing artifacts that execute but compute garbage (e.g. RoPE
+    # frequency tables becoming zeros).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_prefill(cfg, stage, s_bucket):
+    pspec = M.stage_param_spec(cfg, stage)
+
+    def fn(*args):
+        params = list(args[: len(pspec)])
+        x, seq_len = args[len(pspec)], args[len(pspec) + 1]
+        return M.stage_prefill(cfg, stage, params, x, seq_len, use_kernel=True)
+
+    arg_specs = [_spec(shape) for _, shape in pspec]
+    if stage == 0:
+        arg_specs.append(_spec((1, s_bucket), jnp.int32))
+    else:
+        arg_specs.append(_spec((1, s_bucket, cfg.d_model)))
+    arg_specs.append(_spec((), jnp.int32))
+    return jax.jit(fn, keep_unused=True).lower(*arg_specs)
+
+
+def lower_decode(cfg, stage, b_bucket):
+    pspec = M.stage_param_spec(cfg, stage)
+    kv_shape = (2, cfg.layers_per_stage, b_bucket, cfg.max_seq,
+                cfg.n_kv_heads, cfg.head_dim)
+
+    def fn(*args):
+        params = list(args[: len(pspec)])
+        x, kv, seq_lens = args[len(pspec)], args[len(pspec) + 1], args[len(pspec) + 2]
+        return M.stage_decode(cfg, stage, params, x, kv, seq_lens, use_kernel=True)
+
+    arg_specs = [_spec(shape) for _, shape in pspec]
+    if stage == 0:
+        arg_specs.append(_spec((b_bucket,), jnp.int32))
+    else:
+        arg_specs.append(_spec((b_bucket, cfg.d_model)))
+    arg_specs.append(_spec(kv_shape))
+    arg_specs.append(_spec((b_bucket,), jnp.int32))
+    return jax.jit(fn, keep_unused=True).lower(*arg_specs)
+
+
+def save_weights_npz(cfg, all_params, path):
+    arrays = {}
+    for stage in range(cfg.n_stages):
+        for (name, _), arr in zip(M.stage_param_spec(cfg, stage), all_params[stage]):
+            arrays[f"s{stage}.{name}"] = np.asarray(arr)
+    np.savez(path, **arrays)
+
+
+def build_goldens(cfg, all_params):
+    """Golden vectors the Rust integration tests verify against.
+
+    Everything runs the *kernel* path — the same computation the artifacts
+    contain — so Rust-vs-golden mismatches isolate the runtime, not L1/L2.
+    """
+    prompt = [72, 101, 108, 108, 111, 33, 7]     # arbitrary bytes
+    n_new = 8
+    gen = M.greedy_generate(cfg, all_params, prompt, n_new, use_kernel=True)
+
+    s = len(prompt)
+    bucket = next(b for b in cfg.prefill_buckets if b >= s)
+    toks = jnp.zeros((1, bucket), jnp.int32).at[0, :s].set(jnp.array(prompt))
+    logits, _ = M.full_prefill(cfg, all_params, toks, jnp.int32(s), use_kernel=True)
+    return {
+        "prompt": prompt,
+        "prefill_bucket": bucket,
+        "greedy_tokens": [int(t) for t in gen],
+        "prefill_logits_first8": [float(x) for x in np.asarray(logits)[0, :8]],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    cfg.validate()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    all_params = [M.init_stage_params(cfg, s, args.seed) for s in range(cfg.n_stages)]
+    save_weights_npz(cfg, all_params, os.path.join(args.out_dir, "weights.npz"))
+
+    artifacts = []
+    t0 = time.time()
+    for stage in range(cfg.n_stages):
+        for s_bucket in cfg.prefill_buckets:
+            name = f"stage{stage}_prefill_s{s_bucket}.hlo.txt"
+            text = to_hlo_text(lower_prefill(cfg, stage, s_bucket))
+            with open(os.path.join(args.out_dir, name), "w") as f:
+                f.write(text)
+            artifacts.append({
+                "file": name, "stage": stage, "phase": "prefill",
+                "bucket": s_bucket,
+            })
+            print(f"[{time.time()-t0:6.1f}s] {name} ({len(text)} chars)")
+        for b_bucket in cfg.decode_buckets:
+            name = f"stage{stage}_decode_b{b_bucket}.hlo.txt"
+            text = to_hlo_text(lower_decode(cfg, stage, b_bucket))
+            with open(os.path.join(args.out_dir, name), "w") as f:
+                f.write(text)
+            artifacts.append({
+                "file": name, "stage": stage, "phase": "decode",
+                "bucket": b_bucket,
+            })
+            print(f"[{time.time()-t0:6.1f}s] {name} ({len(text)} chars)")
+
+    manifest = {
+        "preset": args.preset,
+        "seed": args.seed,
+        "config": cfg.to_json(),
+        "param_spec": {
+            str(stage): [
+                {"name": n, "shape": list(s)}
+                for n, s in M.stage_param_spec(cfg, stage)
+            ]
+            for stage in range(cfg.n_stages)
+        },
+        "artifacts": artifacts,
+        "goldens": build_goldens(cfg, all_params),
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(artifacts)} artifacts + weights.npz + manifest.json "
+          f"in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

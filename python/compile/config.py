@@ -1,0 +1,92 @@
+"""Model / AOT configuration shared by the L2 model, L1 kernels and aot.py.
+
+The Rust side reads the same values from ``artifacts/manifest.json`` — this
+file is the single source of truth at build time.
+"""
+
+import dataclasses
+import json
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Llama-style decoder configuration, partitioned into pipeline stages.
+
+    The default ("tiny") config is sized so the full 4-stage pipeline runs
+    comfortably on the CPU PJRT client while exercising every code path the
+    paper needs (multi-layer stages, RoPE, SwiGLU, GQA-ready attention,
+    paged KV cache). A larger preset is available for scale experiments.
+    """
+
+    vocab_size: int = 256            # byte-level tokenizer
+    d_model: int = 128
+    n_layers: int = 8                # total; must divide evenly by n_stages
+    n_heads: int = 4
+    n_kv_heads: int = 4              # == n_heads -> MHA; < n_heads -> GQA
+    ffn_dim: int = 256               # SwiGLU hidden dim
+    n_stages: int = 4                # pipeline stages (paper: 4-stage PP)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    max_seq: int = 160               # Smax: KV-cache capacity per request
+    page_size: int = 16              # KV block ("page") size — also the
+    #                                  replication unit (paper §3.2)
+    prefill_buckets: tuple = (16, 32, 64, 128)
+    decode_buckets: tuple = (1, 2, 4, 8)
+    dtype: str = "float32"
+
+    # ---- derived -----------------------------------------------------
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def layers_per_stage(self) -> int:
+        assert self.n_layers % self.n_stages == 0
+        return self.n_layers // self.n_stages
+
+    @property
+    def n_pages(self) -> int:
+        assert self.max_seq % self.page_size == 0
+        return self.max_seq // self.page_size
+
+    def validate(self) -> None:
+        assert self.n_heads % self.n_kv_heads == 0, "GQA group must divide"
+        for s in self.prefill_buckets:
+            assert s % self.page_size == 0, "prefill bucket must be page-aligned"
+            assert s <= self.max_seq
+        assert self.head_dim in (16, 32, 64, 128), "MXU-friendly head_dim"
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["head_dim"] = self.head_dim
+        d["layers_per_stage"] = self.layers_per_stage
+        d["n_pages"] = self.n_pages
+        return d
+
+
+TINY = ModelConfig()
+
+# ~100M-parameter class config used for footprint/roofline estimates in
+# DESIGN.md §Perf (not lowered by default — `aot.py --preset small100m`).
+SMALL_100M = ModelConfig(
+    vocab_size=32000,
+    d_model=768,
+    n_layers=12,
+    n_heads=12,
+    n_kv_heads=12,
+    ffn_dim=2048,
+    n_stages=4,
+    max_seq=2048,
+    page_size=16,
+    prefill_buckets=(128, 256, 512, 1024),
+    decode_buckets=(1, 2, 4, 8, 16),
+)
+
+PRESETS = {"tiny": TINY, "small100m": SMALL_100M}
+
+
+def load_manifest(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,215 @@
+"""L1 Pallas attention kernels (TPU-style, lowered with interpret=True).
+
+Two kernels implement the serving hot-spot:
+
+* :func:`flash_prefill_attention` — causal flash attention for the prefill
+  phase. The TPU adaptation of the paper's GPU attention path: a 3-D grid
+  ``(head, q_block, kv_block)`` where each step moves one
+  ``(BLOCK_Q × head_dim)`` query tile and one ``(BLOCK_K × head_dim)``
+  KV tile HBM→VMEM (via BlockSpec) and maintains the online-softmax
+  running max / denominator / accumulator in VMEM scratch. On a real TPU
+  the two per-step matmuls are MXU systolic work; with ``interpret=True``
+  the same program lowers to plain HLO so the CPU PJRT client can run it.
+
+* :func:`paged_decode_attention` — single-token decode attention over a
+  *paged* KV cache. The grid iterates ``(batch, head, kv_page)``; each
+  step streams exactly one KV page (``page_size × head_dim``) into VMEM —
+  the BlockSpec plays the role the paged-gather threadblock plays in the
+  GPU formulation. Pages entirely beyond the sequence length are masked
+  (compute-skipped with @pl.when) — this mirrors block-table truncation.
+
+The page is also KevlarFlow's KV *replication unit* (paper §3.2): the
+Rust coordinator replicates the same ``page_size``-token blocks the kernel
+consumes, so a restored request resumes on page boundaries.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+# Default tile sizes. 128 would be the MXU-native choice; the tiny model's
+# buckets start at 16 so we default to 16 and let callers raise it.
+DEFAULT_BLOCK_Q = 16
+DEFAULT_BLOCK_K = 16
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  n_kv_blocks, block_q, block_k, scale):
+    """One (head, q_block, kv_block) grid step of causal flash attention."""
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Causal structure: KV block j only contributes to q block i if
+    # j*block_k <= i*block_q + block_q - 1. Blocks strictly above the
+    # diagonal are skipped entirely (no VMEM compute issued).
+    @pl.when(kb * block_k <= qb * block_q + (block_q - 1))
+    def _step():
+        q = q_ref[0]                      # [block_q, hd]   VMEM
+        k = k_ref[0]                      # [block_k, hd]   VMEM
+        v = v_ref[0]                      # [block_k, hd]   VMEM
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+        # Intra-diagonal causal mask.
+        q_idx = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_idx = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(k_idx <= q_idx, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_kv_blocks - 1)
+    def _finish():
+        # Every row has attended at least to itself, so l > 0.
+        o_ref[0] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+def flash_prefill_attention(q, k, v, *, block_q=DEFAULT_BLOCK_Q,
+                            block_k=DEFAULT_BLOCK_K, interpret=True):
+    """Causal flash attention for prefill.
+
+    Args:
+      q, k, v: ``[S, H, hd]`` float arrays (k/v pre-broadcast to H heads).
+      block_q, block_k: VMEM tile sizes; must divide S.
+
+    Returns:
+      ``[S, H, hd]`` attention output (same dtype as q).
+    """
+    s_len, n_heads, head_dim = q.shape
+    assert k.shape == q.shape and v.shape == q.shape, (q.shape, k.shape)
+    block_q = min(block_q, s_len)
+    block_k = min(block_k, s_len)
+    assert s_len % block_q == 0 and s_len % block_k == 0
+    n_kv_blocks = s_len // block_k
+    scale = 1.0 / (head_dim ** 0.5)
+
+    # [S, H, hd] -> [H, S, hd] so the head is the leading grid dimension.
+    qt, kt, vt = (x.transpose(1, 0, 2) for x in (q, k, v))
+
+    kernel = functools.partial(
+        _flash_kernel, n_kv_blocks=n_kv_blocks, block_q=block_q,
+        block_k=block_k, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_heads, s_len // block_q, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, head_dim), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, head_dim), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, block_k, head_dim), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, head_dim), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_heads, s_len, head_dim), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, head_dim), jnp.float32),  # acc
+            pltpu.VMEM((block_q,), jnp.float32),           # running max
+            pltpu.VMEM((block_q,), jnp.float32),           # running denom
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(1, 0, 2)
+
+
+def _paged_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, n_pages, page_size, scale):
+    """One (batch, head, page) grid step of paged decode attention."""
+    pg = pl.program_id(2)
+
+    @pl.when(pg == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = len_ref[0]  # the new token's position; attends to 0..=pos
+
+    # Pages entirely past the sequence are dead — skip their compute
+    # (the BlockSpec still schedules the copy; a block-table indirection
+    # would skip that too — see DESIGN.md §Hardware-Adaptation).
+    @pl.when(pg * page_size <= pos)
+    def _step():
+        q = q_ref[0, 0]                    # [1, hd]
+        k = k_ref[0, 0]                    # [page, hd]
+        v = v_ref[0, 0]                    # [page, hd]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)[0] * scale
+        k_idx = pg * page_size + jax.lax.iota(jnp.int32, page_size)
+        s = jnp.where(k_idx <= pos, s, NEG_INF)
+
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * alpha + p.sum()
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p[None, :].astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[0] = m_new
+
+    @pl.when(pg == n_pages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[0]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_cache, v_cache, seq_lens, *, page_size=16,
+                           interpret=True):
+    """Single-token decode attention over the paged KV cache.
+
+    Args:
+      q: ``[B, H, hd]`` new-token queries.
+      k_cache, v_cache: ``[B, Smax, H, hd]``; position ``seq_lens[b]``
+        already holds the new token's K/V.
+      seq_lens: ``[B]`` int32 pre-append lengths.
+      page_size: KV page (block) length; must divide Smax.
+
+    Returns:
+      ``[B, H, hd]``.
+    """
+    batch, n_heads, head_dim = q.shape
+    smax = k_cache.shape[1]
+    assert smax % page_size == 0
+    n_pages = smax // page_size
+    scale = 1.0 / (head_dim ** 0.5)
+
+    # [B, Smax, H, hd] -> [B, H, Smax, hd] so a (page, hd) tile is contiguous.
+    kt = k_cache.transpose(0, 2, 1, 3)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    qt = q[:, :, None, :]  # [B, H, 1, hd]
+
+    kernel = functools.partial(
+        _paged_decode_kernel, n_pages=n_pages, page_size=page_size,
+        scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(batch, n_heads, n_pages),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+            pl.BlockSpec((1, 1, 1, head_dim), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, head_dim), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, page_size, head_dim), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, head_dim), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_heads, 1, head_dim), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, head_dim), jnp.float32),  # acc
+            pltpu.VMEM((1,), jnp.float32),           # running max
+            pltpu.VMEM((1,), jnp.float32),           # running denom
+        ],
+        interpret=interpret,
+    )(seq_lens.astype(jnp.int32), qt, kt, vt)
+    return out[:, :, 0, :]

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel must match its
+oracle to float32 tolerance across the hypothesis shape sweep in
+``python/tests/test_kernel.py``. They are also used directly by the L2
+model reference path (``model.reference_forward``) so the whole stage can
+be validated end-to-end against a kernel-free implementation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def prefill_attention_ref(q, k, v, seq_len=None):
+    """Causal multi-head attention over a single sequence.
+
+    Args:
+      q, k, v: ``[S, H, hd]`` (k/v may have fewer heads for GQA — they are
+        expected pre-broadcast to H by the caller).
+      seq_len: optional scalar; positions ``>= seq_len`` are padding. They
+        still produce (garbage) outputs — the contract is only that
+        positions ``< seq_len`` are exact, matching the kernel.
+
+    Returns:
+      ``[S, H, hd]`` attention output.
+    """
+    s = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    seq = q.shape[0]
+    causal = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    s = jnp.where(causal[None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", p, v)
+
+
+def decode_attention_ref(q, k_cache, v_cache, seq_lens):
+    """Single-token decode attention against a padded KV cache.
+
+    Args:
+      q: ``[B, H, hd]`` — the new token's query (position ``seq_lens[b]``).
+      k_cache, v_cache: ``[B, Smax, H, hd]`` — new token's K/V already
+        written at index ``seq_lens[b]``.
+      seq_lens: ``[B]`` int32 — pre-append lengths; token b attends to
+        positions ``0..=seq_lens[b]``.
+
+    Returns:
+      ``[B, H, hd]``.
+    """
+    smax = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    s = jnp.einsum("bhd,bkhd->bhk", q, k_cache) * scale
+    kidx = jnp.arange(smax)[None, None, :]
+    mask = kidx <= seq_lens[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, v_cache)
+
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def rope_ref(x, positions, theta=10000.0):
+    """Rotary embedding. x: [..., S, H, hd], positions: [..., S].
+
+    Implemented with a reshape-based even/odd split instead of stride-2
+    slicing: ``x[..., 0::2]`` lowers to a strided gather that the pinned
+    XLA 0.5.1 runtime (the Rust PJRT loader) mis-executes; the reshape
+    form lowers to plain reshapes/slices and is numerically identical.
+    """
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    xr = x.reshape(*x.shape[:-1], hd // 2, 2)
+    x1, x2 = xr[..., 0], xr[..., 1]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)

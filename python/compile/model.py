@@ -1,0 +1,286 @@
+"""L2: Llama-style transformer partitioned into pipeline stages.
+
+Each pipeline stage owns ``cfg.layers_per_stage`` decoder layers. Stage 0
+additionally owns the token embedding; the last stage owns the final
+RMSNorm + LM head. Every stage exposes two pure functions with *flat*
+positional signatures (so the AOT artifacts have a deterministic argument
+order the Rust runtime can follow):
+
+  stage_prefill(params..., x, seq_len)          -> (out, kv)
+  stage_decode (params..., x, kv, seq_lens)     -> (out, kv)
+
+* ``x`` is ``[1, S] int32`` tokens for stage 0 else ``[1, S, D]`` hidden
+  (prefill), ``[B] int32`` / ``[B, D]`` for decode.
+* ``kv`` is a single fused array ``[2, L, B, Smax, KH, hd]`` (``kv[0]``=K,
+  ``kv[1]``=V) — one artifact I/O tensor per stage instead of 2·L.
+  Prefill emits ``[2, L, 1, Smax, KH, hd]`` zero-padded past ``seq_len``.
+* ``out`` is the hidden state for stages 0..n-2, and ``[.., vocab]``
+  logits (last position only for prefill) for the last stage.
+
+Attention runs through the L1 Pallas kernels
+(:mod:`compile.kernels.attention`); ``reference_*`` twins use the pure-jnp
+oracles so tests can diff an entire stage against a kernel-free path.
+"""
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import attention as kernels
+from .kernels import ref as oracle
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def stage_param_spec(cfg: ModelConfig, stage: int) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list for one stage — the artifact ABI.
+
+    The Rust runtime feeds weights positionally in exactly this order; the
+    same list is serialized into ``manifest.json``.
+    """
+    d, f, kh, hd = cfg.d_model, cfg.ffn_dim, cfg.n_kv_heads, cfg.head_dim
+    spec: List[Tuple[str, Tuple[int, ...]]] = []
+    if stage == 0:
+        spec.append(("embed", (cfg.vocab_size, d)))
+    for layer in range(cfg.layers_per_stage):
+        p = f"layer{layer}."
+        spec += [
+            (p + "attn_norm", (d,)),
+            (p + "wq", (d, cfg.n_heads * hd)),
+            (p + "wk", (d, kh * hd)),
+            (p + "wv", (d, kh * hd)),
+            (p + "wo", (cfg.n_heads * hd, d)),
+            (p + "ffn_norm", (d,)),
+            (p + "w_gate", (d, f)),
+            (p + "w_up", (d, f)),
+            (p + "w_down", (f, d)),
+        ]
+    if stage == cfg.n_stages - 1:
+        spec.append(("final_norm", (d,)))
+        spec.append(("lm_head", (d, cfg.vocab_size)))
+    return spec
+
+
+def init_stage_params(cfg: ModelConfig, stage: int, seed: int = 0) -> List[jax.Array]:
+    """Seeded random init (substitute for real Llama weights — DESIGN.md §1)."""
+    spec = stage_param_spec(cfg, stage)
+    key = jax.random.PRNGKey(seed * 1000 + stage)
+    params = []
+    for i, (name, shape) in enumerate(spec):
+        k = jax.random.fold_in(key, i)
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            scale = 1.0 / (shape[0] ** 0.5)
+            params.append(jax.random.normal(k, shape, jnp.float32) * scale)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Layer pieces (jnp; attention dispatches to L1 kernel or oracle)
+# --------------------------------------------------------------------------
+
+def _rmsnorm(x, w, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _repeat_kv(x, groups: int):
+    """[..., KH, hd] -> [..., KH*groups, hd] (GQA broadcast)."""
+    if groups == 1:
+        return x
+    return jnp.repeat(x, groups, axis=-2)
+
+
+def _attention_prefill(cfg, lp, x, use_kernel):
+    """x: [S, D] -> (out [S, D], k [S, KH, hd], v [S, KH, hd])."""
+    s_len = x.shape[0]
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    xn = _rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q = (xn @ lp["wq"]).reshape(s_len, h, hd)
+    k = (xn @ lp["wk"]).reshape(s_len, kh, hd)
+    v = (xn @ lp["wv"]).reshape(s_len, kh, hd)
+    pos = jnp.arange(s_len)
+    q = oracle.rope_ref(q, pos, cfg.rope_theta)
+    k = oracle.rope_ref(k, pos, cfg.rope_theta)
+    kb = _repeat_kv(k, h // kh)
+    vb = _repeat_kv(v, h // kh)
+    if use_kernel:
+        attn = kernels.flash_prefill_attention(q, kb, vb)
+    else:
+        attn = oracle.prefill_attention_ref(q, kb, vb)
+    out = attn.reshape(s_len, h * hd) @ lp["wo"]
+    return x + out, k, v
+
+
+def _attention_decode(cfg, lp, x, k_cache, v_cache, seq_lens, use_kernel):
+    """x: [B, D]; caches [B, Smax, KH, hd] -> (out, k_cache', v_cache')."""
+    b = x.shape[0]
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    xn = _rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q = (xn @ lp["wq"]).reshape(b, h, hd)
+    k = (xn @ lp["wk"]).reshape(b, kh, hd)
+    v = (xn @ lp["wv"]).reshape(b, kh, hd)
+    q = oracle.rope_ref(q[:, None], seq_lens[:, None], cfg.rope_theta)[:, 0]
+    k = oracle.rope_ref(k[:, None], seq_lens[:, None], cfg.rope_theta)[:, 0]
+
+    # Write the new token's K/V at position seq_lens[b].
+    def write(cache, new):
+        def one(c, n, i):
+            return jax.lax.dynamic_update_slice(c, n[None], (i, 0, 0))
+        return jax.vmap(one)(cache, new, seq_lens)
+
+    k_cache = write(k_cache, k)
+    v_cache = write(v_cache, v)
+
+    kb = _repeat_kv(k_cache, h // kh)
+    vb = _repeat_kv(v_cache, h // kh)
+    if use_kernel:
+        attn = kernels.paged_decode_attention(
+            q, kb, vb, seq_lens, page_size=cfg.page_size)
+    else:
+        attn = oracle.decode_attention_ref(q, kb, vb, seq_lens)
+    out = attn.reshape(b, h * hd) @ lp["wo"]
+    return x + out, k_cache, v_cache
+
+
+def _mlp(cfg, lp, x):
+    xn = _rmsnorm(x, lp["ffn_norm"], cfg.norm_eps)
+    return x + (jax.nn.silu(xn @ lp["w_gate"]) * (xn @ lp["w_up"])) @ lp["w_down"]
+
+
+def _layer_params(cfg, stage, params):
+    """Slice the flat param list into per-layer dicts (+ extras)."""
+    spec = stage_param_spec(cfg, stage)
+    by_name = dict(zip((n for n, _ in spec), params))
+    layers = []
+    for layer in range(cfg.layers_per_stage):
+        p = f"layer{layer}."
+        layers.append({k[len(p):]: v for k, v in by_name.items() if k.startswith(p)})
+    return by_name, layers
+
+
+# --------------------------------------------------------------------------
+# Stage functions (flat ABI)
+# --------------------------------------------------------------------------
+
+def stage_prefill(cfg: ModelConfig, stage: int, params: List[jax.Array],
+                  x: jax.Array, seq_len: jax.Array, *, use_kernel: bool = True):
+    """Prefill one pipeline stage.
+
+    Args:
+      x: ``[1, S] int32`` tokens (stage 0) or ``[1, S, D] f32`` hidden.
+      seq_len: scalar int32 true prompt length (<= S bucket).
+
+    Returns:
+      (out, kv): out is ``[1, S, D]`` hidden, or ``[1, vocab]`` last-token
+      logits on the final stage; kv is ``[2, L, 1, Smax, KH, hd]``
+      (zero past position S — padded to cache capacity so the Rust side can
+      store it directly in the request's KV slot).
+    """
+    by_name, layers = _layer_params(cfg, stage, params)
+    s_bucket = x.shape[1]
+    if stage == 0:
+        h = by_name["embed"][x[0]]           # [S, D]
+    else:
+        h = x[0]
+    ks, vs = [], []
+    for lp in layers:
+        h, k, v = _attention_prefill(cfg, lp, h, use_kernel)
+        h = _mlp(cfg, lp, h)
+        ks.append(k)
+        vs.append(v)
+    k_stage = jnp.stack(ks)                   # [L, S, KH, hd]
+    v_stage = jnp.stack(vs)
+    pad = cfg.max_seq - s_bucket
+    k_stage = jnp.pad(k_stage, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v_stage = jnp.pad(v_stage, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kv = jnp.stack([k_stage, v_stage])[:, :, None]  # [2, L, 1, Smax, KH, hd]
+
+    if stage == cfg.n_stages - 1:
+        last = jax.lax.dynamic_index_in_dim(h, seq_len - 1, axis=0, keepdims=False)
+        logits = _rmsnorm(last, by_name["final_norm"], cfg.norm_eps) @ by_name["lm_head"]
+        return logits[None, :], kv
+    return h[None], kv
+
+
+def stage_decode(cfg: ModelConfig, stage: int, params: List[jax.Array],
+                 x: jax.Array, kv: jax.Array, seq_lens: jax.Array, *,
+                 use_kernel: bool = True):
+    """Decode one token for a batch through one pipeline stage.
+
+    Args:
+      x: ``[B] int32`` tokens (stage 0) or ``[B, D] f32`` hidden.
+      kv: ``[2, L, B, Smax, KH, hd]``.
+      seq_lens: ``[B] int32`` pre-append lengths (the new token's position).
+
+    Returns:
+      (out, kv'): out is ``[B, D]`` hidden or ``[B, vocab]`` logits; kv'
+      has the new token's K/V written at ``seq_lens[b]``.
+    """
+    by_name, layers = _layer_params(cfg, stage, params)
+    if stage == 0:
+        h = by_name["embed"][x]              # [B, D]
+    else:
+        h = x
+    new_k, new_v = [], []
+    for i, lp in enumerate(layers):
+        h, kc, vc = _attention_decode(
+            cfg, lp, h, kv[0, i], kv[1, i], seq_lens, use_kernel)
+        h = _mlp(cfg, lp, h)
+        new_k.append(kc)
+        new_v.append(vc)
+    kv_out = jnp.stack([jnp.stack(new_k), jnp.stack(new_v)])
+
+    if stage == cfg.n_stages - 1:
+        logits = _rmsnorm(h, by_name["final_norm"], cfg.norm_eps) @ by_name["lm_head"]
+        return logits, kv_out
+    return h, kv_out
+
+
+# --------------------------------------------------------------------------
+# Whole-model reference (tests + golden outputs for the Rust engine)
+# --------------------------------------------------------------------------
+
+def full_prefill(cfg, all_params, tokens, seq_len, *, use_kernel=False):
+    """Run all stages end-to-end. tokens: [1, S]. Returns (logits, [kv per stage])."""
+    x = tokens
+    kvs = []
+    for stage in range(cfg.n_stages):
+        x, kv = stage_prefill(cfg, stage, all_params[stage], x, seq_len,
+                              use_kernel=use_kernel)
+        kvs.append(kv)
+    return x, kvs
+
+
+def full_decode(cfg, all_params, tokens, kvs, seq_lens, *, use_kernel=False):
+    """tokens: [B]. kvs: per-stage [2,L,B,Smax,KH,hd]. Returns (logits, kvs')."""
+    x = tokens
+    out_kvs = []
+    for stage in range(cfg.n_stages):
+        x, kv = stage_decode(cfg, stage, all_params[stage], x, kvs[stage],
+                             seq_lens, use_kernel=use_kernel)
+        out_kvs.append(kv)
+    return x, out_kvs
+
+
+def greedy_generate(cfg, all_params, prompt_tokens, n_new, *, use_kernel=False):
+    """Reference greedy decoding used to produce golden outputs for the
+    Rust engine integration test. prompt_tokens: list[int]."""
+    s = len(prompt_tokens)
+    bucket = next(b for b in cfg.prefill_buckets if b >= s)
+    toks = jnp.zeros((1, bucket), jnp.int32).at[0, :s].set(jnp.array(prompt_tokens))
+    logits, kvs = full_prefill(cfg, all_params, toks, jnp.int32(s),
+                               use_kernel=use_kernel)
+    out = [int(jnp.argmax(logits[0]))]
+    seq_lens = jnp.array([s], jnp.int32)
+    for _ in range(n_new - 1):
+        tok = jnp.array([out[-1]], jnp.int32)
+        logits, kvs = full_decode(cfg, all_params, tok, kvs, seq_lens,
+                                  use_kernel=use_kernel)
+        out.append(int(jnp.argmax(logits[0])))
+        seq_lens = seq_lens + 1
+    return out

@@ -1,0 +1,79 @@
+"""AOT pipeline checks: lowering produces parseable HLO with the right ABI.
+
+These lower a *single* small artifact (not all 32) to keep pytest fast;
+the full set is produced by ``make artifacts`` and exercised by the Rust
+integration tests.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.config import TINY
+
+CFG = TINY
+
+
+def test_lower_prefill_hlo_text():
+    text = aot.to_hlo_text(aot.lower_prefill(CFG, 0, 16))
+    assert "ENTRY" in text and "HloModule" in text
+    # flat ABI: params + x + seq_len
+    n_args = len(M.stage_param_spec(CFG, 0)) + 2
+    assert f"parameter({n_args - 1})" in text
+    assert f"parameter({n_args})" not in text
+
+
+def test_lower_decode_hlo_text():
+    text = aot.to_hlo_text(aot.lower_decode(CFG, 1, 2))
+    n_args = len(M.stage_param_spec(CFG, 1)) + 3  # params + x + kv + seq_lens
+    assert f"parameter({n_args - 1})" in text
+    assert f"parameter({n_args})" not in text
+    # kv I/O tensor shape appears (f32[2,L,B,Smax,KH,hd])
+    kv = f"f32[2,{CFG.layers_per_stage},2,{CFG.max_seq},{CFG.n_kv_heads},{CFG.head_dim}]"
+    assert kv in text
+
+
+def test_weights_npz_roundtrip(tmp_path):
+    params = [M.init_stage_params(CFG, s) for s in range(CFG.n_stages)]
+    path = tmp_path / "weights.npz"
+    aot.save_weights_npz(CFG, params, path)
+    loaded = np.load(path)
+    spec0 = M.stage_param_spec(CFG, 0)
+    assert f"s0.{spec0[0][0]}" in loaded
+    total = sum(len(M.stage_param_spec(CFG, s)) for s in range(CFG.n_stages))
+    assert len(loaded.files) == total
+    np.testing.assert_array_equal(loaded["s0.embed"], np.asarray(params[0][0]))
+
+
+def test_goldens_structure():
+    params = [M.init_stage_params(CFG, s) for s in range(CFG.n_stages)]
+    g = aot.build_goldens(CFG, params)
+    assert len(g["greedy_tokens"]) == 8
+    assert g["prefill_bucket"] in CFG.prefill_buckets
+    assert all(0 <= t < CFG.vocab_size for t in g["greedy_tokens"])
+    assert np.isfinite(g["prefill_logits_first8"]).all()
+
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACT_DIR, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_built_manifest_consistent():
+    """If artifacts/ exists, its manifest must match the current ABI."""
+    with open(os.path.join(ARTIFACT_DIR, "manifest.json")) as f:
+        man = json.load(f)
+    cfg = man["config"]
+    assert cfg["n_stages"] * (len(cfg["prefill_buckets"]) + len(cfg["decode_buckets"])) \
+        == len(man["artifacts"])
+    for stage in range(cfg["n_stages"]):
+        spec = M.stage_param_spec(CFG, stage)
+        man_spec = man["param_spec"][str(stage)]
+        assert [s["name"] for s in man_spec] == [n for n, _ in spec]
+        assert [tuple(s["shape"]) for s in man_spec] == [tuple(s) for _, s in spec]
+    for a in man["artifacts"]:
+        assert os.path.exists(os.path.join(ARTIFACT_DIR, a["file"])), a["file"]

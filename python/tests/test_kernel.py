@@ -1,0 +1,175 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; fixed cases pin the exact configurations
+the AOT artifacts use. assert_allclose against ref.py is the core signal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------- prefill
+
+@pytest.mark.parametrize("s_len", [16, 32, 64, 128])
+@pytest.mark.parametrize("heads,hd", [(4, 32), (2, 16)])
+def test_prefill_artifact_shapes(s_len, heads, hd):
+    """The exact (bucket, head) shapes the AOT artifacts are built with."""
+    q, k, v = (_rand(i + s_len, (s_len, heads, hd), jnp.float32) for i in range(3))
+    out = A.flash_prefill_attention(q, k, v)
+    np.testing.assert_allclose(out, R.prefill_attention_ref(q, k, v),
+                               rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_q_blocks=st.integers(1, 4),
+    block=st.sampled_from([8, 16, 32]),
+    heads=st.integers(1, 4),
+    hd=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_prefill_hypothesis_sweep(n_q_blocks, block, heads, hd, seed):
+    s_len = n_q_blocks * block
+    q, k, v = (_rand(seed + i, (s_len, heads, hd), jnp.float32) for i in range(3))
+    out = A.flash_prefill_attention(q, k, v, block_q=block, block_k=block)
+    np.testing.assert_allclose(out, R.prefill_attention_ref(q, k, v),
+                               rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_prefill_mixed_block_sizes(seed):
+    """block_q != block_k exercises the off-diagonal causal masking."""
+    q, k, v = (_rand(seed + i, (64, 2, 32), jnp.float32) for i in range(3))
+    out = A.flash_prefill_attention(q, k, v, block_q=32, block_k=16)
+    np.testing.assert_allclose(out, R.prefill_attention_ref(q, k, v),
+                               rtol=RTOL, atol=ATOL)
+    out = A.flash_prefill_attention(q, k, v, block_q=16, block_k=32)
+    np.testing.assert_allclose(out, R.prefill_attention_ref(q, k, v),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_prefill_bfloat16():
+    """dtype sweep: bf16 inputs with f32 accumulation inside the kernel."""
+    q, k, v = (_rand(i, (32, 2, 32), jnp.bfloat16) for i in range(3))
+    out = A.flash_prefill_attention(q, k, v)
+    ref = R.prefill_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                                  v.astype(jnp.float32))
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, rtol=5e-2, atol=5e-2)
+
+
+def test_prefill_causality():
+    """Perturbing position j must not change outputs at positions < j."""
+    q, k, v = (_rand(i, (32, 2, 16), jnp.float32) for i in range(3))
+    base = A.flash_prefill_attention(q, k, v)
+    k2 = k.at[20].set(99.0)
+    v2 = v.at[20].set(-99.0)
+    pert = A.flash_prefill_attention(q, k2, v2)
+    np.testing.assert_allclose(base[:20], pert[:20], rtol=RTOL, atol=ATOL)
+    assert not np.allclose(base[20:], pert[20:], rtol=RTOL, atol=ATOL)
+
+
+def test_prefill_softmax_stability():
+    """Large-magnitude scores must not overflow the online softmax."""
+    q = jnp.full((16, 1, 16), 40.0, jnp.float32)
+    k = jnp.full((16, 1, 16), 40.0, jnp.float32)
+    v = _rand(7, (16, 1, 16), jnp.float32)
+    out = A.flash_prefill_attention(q, k, v)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(out, R.prefill_attention_ref(q, k, v),
+                               rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------- decode
+
+@pytest.mark.parametrize("batch", [1, 2, 4, 8])
+def test_decode_artifact_shapes(batch):
+    smax, heads, hd = 160, 4, 32
+    q = _rand(1, (batch, heads, hd), jnp.float32)
+    kc = _rand(2, (batch, smax, heads, hd), jnp.float32)
+    vc = _rand(3, (batch, smax, heads, hd), jnp.float32)
+    lens = jnp.arange(batch, dtype=jnp.int32) * 17 % smax
+    out = A.paged_decode_attention(q, kc, vc, lens, page_size=16)
+    np.testing.assert_allclose(out, R.decode_attention_ref(q, kc, vc, lens),
+                               rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 8),
+    n_pages=st.integers(1, 8),
+    page=st.sampled_from([8, 16]),
+    heads=st.integers(1, 4),
+    hd=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**16),
+    data=st.data(),
+)
+def test_decode_hypothesis_sweep(batch, n_pages, page, heads, hd, seed, data):
+    smax = n_pages * page
+    q = _rand(seed, (batch, heads, hd), jnp.float32)
+    kc = _rand(seed + 1, (batch, smax, heads, hd), jnp.float32)
+    vc = _rand(seed + 2, (batch, smax, heads, hd), jnp.float32)
+    lens = jnp.array(
+        data.draw(st.lists(st.integers(0, smax - 1), min_size=batch, max_size=batch)),
+        jnp.int32)
+    out = A.paged_decode_attention(q, kc, vc, lens, page_size=page)
+    np.testing.assert_allclose(out, R.decode_attention_ref(q, kc, vc, lens),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_decode_len_zero():
+    """seq_len=0: the new token attends only to itself (position 0)."""
+    q = _rand(0, (1, 2, 16), jnp.float32)
+    kc = _rand(1, (1, 32, 2, 16), jnp.float32)
+    vc = _rand(2, (1, 32, 2, 16), jnp.float32)
+    lens = jnp.array([0], jnp.int32)
+    out = A.paged_decode_attention(q, kc, vc, lens, page_size=16)
+    # attends exactly to position 0 -> output == v_cache[0, 0]
+    np.testing.assert_allclose(out[0], vc[0, 0], rtol=RTOL, atol=ATOL)
+
+
+def test_decode_masks_padding():
+    """Garbage (inf/nan-free but huge) KV past seq_len must not leak in."""
+    q = _rand(0, (2, 2, 16), jnp.float32)
+    kc = _rand(1, (2, 64, 2, 16), jnp.float32)
+    vc = _rand(2, (2, 64, 2, 16), jnp.float32)
+    lens = jnp.array([10, 33], jnp.int32)
+    base = A.paged_decode_attention(q, kc, vc, lens, page_size=16)
+    kidx = jnp.arange(64)[None, :, None, None]
+    poison_mask = kidx > lens[:, None, None, None]
+    kc2 = jnp.where(poison_mask, 1e4, kc)
+    vc2 = jnp.where(poison_mask, -1e4, vc)
+    pois = A.paged_decode_attention(q, kc2, vc2, lens, page_size=16)
+    np.testing.assert_allclose(base, pois, rtol=RTOL, atol=ATOL)
+
+
+def test_decode_matches_prefill_row():
+    """Decode of the (n+1)-th token == that row of a full prefill."""
+    s_len, heads, hd = 32, 2, 16
+    q = _rand(0, (s_len, heads, hd), jnp.float32)
+    k = _rand(1, (s_len, heads, hd), jnp.float32)
+    v = _rand(2, (s_len, heads, hd), jnp.float32)
+    full = R.prefill_attention_ref(q, k, v)
+    pos = 21
+    out = A.paged_decode_attention(
+        q[pos][None], k[None, :], v[None, :], jnp.array([pos], jnp.int32),
+        page_size=16)
+    # ref masks by seq_len so cache rows past pos are ignored
+    np.testing.assert_allclose(out[0], full[pos], rtol=RTOL, atol=ATOL)

@@ -1,0 +1,161 @@
+"""L2 model correctness: stage functions, kernel/oracle parity, KV contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.config import ModelConfig, TINY
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = TINY
+PARAMS = [M.init_stage_params(CFG, s) for s in range(CFG.n_stages)]
+
+# A second, GQA-flavoured config to exercise n_kv_heads < n_heads.
+GQA = ModelConfig(d_model=64, n_layers=4, n_heads=4, n_kv_heads=2,
+                  ffn_dim=128, n_stages=2, max_seq=64,
+                  prefill_buckets=(16, 32), decode_buckets=(1, 2))
+GQA_PARAMS = [M.init_stage_params(GQA, s, seed=3) for s in range(GQA.n_stages)]
+
+
+def _prompt(cfg, n, bucket):
+    toks = jnp.zeros((1, bucket), jnp.int32)
+    return toks.at[0, :n].set((jnp.arange(n) * 7 + 3) % cfg.vocab_size)
+
+
+# ------------------------------------------------------------ param spec
+
+def test_param_spec_stage_roles():
+    spec0 = [n for n, _ in M.stage_param_spec(CFG, 0)]
+    spec_last = [n for n, _ in M.stage_param_spec(CFG, CFG.n_stages - 1)]
+    spec_mid = [n for n, _ in M.stage_param_spec(CFG, 1)]
+    assert spec0[0] == "embed"
+    assert spec_last[-2:] == ["final_norm", "lm_head"]
+    assert "embed" not in spec_mid and "lm_head" not in spec_mid
+
+
+def test_param_spec_matches_init_shapes():
+    for stage in range(CFG.n_stages):
+        spec = M.stage_param_spec(CFG, stage)
+        params = M.init_stage_params(CFG, stage)
+        assert len(spec) == len(params)
+        for (name, shape), arr in zip(spec, params):
+            assert tuple(shape) == arr.shape, name
+
+
+def test_init_deterministic():
+    a = M.init_stage_params(CFG, 1, seed=5)
+    b = M.init_stage_params(CFG, 1, seed=5)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    c = M.init_stage_params(CFG, 1, seed=6)
+    assert not np.allclose(a[1], c[1])
+
+
+# ------------------------------------------------------- kernel parity
+
+@pytest.mark.parametrize("cfg,params", [(CFG, PARAMS), (GQA, GQA_PARAMS)],
+                         ids=["mha", "gqa"])
+def test_prefill_kernel_vs_oracle(cfg, params):
+    toks = _prompt(cfg, 9, cfg.prefill_buckets[0])
+    lk, kvk = M.full_prefill(cfg, params, toks, jnp.int32(9), use_kernel=True)
+    lr, kvr = M.full_prefill(cfg, params, toks, jnp.int32(9), use_kernel=False)
+    np.testing.assert_allclose(lk, lr, rtol=2e-4, atol=2e-4)
+    for a, b in zip(kvk, kvr):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("cfg,params", [(CFG, PARAMS), (GQA, GQA_PARAMS)],
+                         ids=["mha", "gqa"])
+def test_decode_kernel_vs_oracle(cfg, params):
+    toks = _prompt(cfg, 9, cfg.prefill_buckets[0])
+    _, kvs = M.full_prefill(cfg, params, toks, jnp.int32(9), use_kernel=False)
+    tok = jnp.array([5], jnp.int32)
+    seq = jnp.array([9], jnp.int32)
+    dk, kvk = M.full_decode(cfg, params, tok, kvs, seq, use_kernel=True)
+    dr, kvr = M.full_decode(cfg, params, tok, kvs, seq, use_kernel=False)
+    np.testing.assert_allclose(dk, dr, rtol=2e-4, atol=2e-4)
+    for a, b in zip(kvk, kvr):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------ KV-cache contract
+
+def test_prefill_kv_shape_and_padding():
+    toks = _prompt(CFG, 7, 16)
+    _, kv = M.stage_prefill(CFG, 0, PARAMS[0], toks, jnp.int32(7))
+    assert kv.shape == (2, CFG.layers_per_stage, 1, CFG.max_seq,
+                        CFG.n_kv_heads, CFG.head_dim)
+    # zero-padded past the bucket
+    np.testing.assert_array_equal(np.asarray(kv[:, :, :, 16:]), 0.0)
+
+
+def test_prefill_bucket_invariance():
+    """Same prompt in a larger bucket ⇒ same logits and same KV prefix."""
+    n = 7
+    l16, kv16 = M.full_prefill(CFG, PARAMS, _prompt(CFG, n, 16), jnp.int32(n))
+    l32, kv32 = M.full_prefill(CFG, PARAMS, _prompt(CFG, n, 32), jnp.int32(n))
+    np.testing.assert_allclose(l16, l32, rtol=1e-4, atol=1e-4)
+    for a, b in zip(kv16, kv32):
+        np.testing.assert_allclose(a[:, :, :, :n], b[:, :, :, :n],
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_decode_writes_only_current_position():
+    """Decode must write K/V at seq_lens[b] and leave the rest untouched."""
+    toks = _prompt(CFG, 7, 16)
+    _, kvs = M.full_prefill(CFG, PARAMS, toks, jnp.int32(7))
+    tok = jnp.array([5], jnp.int32)
+    seq = jnp.array([7], jnp.int32)
+    _, kvs2 = M.full_decode(CFG, PARAMS, tok, kvs, seq)
+    for before, after in zip(kvs, kvs2):
+        before, after = np.asarray(before), np.asarray(after)
+        np.testing.assert_array_equal(before[:, :, :, :7], after[:, :, :, :7])
+        np.testing.assert_array_equal(before[:, :, :, 8:], after[:, :, :, 8:])
+        assert not np.allclose(before[:, :, :, 7], after[:, :, :, 7])
+
+
+def test_decode_continuation_matches_prefill():
+    """Prefilling [p..p+k] must equal prefill(p) + k decode steps (teacher
+    forcing) — the fundamental KV-cache correctness property."""
+    full = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5]
+    n0 = 8
+    # path A: prefill all 11 tokens, read logits at position 10
+    la, _ = M.full_prefill(CFG, PARAMS, _prompt_list(full, 16), jnp.int32(len(full)))
+    # path B: prefill first 8, then 3 decode steps feeding the true tokens
+    lb, kvs = M.full_prefill(CFG, PARAMS, _prompt_list(full[:n0], 16), jnp.int32(n0))
+    seq = jnp.array([n0], jnp.int32)
+    for t in full[n0:]:
+        lb, kvs = M.full_decode(CFG, PARAMS, jnp.array([t], jnp.int32), kvs, seq)
+        seq = seq + 1
+    np.testing.assert_allclose(la, lb, rtol=5e-4, atol=5e-4)
+
+
+def _prompt_list(tokens, bucket):
+    toks = jnp.zeros((1, bucket), jnp.int32)
+    return toks.at[0, :len(tokens)].set(jnp.array(tokens, jnp.int32))
+
+
+def test_batch_decode_matches_individual():
+    """A batch-of-2 decode equals two batch-of-1 decodes (per-slot isolation
+    — the property the continuous batcher relies on)."""
+    p1, p2 = [3, 1, 4, 1, 5], [2, 7, 1, 8, 2, 8, 1]
+    _, kv1 = M.full_prefill(CFG, PARAMS, _prompt_list(p1, 16), jnp.int32(len(p1)))
+    _, kv2 = M.full_prefill(CFG, PARAMS, _prompt_list(p2, 16), jnp.int32(len(p2)))
+    kv_b = [jnp.concatenate([a, b], axis=2) for a, b in zip(kv1, kv2)]
+    toks = jnp.array([9, 4], jnp.int32)
+    lens = jnp.array([len(p1), len(p2)], jnp.int32)
+    lb, _ = M.full_decode(CFG, PARAMS, toks, kv_b, lens)
+    l1, _ = M.full_decode(CFG, PARAMS, toks[:1], kv1, lens[:1])
+    l2, _ = M.full_decode(CFG, PARAMS, toks[1:], kv2, lens[1:])
+    np.testing.assert_allclose(lb[0], l1[0], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(lb[1], l2[0], rtol=2e-4, atol=2e-4)
+
+
+def test_greedy_generate_deterministic():
+    gen1 = M.greedy_generate(CFG, PARAMS, [1, 2, 3, 4], 4)
+    gen2 = M.greedy_generate(CFG, PARAMS, [1, 2, 3, 4], 4)
+    assert gen1 == gen2
+    assert all(0 <= t < CFG.vocab_size for t in gen1)

@@ -1,0 +1,130 @@
+//! L3 hot-path micro-benchmarks (plain harness — criterion is not in the
+//! offline vendor set). Drives the §Perf pass in EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench hot_paths`
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use kevlarflow::config::{ClusterConfig, ExperimentConfig, FaultPolicy, NodeId};
+use kevlarflow::coordinator::router::{InstanceView, Router};
+use kevlarflow::coordinator::ReplicationPlanner;
+use kevlarflow::kvcache::NodeKv;
+use kevlarflow::metrics::rolling_series;
+use kevlarflow::sim::{ClusterSim, Event, EventQueue};
+use kevlarflow::workload::{generate_trace, Pcg32, WorkloadSpec};
+
+fn bench<F: FnMut() -> u64>(name: &str, iters: u64, mut f: F) {
+    // warmup
+    for _ in 0..iters.min(3) {
+        black_box(f());
+    }
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for _ in 0..iters {
+        acc = acc.wrapping_add(black_box(f()));
+    }
+    let dt = t0.elapsed();
+    let per = dt.as_nanos() as f64 / iters as f64;
+    let unit = if per > 1e6 {
+        format!("{:.2} ms", per / 1e6)
+    } else if per > 1e3 {
+        format!("{:.2} µs", per / 1e3)
+    } else {
+        format!("{per:.0} ns")
+    };
+    println!("{name:<44} {unit:>12}/iter   ({iters} iters, total {dt:.2?}, acc {acc})");
+}
+
+fn main() {
+    println!("== L3 hot paths ==");
+
+    // router decision
+    let views: Vec<InstanceView> = (0..4)
+        .map(|id| InstanceView { id, serving: id != 2, load: id * 3 })
+        .collect();
+    let mut router = Router::new();
+    bench("router::pick (4 instances, 1 down)", 2_000_000, || {
+        router.pick(black_box(&views)).unwrap() as u64
+    });
+
+    // kv block accounting: grow/free cycle
+    let mut kv = NodeKv::new(NodeId::new(0, 0), 8192, 16);
+    let mut id = 0u64;
+    bench("kvcache grow+free (37 blocks)", 300_000, || {
+        id += 1;
+        kv.grow_primary(id, 595).unwrap();
+        kv.free_primary(id).unwrap() as u64
+    });
+
+    // replica write + drop
+    let mut kv2 = NodeKv::new(NodeId::new(0, 0), 8192, 16);
+    bench("kvcache replica write+drop", 300_000, || {
+        kv2.write_replica(7, NodeId::new(1, 0), 595, 0.0);
+        kv2.drop_replica(7).map(|r| r.blocks as u64).unwrap_or(0)
+    });
+
+    // replication replanning (16-node degraded)
+    let c16 = ClusterConfig::paper_16node();
+    let mut planner = ReplicationPlanner::new(&c16);
+    let mut health = kevlarflow::coordinator::reroute::InstanceHealth::new(4);
+    health.dead.push(NodeId::new(0, 2));
+    health.donations.insert(NodeId::new(1, 2), 0);
+    bench("replication replan (16 nodes, degraded)", 100_000, || {
+        planner.replan(&c16, &health, &[]).len() as u64
+    });
+
+    // event queue throughput
+    bench("event queue push+pop (1k batch)", 5_000, || {
+        let mut q = EventQueue::new();
+        for i in 0..1000 {
+            q.push((i % 97) as f64, Event::Sample);
+        }
+        let mut n = 0u64;
+        while q.pop().is_some() {
+            n += 1;
+        }
+        n
+    });
+
+    // workload generation
+    let spec = WorkloadSpec::sharegpt_like();
+    bench("trace generation (1200s @ 8 RPS)", 200, || {
+        generate_trace(&spec, 8.0, 1200.0, 7).len() as u64
+    });
+
+    // rolling percentile series
+    let mut rng = Pcg32::new(1);
+    let samples: Vec<(f64, f64)> =
+        (0..20_000).map(|i| (i as f64 * 0.1, rng.uniform())).collect();
+    bench("rolling_series (20k samples)", 200, || {
+        rolling_series(&samples, 30.0, 15.0, 2000.0).len() as u64
+    });
+
+    println!("\n== end-to-end simulation throughput ==");
+    for (name, cfg) in [
+        (
+            "sim scene1 RPS2 standard (full run)",
+            kevlarflow::bench::scenario(1, 2.0, FaultPolicy::Standard),
+        ),
+        (
+            "sim scene1 RPS2 kevlarflow (full run)",
+            kevlarflow::bench::scenario(1, 2.0, FaultPolicy::KevlarFlow),
+        ),
+        (
+            "sim 16-node RPS12 healthy (full run)",
+            ExperimentConfig::new(ClusterConfig::paper_16node(), 12.0),
+        ),
+    ] {
+        let t0 = Instant::now();
+        let res = ClusterSim::new(cfg).run();
+        let dt = t0.elapsed();
+        println!(
+            "{name:<44} {:>9.2?}   {:>9} events  {:>6.2} Mev/s  ({} reqs)",
+            dt,
+            res.events_processed,
+            res.events_processed as f64 / dt.as_secs_f64() / 1e6,
+            res.recorder.records.len()
+        );
+    }
+}

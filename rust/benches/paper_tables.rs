@@ -1,0 +1,36 @@
+//! Regenerates EVERY table and figure of the paper's evaluation in one
+//! run (plain harness — see DESIGN.md §4 for the experiment → module
+//! map). Absolute numbers come from the calibrated simulator; the shape
+//! (who wins, by what factor, where the knees/crossovers fall) is the
+//! reproduction target.
+//!
+//! Run: `cargo bench --bench paper_tables`
+
+use std::time::Instant;
+
+use kevlarflow::bench;
+
+fn main() {
+    let t0 = Instant::now();
+    println!("# KevlarFlow — paper evaluation reproduction\n");
+
+    println!("## §4.1 baseline characterization (Fig 3, Fig 4, TPOT)");
+    bench::run_baseline_curves(false);
+
+    println!("\n## §4.2 performance under node failure (Fig 5 + Table 1)");
+    bench::run_table1(&[1, 2, 3], false);
+
+    println!("\n## §1/§4.2 rolling TTFT under failure (Fig 1 / Fig 6)");
+    bench::run_rolling_ttft(1, 2.0, false);
+
+    println!("\n## §4.2 rolling latency, saturated (Fig 7)");
+    bench::run_rolling_latency(3, 7.0, false);
+
+    println!("\n## §4.3 failure recovery time (Fig 8 + 20x MTTR)");
+    bench::run_recovery_times(false);
+
+    println!("\n## §4.4 runtime overhead of replication (Fig 9)");
+    bench::run_overhead(false);
+
+    println!("\nregenerated all tables+figures in {:.1?}", t0.elapsed());
+}

@@ -1,0 +1,245 @@
+//! Ranked communicators over a shared fabric, with epoch-based
+//! re-formation — the `MPI_Comm_connect` + `MPI_Intercomm_merge` analogue
+//! that makes KevlarFlow's decoupled initialization possible.
+//!
+//! Unlike `MPI_COMM_WORLD` (fixed at launch, §3.1 "Static Device
+//! Topology"), a [`Fabric`] can mint arbitrarily many communicator
+//! *epochs* at runtime. Re-forming a pipeline after a node failure is:
+//! allocate a new epoch, have the three survivors plus the donor `join`
+//! it, and route traffic over the new group — no process restart, no
+//! weight reload.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Communication failure modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommError {
+    /// The peer's endpoint no longer exists — the signal a dead node
+    /// produces mid-operation.
+    PeerGone,
+    NoSuchPort,
+    /// Sent to a rank not in the group.
+    BadRank,
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+impl std::error::Error for CommError {}
+
+/// A tagged point-to-point message.
+#[derive(Debug, Clone)]
+pub struct Message {
+    pub tag: u64,
+    pub from: usize,
+    pub payload: Vec<u8>,
+}
+
+impl Message {
+    pub fn user(tag: u64, payload: Vec<u8>) -> Self {
+        Self { tag, from: usize::MAX, payload }
+    }
+}
+
+type Mailboxes = HashMap<(u64, usize), Sender<Message>>;
+
+/// The shared routing table all communicators of a deployment use.
+#[derive(Clone, Default)]
+pub struct Fabric {
+    mailboxes: Arc<Mutex<Mailboxes>>,
+    next_epoch: Arc<AtomicU64>,
+}
+
+impl Fabric {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reserve a fresh communicator epoch (group id).
+    pub fn new_epoch(&self) -> u64 {
+        self.next_epoch.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Join epoch `epoch` as `rank` of `size`. Each rank must join exactly
+    /// once; the returned handle owns the rank's mailbox (dropping it
+    /// makes future sends to this rank fail with `PeerGone`).
+    pub fn join(&self, epoch: u64, rank: usize, size: usize) -> Communicator {
+        let (tx, rx) = mpsc::channel();
+        self.mailboxes.lock().unwrap().insert((epoch, rank), tx);
+        Communicator { fabric: self.clone(), epoch, rank, size, rx }
+    }
+
+    /// Convenience: create a complete group of `size` ranks at once
+    /// (the initial, non-decoupled formation path).
+    pub fn create_group(&self, size: usize) -> Vec<Communicator> {
+        let epoch = self.new_epoch();
+        (0..size).map(|rank| self.join(epoch, rank, size)).collect()
+    }
+
+    fn sender(&self, epoch: u64, rank: usize) -> Option<Sender<Message>> {
+        self.mailboxes.lock().unwrap().get(&(epoch, rank)).cloned()
+    }
+
+    /// Garbage-collect an entire epoch (group teardown).
+    pub fn retire_epoch(&self, epoch: u64) {
+        self.mailboxes.lock().unwrap().retain(|(e, _), _| *e != epoch);
+    }
+
+    /// Remove one rank's mailbox (fault injection / node death).
+    pub fn kill(&self, epoch: u64, rank: usize) {
+        self.mailboxes.lock().unwrap().remove(&(epoch, rank));
+    }
+}
+
+/// One rank's handle in one communicator epoch.
+pub struct Communicator {
+    fabric: Fabric,
+    pub epoch: u64,
+    pub rank: usize,
+    pub size: usize,
+    rx: Receiver<Message>,
+}
+
+impl Communicator {
+    pub fn send(&self, to: usize, tag: u64, payload: Vec<u8>) -> Result<(), CommError> {
+        if to >= self.size {
+            return Err(CommError::BadRank);
+        }
+        let tx = self.fabric.sender(self.epoch, to).ok_or(CommError::PeerGone)?;
+        tx.send(Message { tag, from: self.rank, payload })
+            .map_err(|_| CommError::PeerGone)
+    }
+
+    /// Blocking receive.
+    pub fn recv(&self) -> Result<Message, CommError> {
+        self.rx.recv().map_err(|_| CommError::PeerGone)
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> Result<Option<Message>, CommError> {
+        match self.rx.recv_timeout(d) {
+            Ok(m) => Ok(Some(m)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(CommError::PeerGone),
+        }
+    }
+
+    pub fn try_recv(&self) -> Option<Message> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Leave the group: removes this rank's mailbox so peers see
+    /// `PeerGone` (used by fault injection in tests).
+    pub fn leave(self) {
+        self.fabric.kill(self.epoch, self.rank);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_send_recv() {
+        let fabric = Fabric::new();
+        let comms = fabric.create_group(4);
+        comms[0].send(3, 7, b"fwd".to_vec()).unwrap();
+        let m = comms[3].recv().unwrap();
+        assert_eq!((m.tag, m.from, m.payload.as_slice()), (7, 0, b"fwd".as_slice()));
+    }
+
+    #[test]
+    fn bad_rank_rejected() {
+        let fabric = Fabric::new();
+        let comms = fabric.create_group(2);
+        assert_eq!(comms[0].send(5, 0, vec![]).unwrap_err(), CommError::BadRank);
+    }
+
+    #[test]
+    fn dead_rank_surfaces_peer_gone() {
+        let fabric = Fabric::new();
+        let mut comms = fabric.create_group(3);
+        let dead = comms.remove(1);
+        dead.leave(); // node (.,1) dies
+        assert_eq!(comms[0].send(1, 0, vec![]).unwrap_err(), CommError::PeerGone);
+    }
+
+    #[test]
+    fn epoch_reformation_after_failure() {
+        // The decoupled-init path: group of 4, rank 2 dies, survivors +
+        // donor form a NEW epoch and traffic flows again.
+        let fabric = Fabric::new();
+        let mut old = fabric.create_group(4);
+        old.remove(2).leave();
+
+        // survivors keep their stage order; donor takes stage 2
+        let epoch = fabric.new_epoch();
+        let fresh: Vec<Communicator> =
+            (0..4).map(|rank| fabric.join(epoch, rank, 4)).collect();
+        // pipeline hand-off over the new communicator
+        for s in 0..3 {
+            fresh[s].send(s + 1, 1, vec![s as u8]).unwrap();
+            let m = fresh[s + 1].recv().unwrap();
+            assert_eq!(m.payload, vec![s as u8]);
+        }
+        // old epoch unusable toward the dead rank, new one independent
+        assert_eq!(old[0].send(2, 0, vec![]).unwrap_err(), CommError::PeerGone);
+    }
+
+    #[test]
+    fn retire_epoch_clears_mailboxes() {
+        let fabric = Fabric::new();
+        let comms = fabric.create_group(2);
+        let epoch = comms[0].epoch;
+        fabric.retire_epoch(epoch);
+        assert_eq!(comms[0].send(1, 0, vec![]).unwrap_err(), CommError::PeerGone);
+    }
+
+    #[test]
+    fn epochs_do_not_cross_talk() {
+        let fabric = Fabric::new();
+        let g1 = fabric.create_group(2);
+        let g2 = fabric.create_group(2);
+        g1[0].send(1, 42, b"g1".to_vec()).unwrap();
+        g2[0].send(1, 43, b"g2".to_vec()).unwrap();
+        assert_eq!(g1[1].recv().unwrap().payload, b"g1");
+        assert_eq!(g2[1].recv().unwrap().payload, b"g2");
+        assert!(g1[1].try_recv().is_none());
+    }
+
+    #[test]
+    fn cross_thread_pipeline() {
+        // 4 rank threads forwarding a token down the pipeline and an ack
+        // back — the shape the real engine uses.
+        let fabric = Fabric::new();
+        let comms = fabric.create_group(4);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                std::thread::spawn(move || {
+                    if c.rank == 0 {
+                        c.send(1, 0, vec![10]).unwrap();
+                        c.recv().unwrap().payload[0]
+                    } else {
+                        let m = c.recv().unwrap();
+                        let v = m.payload[0] + 1;
+                        let next = (c.rank + 1) % c.size;
+                        c.send(next, 0, vec![v]).unwrap();
+                        if c.rank == c.size - 1 {
+                            0
+                        } else {
+                            0
+                        }
+                    }
+                })
+            })
+            .collect();
+        let results: Vec<u8> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(results[0], 13); // 10 +1 +1 +1 around the ring
+    }
+}

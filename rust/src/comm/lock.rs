@@ -1,0 +1,147 @@
+//! Distributed lock over the [`Store`] — serializes the ring-shaped KV
+//! replication scheme (§3.3: NCCL's blocking send/recv on a ring can
+//! deadlock; a store-backed lock imposes a global order).
+
+use std::time::Duration;
+
+use super::Store;
+
+/// A named distributed lock. Re-entrant acquisition is NOT supported;
+/// holders are identified by an owner token so a crashed holder's lock
+/// can be broken by the recovery path.
+#[derive(Clone)]
+pub struct DistLock {
+    store: Store,
+    key: String,
+    owner: String,
+}
+
+impl DistLock {
+    pub fn new(store: Store, name: &str, owner: &str) -> Self {
+        Self {
+            store,
+            key: format!("lock/{name}"),
+            owner: owner.to_string(),
+        }
+    }
+
+    /// Try to take the lock without blocking.
+    pub fn try_acquire(&self) -> bool {
+        self.store
+            .compare_exchange(&self.key, None, self.owner.as_bytes().to_vec())
+    }
+
+    /// Acquire with exponential backoff.
+    pub fn acquire(&self) {
+        let mut backoff = Duration::from_micros(50);
+        while !self.try_acquire() {
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(Duration::from_millis(5));
+        }
+    }
+
+    /// Release; returns false if we did not hold it (already broken).
+    pub fn release(&self) -> bool {
+        self.store
+            .compare_exchange(&self.key, Some(self.owner.as_bytes()), Vec::new())
+            && self.store.delete(&self.key)
+    }
+
+    /// Forcibly break a lock held by a (presumed dead) owner — invoked by
+    /// recovery when the failed node held the replication-ring lock.
+    pub fn break_owner(&self, dead_owner: &str) -> bool {
+        self.store
+            .compare_exchange(&self.key, Some(dead_owner.as_bytes()), Vec::new())
+            && self.store.delete(&self.key)
+    }
+
+    pub fn holder(&self) -> Option<String> {
+        self.store
+            .get(&self.key)
+            .map(|v| String::from_utf8_lossy(&v).into_owned())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn exclusive_acquire_release() {
+        let store = Store::new();
+        let a = DistLock::new(store.clone(), "ring", "node-a");
+        let b = DistLock::new(store.clone(), "ring", "node-b");
+        assert!(a.try_acquire());
+        assert!(!b.try_acquire());
+        assert_eq!(a.holder().unwrap(), "node-a");
+        assert!(a.release());
+        assert!(b.try_acquire());
+    }
+
+    #[test]
+    fn release_without_holding_is_false() {
+        let store = Store::new();
+        let a = DistLock::new(store.clone(), "x", "a");
+        let b = DistLock::new(store.clone(), "x", "b");
+        assert!(a.try_acquire());
+        assert!(!b.release());
+        assert!(a.holder().is_some());
+    }
+
+    #[test]
+    fn break_dead_owner() {
+        let store = Store::new();
+        let dead = DistLock::new(store.clone(), "ring", "node-0-2");
+        assert!(dead.try_acquire());
+        // node (0,2) dies while holding the ring lock; recovery breaks it
+        let recovery = DistLock::new(store.clone(), "ring", "recovery");
+        assert!(recovery.break_owner("node-0-2"));
+        assert!(recovery.try_acquire());
+    }
+
+    #[test]
+    fn acquire_blocks_then_succeeds() {
+        let store = Store::new();
+        let a = DistLock::new(store.clone(), "l", "a");
+        let b = DistLock::new(store.clone(), "l", "b");
+        a.acquire();
+        let b2 = b.clone();
+        let bh = thread::spawn(move || {
+            b2.acquire();
+            true
+        });
+        thread::sleep(Duration::from_millis(10));
+        assert!(!bh.is_finished());
+        a.release();
+        assert!(bh.join().unwrap());
+        assert_eq!(b.holder().unwrap(), "b");
+    }
+
+    #[test]
+    fn contended_lock_single_holder() {
+        let store = Store::new();
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let l = DistLock::new(store.clone(), "c", &format!("o{i}"));
+                let c = counter.clone();
+                thread::spawn(move || {
+                    for _ in 0..5 {
+                        l.acquire();
+                        let v = c.fetch_add(1, Ordering::SeqCst);
+                        assert_eq!(v, 0, "critical section must be exclusive");
+                        thread::yield_now();
+                        c.fetch_sub(1, Ordering::SeqCst);
+                        assert!(l.release());
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Message-passing substrate: the primitives KevlarFlow's decoupled
+//! initialization is built on.
+//!
+//! The paper ports TensorRT-LLM to MPICH specifically for
+//! `MPI_Open_port` / `MPI_Comm_connect` / `MPI_Intercomm_merge` (§3.3) and
+//! rendezvouses metadata through a PyTorch `TCPStore`. This module
+//! provides the same primitives with the same semantics over in-process
+//! async channels:
+//!
+//! * [`Store`] — the TCPStore analogue: an async KV store with blocking
+//!   `wait`, `compare_exchange`, and counters. Used for rendezvous and by
+//!   the [`DistLock`].
+//! * [`PortRegistry`] / [`open_port`]-style naming — a node publishes a
+//!   port name; peers `connect` to it and get a bidirectional [`Endpoint`].
+//! * [`Communicator`] — a ranked group built from endpoints. Supports
+//!   point-to-point `send`/`recv` and, crucially, [`Communicator::merge`]
+//!   (the `MPI_Intercomm_merge` analogue) so a degraded pipeline can
+//!   splice a donor node into a *new* communicator without restarting the
+//!   world — the mechanism behind the paper's 20× MTTR reduction.
+//! * [`DistLock`] — the distributed lock serializing the ring-shaped KV
+//!   replication scheme (§3.3: needed because NCCL send/recv pairs on a
+//!   ring can deadlock).
+//!
+//! Failure surfaces as `CommError::PeerGone` the moment a peer's endpoint
+//! is dropped — the same abrupt-connection-loss signal a dead node
+//! produces — which is what [`crate::coordinator::membership`] converts
+//! into failure detection.
+
+mod communicator;
+mod lock;
+mod port;
+mod store;
+
+pub use communicator::{CommError, Communicator, Fabric, Message};
+pub use lock::DistLock;
+pub use port::{Endpoint, PortRegistry};
+pub use store::Store;

@@ -1,0 +1,141 @@
+//! `MPI_Open_port` / `MPI_Comm_connect` analogues: named ports a node
+//! publishes, and bidirectional endpoints produced by connecting to them.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::communicator::{CommError, Message};
+
+/// One side of a bidirectional connection.
+pub struct Endpoint {
+    pub(crate) tx: Sender<Message>,
+    pub(crate) rx: Receiver<Message>,
+}
+
+impl Endpoint {
+    /// Build a connected endpoint pair (in-proc duplex).
+    pub fn pair() -> (Endpoint, Endpoint) {
+        let (tx_a, rx_b) = mpsc::channel();
+        let (tx_b, rx_a) = mpsc::channel();
+        (Endpoint { tx: tx_a, rx: rx_a }, Endpoint { tx: tx_b, rx: rx_b })
+    }
+
+    pub fn send(&self, msg: Message) -> Result<(), CommError> {
+        self.tx.send(msg).map_err(|_| CommError::PeerGone)
+    }
+
+    /// Blocking receive; `PeerGone` once the peer endpoint is dropped.
+    pub fn recv(&self) -> Result<Message, CommError> {
+        self.rx.recv().map_err(|_| CommError::PeerGone)
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> Result<Option<Message>, CommError> {
+        match self.rx.recv_timeout(d) {
+            Ok(m) => Ok(Some(m)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(CommError::PeerGone),
+        }
+    }
+
+    pub fn try_recv(&self) -> Result<Option<Message>, CommError> {
+        match self.rx.try_recv() {
+            Ok(m) => Ok(Some(m)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(CommError::PeerGone),
+        }
+    }
+}
+
+/// Registry of open ports — the naming service `MPI_Open_port` publishes
+/// into. A node opens a port; any peer can `connect` to the name and the
+/// listener `accept`s the resulting endpoint.
+#[derive(Clone, Default)]
+pub struct PortRegistry {
+    ports: Arc<Mutex<HashMap<String, Sender<Endpoint>>>>,
+}
+
+impl PortRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Open a named port; returns the acceptor stream.
+    pub fn open_port(&self, name: &str) -> Receiver<Endpoint> {
+        let (tx, rx) = mpsc::channel();
+        self.ports.lock().unwrap().insert(name.to_string(), tx);
+        rx
+    }
+
+    pub fn close_port(&self, name: &str) {
+        self.ports.lock().unwrap().remove(name);
+    }
+
+    /// Connect to a named port; the listener receives the paired endpoint.
+    pub fn connect(&self, name: &str) -> Result<Endpoint, CommError> {
+        let g = self.ports.lock().unwrap();
+        let tx = g.get(name).ok_or(CommError::NoSuchPort)?;
+        let (mine, theirs) = Endpoint::pair();
+        tx.send(theirs).map_err(|_| CommError::PeerGone)?;
+        Ok(mine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_connect_accept_roundtrip() {
+        let reg = PortRegistry::new();
+        let acceptor = reg.open_port("node-0-2");
+        let client = reg.connect("node-0-2").unwrap();
+        let server = acceptor.recv().unwrap();
+        client.send(Message::user(1, b"hello".to_vec())).unwrap();
+        let m = server.recv().unwrap();
+        assert_eq!(m.payload, b"hello");
+        server.send(Message::user(2, b"world".to_vec())).unwrap();
+        assert_eq!(client.recv().unwrap().payload, b"world");
+    }
+
+    #[test]
+    fn connect_unknown_port_fails() {
+        let reg = PortRegistry::new();
+        assert!(matches!(reg.connect("nope"), Err(CommError::NoSuchPort)));
+    }
+
+    #[test]
+    fn dropped_peer_surfaces_peer_gone() {
+        let reg = PortRegistry::new();
+        let acceptor = reg.open_port("p");
+        let client = reg.connect("p").unwrap();
+        let server = acceptor.recv().unwrap();
+        drop(server); // node dies
+        assert!(matches!(client.recv(), Err(CommError::PeerGone)));
+        assert!(client.send(Message::user(0, vec![])).is_err());
+    }
+
+    #[test]
+    fn closed_port_rejects_new_connections() {
+        let reg = PortRegistry::new();
+        let _acc = reg.open_port("p");
+        reg.close_port("p");
+        assert!(matches!(reg.connect("p"), Err(CommError::NoSuchPort)));
+    }
+
+    #[test]
+    fn recv_timeout_and_try_recv() {
+        let reg = PortRegistry::new();
+        let acceptor = reg.open_port("p");
+        let client = reg.connect("p").unwrap();
+        let server = acceptor.recv().unwrap();
+        assert!(client.try_recv().unwrap().is_none());
+        assert!(client
+            .recv_timeout(Duration::from_millis(10))
+            .unwrap()
+            .is_none());
+        server.send(Message::user(9, vec![1])).unwrap();
+        assert_eq!(client.try_recv().unwrap().unwrap().tag, 9);
+    }
+}

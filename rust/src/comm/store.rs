@@ -1,0 +1,189 @@
+//! The TCPStore analogue: a shared KV store with blocking waits
+//! (std `Mutex` + `Condvar`; usable from any node thread).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<String, Vec<u8>>,
+}
+
+/// Cloneable handle to a shared store. All nodes of a load-balancing
+/// group share one `Store` for rendezvous, membership epochs and the
+/// replication-ring lock (mirrors `torch.distributed.TCPStore` usage in
+/// the paper's implementation, §3.3).
+#[derive(Clone, Default)]
+pub struct Store {
+    inner: Arc<(Mutex<Inner>, Condvar)>,
+}
+
+impl Store {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, key: &str, value: impl Into<Vec<u8>>) {
+        let (m, cv) = &*self.inner;
+        m.lock().unwrap().map.insert(key.to_string(), value.into());
+        cv.notify_all();
+    }
+
+    pub fn get(&self, key: &str) -> Option<Vec<u8>> {
+        self.inner.0.lock().unwrap().map.get(key).cloned()
+    }
+
+    pub fn delete(&self, key: &str) -> bool {
+        let (m, cv) = &*self.inner;
+        let removed = m.lock().unwrap().map.remove(key).is_some();
+        if removed {
+            cv.notify_all();
+        }
+        removed
+    }
+
+    /// Block until `key` exists, then return its value.
+    pub fn wait(&self, key: &str) -> Vec<u8> {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        loop {
+            if let Some(v) = g.map.get(key) {
+                return v.clone();
+            }
+            g = cv.wait(g).unwrap();
+        }
+    }
+
+    /// Like [`Store::wait`] but gives up after `timeout`.
+    pub fn wait_timeout(&self, key: &str, timeout: Duration) -> Option<Vec<u8>> {
+        let (m, cv) = &*self.inner;
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = m.lock().unwrap();
+        loop {
+            if let Some(v) = g.map.get(key) {
+                return Some(v.clone());
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g2, _) = cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Atomically set `key` to `new` iff its current value is `current`
+    /// (`None` = must be absent). Returns true on success.
+    pub fn compare_exchange(
+        &self,
+        key: &str,
+        current: Option<&[u8]>,
+        new: impl Into<Vec<u8>>,
+    ) -> bool {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        let cur = g.map.get(key).map(|v| v.as_slice());
+        if cur == current {
+            g.map.insert(key.to_string(), new.into());
+            drop(g);
+            cv.notify_all();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Atomic counter add; returns the new value. Missing key counts as 0.
+    pub fn add(&self, key: &str, delta: i64) -> i64 {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        let cur = g
+            .map
+            .get(key)
+            .and_then(|v| std::str::from_utf8(v).ok())
+            .and_then(|s| s.parse::<i64>().ok())
+            .unwrap_or(0);
+        let new = cur + delta;
+        g.map.insert(key.to_string(), new.to_string().into_bytes());
+        drop(g);
+        cv.notify_all();
+        new
+    }
+
+    pub fn keys(&self) -> Vec<String> {
+        self.inner.0.lock().unwrap().map.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn set_get_delete() {
+        let s = Store::new();
+        assert!(s.get("k").is_none());
+        s.set("k", b"v".to_vec());
+        assert_eq!(s.get("k").unwrap(), b"v");
+        assert!(s.delete("k"));
+        assert!(!s.delete("k"));
+    }
+
+    #[test]
+    fn wait_blocks_until_set() {
+        let s = Store::new();
+        let s2 = s.clone();
+        let waiter = thread::spawn(move || s2.wait("late"));
+        thread::sleep(Duration::from_millis(20));
+        assert!(!waiter.is_finished());
+        s.set("late", b"x".to_vec());
+        assert_eq!(waiter.join().unwrap(), b"x");
+    }
+
+    #[test]
+    fn wait_timeout_expires() {
+        let s = Store::new();
+        assert!(s.wait_timeout("never", Duration::from_millis(30)).is_none());
+        s.set("now", b"y".to_vec());
+        assert_eq!(
+            s.wait_timeout("now", Duration::from_millis(30)).unwrap(),
+            b"y"
+        );
+    }
+
+    #[test]
+    fn compare_exchange_semantics() {
+        let s = Store::new();
+        assert!(s.compare_exchange("k", None, b"a".to_vec()));
+        assert!(!s.compare_exchange("k", None, b"b".to_vec()));
+        assert!(s.compare_exchange("k", Some(b"a"), b"b".to_vec()));
+        assert_eq!(s.get("k").unwrap(), b"b");
+    }
+
+    #[test]
+    fn counter_add() {
+        let s = Store::new();
+        assert_eq!(s.add("n", 2), 2);
+        assert_eq!(s.add("n", 3), 5);
+        assert_eq!(s.add("n", -5), 0);
+    }
+
+    #[test]
+    fn concurrent_cas_exactly_one_winner() {
+        let s = Store::new();
+        let handles: Vec<_> = (0..16u8)
+            .map(|i| {
+                let s = s.clone();
+                thread::spawn(move || s.compare_exchange("leader", None, vec![i]))
+            })
+            .collect();
+        let winners = handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .filter(|&w| w)
+            .count();
+        assert_eq!(winners, 1);
+    }
+}

@@ -1,0 +1,244 @@
+//! Parsed `artifacts/manifest.json` — the build-time contract between the
+//! Python AOT pipeline and this runtime (model config, per-stage parameter
+//! ABI, artifact table, golden test vectors).
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub seed: u64,
+    pub config: ManifestConfig,
+    /// Stage index → ordered parameter specs (the artifact ABI).
+    pub param_spec: HashMap<usize, Vec<ParamSpec>>,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub goldens: Goldens,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct ManifestConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub ffn_dim: usize,
+    pub n_stages: usize,
+    pub max_seq: usize,
+    pub page_size: usize,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_buckets: Vec<usize>,
+    pub head_dim: usize,
+    pub layers_per_stage: usize,
+    pub n_pages: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub stage: usize,
+    pub phase: String, // "prefill" | "decode"
+    pub bucket: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Goldens {
+    pub prompt: Vec<u32>,
+    pub prefill_bucket: usize,
+    pub greedy_tokens: Vec<u32>,
+    pub prefill_logits_first8: Vec<f32>,
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("manifest missing key '{key}'"))
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    req(j, key)?.as_usize().ok_or_else(|| anyhow!("'{key}' not a number"))
+}
+
+fn usize_vec(j: &Json, key: &str) -> Result<Vec<usize>> {
+    Ok(req(j, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'{key}' not an array"))?
+        .iter()
+        .filter_map(|x| x.as_usize())
+        .collect())
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let c = req(&j, "config")?;
+        let config = ManifestConfig {
+            vocab_size: usize_field(c, "vocab_size")?,
+            d_model: usize_field(c, "d_model")?,
+            n_layers: usize_field(c, "n_layers")?,
+            n_heads: usize_field(c, "n_heads")?,
+            n_kv_heads: usize_field(c, "n_kv_heads")?,
+            ffn_dim: usize_field(c, "ffn_dim")?,
+            n_stages: usize_field(c, "n_stages")?,
+            max_seq: usize_field(c, "max_seq")?,
+            page_size: usize_field(c, "page_size")?,
+            prefill_buckets: usize_vec(c, "prefill_buckets")?,
+            decode_buckets: usize_vec(c, "decode_buckets")?,
+            head_dim: usize_field(c, "head_dim")?,
+            layers_per_stage: usize_field(c, "layers_per_stage")?,
+            n_pages: usize_field(c, "n_pages")?,
+        };
+
+        let mut param_spec = HashMap::new();
+        for (k, v) in req(&j, "param_spec")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("param_spec not an object"))?
+        {
+            let stage: usize = k.parse().context("param_spec stage key")?;
+            let specs = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("param_spec[{k}] not an array"))?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: req(p, "name")?
+                            .as_str()
+                            .ok_or_else(|| anyhow!("param name"))?
+                            .to_string(),
+                        shape: p
+                            .get("shape")
+                            .and_then(|s| s.as_arr())
+                            .ok_or_else(|| anyhow!("param shape"))?
+                            .iter()
+                            .filter_map(|x| x.as_usize())
+                            .collect(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            param_spec.insert(stage, specs);
+        }
+
+        let artifacts = req(&j, "artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts not an array"))?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactEntry {
+                    file: req(a, "file")?.as_str().unwrap_or_default().to_string(),
+                    stage: usize_field(a, "stage")?,
+                    phase: req(a, "phase")?.as_str().unwrap_or_default().to_string(),
+                    bucket: usize_field(a, "bucket")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let g = req(&j, "goldens")?;
+        let u32s = |key: &str| -> Result<Vec<u32>> {
+            Ok(req(g, key)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("goldens.{key}"))?
+                .iter()
+                .filter_map(|x| x.as_u64().map(|v| v as u32))
+                .collect())
+        };
+        let goldens = Goldens {
+            prompt: u32s("prompt")?,
+            prefill_bucket: usize_field(g, "prefill_bucket")?,
+            greedy_tokens: u32s("greedy_tokens")?,
+            prefill_logits_first8: req(g, "prefill_logits_first8")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("goldens.logits"))?
+                .iter()
+                .filter_map(|x| x.as_f64().map(|v| v as f32))
+                .collect(),
+        };
+
+        Ok(Manifest {
+            preset: req(&j, "preset")?.as_str().unwrap_or_default().to_string(),
+            seed: req(&j, "seed")?.as_u64().unwrap_or(0),
+            config,
+            param_spec,
+            artifacts,
+            goldens,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Default artifact location: `./artifacts`, falling back to the
+    /// crate root so examples/tests work from any working directory.
+    pub fn load_default() -> Result<Self> {
+        if let Ok(m) = Self::load("artifacts") {
+            return Ok(m);
+        }
+        Self::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    pub fn params_for_stage(&self, stage: usize) -> &[ParamSpec] {
+        &self.param_spec[&stage]
+    }
+
+    pub fn artifact_path(&self, stage: usize, phase: &str, bucket: usize) -> Result<PathBuf> {
+        let e = self
+            .artifacts
+            .iter()
+            .find(|a| a.stage == stage && a.phase == phase && a.bucket == bucket)
+            .with_context(|| format!("no artifact stage{stage} {phase} bucket {bucket}"))?;
+        Ok(self.dir.join(&e.file))
+    }
+
+    /// Smallest prefill bucket that fits `len` tokens.
+    pub fn prefill_bucket_for(&self, len: usize) -> Option<usize> {
+        self.config.prefill_buckets.iter().copied().find(|&b| b >= len)
+    }
+
+    /// Smallest decode batch bucket that fits `batch` requests.
+    pub fn decode_bucket_for(&self, batch: usize) -> Option<usize> {
+        self.config.decode_buckets.iter().copied().find(|&b| b >= batch)
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join("weights.npz")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_and_query() {
+        let m = Manifest::load_default().expect("artifacts built");
+        assert_eq!(m.config.n_stages, 4);
+        assert_eq!(
+            m.artifacts.len(),
+            m.config.n_stages
+                * (m.config.prefill_buckets.len() + m.config.decode_buckets.len())
+        );
+        assert_eq!(m.prefill_bucket_for(7), Some(16));
+        assert_eq!(m.prefill_bucket_for(17), Some(32));
+        assert_eq!(m.prefill_bucket_for(10_000), None);
+        assert_eq!(m.decode_bucket_for(3), Some(4));
+        let p = m.artifact_path(0, "prefill", 16).unwrap();
+        assert!(p.exists(), "{p:?}");
+        assert!(m.weights_path().exists());
+        // stage 0 ABI starts with the embedding
+        assert_eq!(m.params_for_stage(0)[0].name, "embed");
+        assert_eq!(m.goldens.greedy_tokens.len(), 8);
+    }
+}

@@ -1,0 +1,156 @@
+//! Heartbeat-based membership and failure detection.
+//!
+//! Every node heartbeats into the membership table (via the gRPC-analogue
+//! endpoints in the real engine, or directly in the sim). A node missing
+//! `misses` consecutive intervals is declared failed; declaration time is
+//! what the recovery timeline (Fig 8) starts from.
+
+use std::collections::HashMap;
+
+use crate::config::NodeId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeHealth {
+    Alive,
+    /// Declared dead at the contained time.
+    Failed,
+}
+
+#[derive(Debug, Clone)]
+struct NodeEntry {
+    last_heartbeat_s: f64,
+    health: NodeHealth,
+}
+
+/// Failure detector over periodic heartbeats.
+#[derive(Debug, Clone)]
+pub struct Membership {
+    interval_s: f64,
+    misses: u32,
+    nodes: HashMap<NodeId, NodeEntry>,
+}
+
+impl Membership {
+    pub fn new(interval_s: f64, misses: u32, nodes: impl IntoIterator<Item = NodeId>) -> Self {
+        let entries = nodes
+            .into_iter()
+            .map(|n| {
+                (n, NodeEntry { last_heartbeat_s: 0.0, health: NodeHealth::Alive })
+            })
+            .collect();
+        Self { interval_s, misses, nodes: entries }
+    }
+
+    /// Deadline after which a silent node is declared failed.
+    pub fn timeout_s(&self) -> f64 {
+        self.interval_s * self.misses as f64
+    }
+
+    pub fn heartbeat(&mut self, node: NodeId, now_s: f64) {
+        if let Some(e) = self.nodes.get_mut(&node) {
+            if e.health == NodeHealth::Alive {
+                e.last_heartbeat_s = now_s;
+            }
+        }
+    }
+
+    /// Scan for newly-failed nodes; returns those declared this call.
+    pub fn check(&mut self, now_s: f64) -> Vec<NodeId> {
+        let timeout = self.timeout_s();
+        let mut newly = Vec::new();
+        for (&n, e) in self.nodes.iter_mut() {
+            if e.health == NodeHealth::Alive && now_s - e.last_heartbeat_s > timeout {
+                e.health = NodeHealth::Failed;
+                newly.push(n);
+            }
+        }
+        newly.sort();
+        newly
+    }
+
+    pub fn health(&self, node: NodeId) -> Option<NodeHealth> {
+        self.nodes.get(&node).map(|e| e.health)
+    }
+
+    /// A replacement node came up for `node`'s slot: mark alive again.
+    pub fn revive(&mut self, node: NodeId, now_s: f64) {
+        if let Some(e) = self.nodes.get_mut(&node) {
+            e.health = NodeHealth::Alive;
+            e.last_heartbeat_s = now_s;
+        }
+    }
+
+    pub fn alive_nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.nodes
+            .iter()
+            .filter(|(_, e)| e.health == NodeHealth::Alive)
+            .map(|(&n, _)| n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> Membership {
+        let nodes = (0..2).flat_map(|i| (0..4).map(move |s| NodeId::new(i, s)));
+        Membership::new(1.0, 3, nodes)
+    }
+
+    #[test]
+    fn healthy_nodes_not_declared() {
+        let mut m = mk();
+        for t in 1..10 {
+            for i in 0..2 {
+                for s in 0..4 {
+                    m.heartbeat(NodeId::new(i, s), t as f64);
+                }
+            }
+            assert!(m.check(t as f64).is_empty());
+        }
+    }
+
+    #[test]
+    fn silent_node_declared_after_timeout() {
+        let mut m = mk();
+        let dead = NodeId::new(0, 2);
+        // everyone beats at t=1..8 except (0,2) which stops after t=2
+        for t in 1..=8 {
+            for i in 0..2 {
+                for s in 0..4 {
+                    let n = NodeId::new(i, s);
+                    if n != dead || t <= 2 {
+                        m.heartbeat(n, t as f64);
+                    }
+                }
+            }
+        }
+        // timeout = 3s; last beat at t=2 ⇒ declared when now > 5
+        assert!(m.check(4.9).is_empty());
+        assert_eq!(m.check(5.1), vec![dead]);
+        assert_eq!(m.health(dead), Some(NodeHealth::Failed));
+        // not re-declared
+        assert!(m.check(6.0).is_empty());
+    }
+
+    #[test]
+    fn failed_node_heartbeats_ignored_until_revive() {
+        let mut m = mk();
+        let n = NodeId::new(1, 1);
+        m.heartbeat(n, 1.0);
+        assert_eq!(m.check(10.0).len(), 8); // everyone else silent too
+        m.heartbeat(n, 11.0); // zombie beat — ignored
+        assert_eq!(m.health(n), Some(NodeHealth::Failed));
+        m.revive(n, 12.0);
+        assert_eq!(m.health(n), Some(NodeHealth::Alive));
+        assert!(m.check(12.5).is_empty());
+    }
+
+    #[test]
+    fn detection_latency_matches_config() {
+        let m = Membership::new(1.0, 3, []);
+        assert_eq!(m.timeout_s(), 3.0);
+        let m = Membership::new(0.5, 4, []);
+        assert_eq!(m.timeout_s(), 2.0);
+    }
+}

@@ -1,0 +1,32 @@
+//! The KevlarFlow coordinator — the paper's system contribution.
+//!
+//! This module holds the *policy* layer: every decision the serving
+//! system makes about routing, membership, failure handling, replication
+//! targeting and recovery sequencing. Policies are pure state machines so
+//! the discrete-event simulator ([`crate::sim`]) and the real engine
+//! ([`crate::engine`]) drive the exact same logic — the figures in the
+//! paper are properties of these policies plus a timing model, not of
+//! CUDA (see DESIGN.md §1).
+//!
+//! Mechanism map (paper §3.2 → modules):
+//!
+//! | Paper mechanism | Module |
+//! |---|---|
+//! | Load-balancing group, even distribution | [`router`] |
+//! | Heartbeat failure detection | [`membership`] |
+//! | Dynamic traffic rerouting / partial availability | [`reroute`] |
+//! | Background block-wise KV replication (ring) | [`replication`] |
+//! | Decoupled-init recovery (donor splice, 30 s MTTR) | [`recovery`] |
+//! | Standard-vs-KevlarFlow fault semantics | [`crate::config::FaultPolicy`] |
+
+pub mod membership;
+pub mod recovery;
+pub mod replication;
+pub mod reroute;
+pub mod router;
+
+pub use membership::Membership;
+pub use recovery::{RecoveryManager, RecoveryPhase, RecoveryPlan};
+pub use replication::ReplicationPlanner;
+pub use reroute::{select_donor, InstanceHealth, PipelineState};
+pub use router::Router;

@@ -1,0 +1,203 @@
+//! Background KV-cache replication planning (paper §3.2, Fig 2a).
+//!
+//! Replication is ring-shaped across the load-balancing group: node
+//! `(i, s)` streams its KV blocks to `((i+1) mod n, s)` — the node that
+//! holds the same stage shard and can therefore resume the request's
+//! stage-`s` state directly. In a degraded cluster the ring is re-planned
+//! to exclude failed nodes *and* nodes participating in rerouting (the
+//! donor already carries two pipelines' primary KV; adding replica
+//! traffic would eat the headroom rerouting depends on).
+
+use std::collections::HashMap;
+
+use crate::config::{ClusterConfig, NodeId};
+
+use super::reroute::InstanceHealth;
+
+/// Plans and tracks replication targets for every node.
+#[derive(Debug, Clone, Default)]
+pub struct ReplicationPlanner {
+    /// node → current replication target (None = replication suspended
+    /// for this node).
+    targets: HashMap<NodeId, Option<NodeId>>,
+}
+
+impl ReplicationPlanner {
+    pub fn new(cluster: &ClusterConfig) -> Self {
+        let mut p = Self::default();
+        let health = InstanceHealth::new(cluster.n_instances);
+        p.replan(cluster, &health, &[]);
+        p
+    }
+
+    pub fn target(&self, node: NodeId) -> Option<NodeId> {
+        self.targets.get(&node).copied().flatten()
+    }
+
+    /// All (source → target) edges currently active.
+    pub fn edges(&self) -> impl Iterator<Item = (NodeId, NodeId)> + '_ {
+        self.targets
+            .iter()
+            .filter_map(|(&s, &t)| t.map(|t| (s, t)))
+    }
+
+    /// Nodes excluded from the ring: dead nodes, donors, and every node
+    /// of a non-serving (recovering/down) pipeline. The paper's example:
+    /// after (0,2) fails with donor (1,2), nodes (0,2) and (1,2) leave
+    /// the ring and their neighbours re-target around them.
+    fn excluded(&self, cluster: &ClusterConfig, health: &InstanceHealth) -> Vec<NodeId> {
+        let mut ex: Vec<NodeId> = health.dead.clone();
+        ex.extend(health.donations.keys().copied());
+        for (i, st) in health.states.iter().enumerate() {
+            if !st.serving() {
+                ex.extend((0..cluster.n_stages).map(|s| NodeId::new(i, s)));
+            }
+        }
+        ex.sort();
+        ex.dedup();
+        ex
+    }
+
+    /// Recompute the ring for the current health view. Returns the nodes
+    /// whose target changed (their pending replica state must restart).
+    pub fn replan(
+        &mut self,
+        cluster: &ClusterConfig,
+        health: &InstanceHealth,
+        _hint_changed: &[NodeId],
+    ) -> Vec<NodeId> {
+        let excluded = self.excluded(cluster, health);
+        let mut changed = Vec::new();
+        for s in 0..cluster.n_stages {
+            // ring participants for this stage, in instance order
+            let ring: Vec<NodeId> = (0..cluster.n_instances)
+                .map(|i| NodeId::new(i, s))
+                .filter(|n| !excluded.contains(n))
+                .collect();
+            for i in 0..cluster.n_instances {
+                let node = NodeId::new(i, s);
+                let new_target = if excluded.contains(&node) || ring.len() < 2 {
+                    None
+                } else {
+                    let pos = ring.iter().position(|&n| n == node).unwrap();
+                    Some(ring[(pos + 1) % ring.len()])
+                };
+                let old = self.targets.insert(node, new_target);
+                if old.flatten() != new_target {
+                    changed.push(node);
+                }
+            }
+        }
+        changed
+    }
+}
+
+/// Per-request replication progress on the source side. The sim and the
+/// engine advance `generated` every decode step and call `flush` on the
+/// replication cadence; `synced` is what survives a failover.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplicaProgress {
+    pub generated: u32,
+    pub synced: u32,
+}
+
+impl ReplicaProgress {
+    /// Tokens that would need recomputation if the source died now.
+    pub fn lag(&self) -> u32 {
+        self.generated - self.synced
+    }
+    pub fn flush(&mut self) {
+        self.synced = self.generated;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::reroute::PipelineState;
+
+    #[test]
+    fn healthy_ring_is_next_instance_same_stage() {
+        let c = ClusterConfig::paper_16node();
+        let p = ReplicationPlanner::new(&c);
+        assert_eq!(p.target(NodeId::new(0, 2)), Some(NodeId::new(1, 2)));
+        assert_eq!(p.target(NodeId::new(3, 2)), Some(NodeId::new(0, 2)));
+        assert_eq!(p.target(NodeId::new(1, 0)), Some(NodeId::new(2, 0)));
+        // every serving node has a target; edges = n_nodes
+        assert_eq!(p.edges().count(), 16);
+    }
+
+    #[test]
+    fn degraded_ring_excludes_failed_and_donor() {
+        // Paper Fig 2b: (0,2) fails, donor (1,2). Nodes (0,2) and (1,2)
+        // leave the stage-2 ring; (3,2)'s target skips to... ring is
+        // [ (2,2), (3,2) ] so (3,2)→(2,2) and (2,2)→(3,2).
+        let c = ClusterConfig::paper_16node();
+        let mut p = ReplicationPlanner::new(&c);
+        let mut h = InstanceHealth::new(4);
+        h.dead.push(NodeId::new(0, 2));
+        h.donations.insert(NodeId::new(1, 2), 0);
+        h.states[0] = PipelineState::Degraded { failed_stage: 2, donor: NodeId::new(1, 2) };
+        let changed = p.replan(&c, &h, &[]);
+        assert_eq!(p.target(NodeId::new(0, 2)), None);
+        assert_eq!(p.target(NodeId::new(1, 2)), None);
+        assert_eq!(p.target(NodeId::new(2, 2)), Some(NodeId::new(3, 2)));
+        assert_eq!(p.target(NodeId::new(3, 2)), Some(NodeId::new(2, 2)));
+        // instance 0 still serves (degraded) ⇒ its healthy stages stay in
+        // their rings
+        assert_eq!(p.target(NodeId::new(0, 0)), Some(NodeId::new(1, 0)));
+        assert!(changed.contains(&NodeId::new(3, 2)));
+    }
+
+    #[test]
+    fn down_pipeline_fully_excluded() {
+        let c = ClusterConfig::paper_8node();
+        let mut p = ReplicationPlanner::new(&c);
+        let mut h = InstanceHealth::new(2);
+        h.states[0] = PipelineState::Down { until_s: 500.0 };
+        h.dead.push(NodeId::new(0, 1));
+        p.replan(&c, &h, &[]);
+        // only instance 1 remains per stage ⇒ ring of 1 ⇒ no replication
+        for s in 0..4 {
+            assert_eq!(p.target(NodeId::new(0, s)), None);
+            assert_eq!(p.target(NodeId::new(1, s)), None);
+        }
+    }
+
+    #[test]
+    fn replan_back_to_health_restores_full_ring() {
+        let c = ClusterConfig::paper_16node();
+        let mut p = ReplicationPlanner::new(&c);
+        let mut h = InstanceHealth::new(4);
+        h.dead.push(NodeId::new(2, 1));
+        h.states[2] = PipelineState::Recovering { failed_stage: 1, since_s: 0.0 };
+        p.replan(&c, &h, &[]);
+        assert_eq!(p.target(NodeId::new(2, 0)), None); // whole pipeline out
+        // replacement arrives
+        let h2 = InstanceHealth::new(4);
+        p.replan(&c, &h2, &[]);
+        assert_eq!(p.edges().count(), 16);
+        assert_eq!(p.target(NodeId::new(1, 1)), Some(NodeId::new(2, 1)));
+    }
+
+    #[test]
+    fn no_self_replication() {
+        let c = ClusterConfig::paper_16node();
+        let p = ReplicationPlanner::new(&c);
+        for (s, t) in p.edges() {
+            assert_ne!(s, t);
+            assert_eq!(s.stage, t.stage, "replica must land on same shard");
+        }
+    }
+
+    #[test]
+    fn progress_lag_and_flush() {
+        let mut pr = ReplicaProgress::default();
+        pr.generated = 20;
+        pr.synced = 16;
+        assert_eq!(pr.lag(), 4);
+        pr.flush();
+        assert_eq!(pr.lag(), 0);
+        assert_eq!(pr.synced, 20);
+    }
+}

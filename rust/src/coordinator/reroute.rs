@@ -1,0 +1,160 @@
+//! Dynamic traffic rerouting: pipeline availability states and donor
+//! selection for partially-failed pipelines (paper §3.2, Fig 2b).
+//!
+//! When node `(i, s)` dies, the other three nodes of instance `i` are
+//! healthy but useless under standard fault behavior. KevlarFlow instead
+//! finds a *donor*: a healthy node holding the same stage-`s` weight
+//! shard in a sibling instance, splices it into a new communicator, and
+//! routes instance `i`'s traffic through it — so the LB group loses one
+//! node's worth of capacity, not one pipeline's.
+
+use std::collections::HashMap;
+
+use crate::config::{ClusterConfig, NodeId};
+
+/// Availability state of one pipeline instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PipelineState {
+    /// All own nodes healthy, serving normally.
+    Active,
+    /// A node just failed; requests frozen, recovery in flight.
+    Recovering { failed_stage: usize, since_s: f64 },
+    /// Serving through a donor node (KevlarFlow degraded mode).
+    Degraded { failed_stage: usize, donor: NodeId },
+    /// Out of the LB group until full re-provision completes.
+    Down { until_s: f64 },
+}
+
+impl PipelineState {
+    /// Accepting new traffic?
+    pub fn serving(&self) -> bool {
+        matches!(self, PipelineState::Active | PipelineState::Degraded { .. })
+    }
+}
+
+/// Coordinator-wide health view used for donor selection.
+#[derive(Debug, Clone)]
+pub struct InstanceHealth {
+    pub states: Vec<PipelineState>,
+    /// Nodes currently dead (awaiting replacement).
+    pub dead: Vec<NodeId>,
+    /// donor node → instance it is donating to.
+    pub donations: HashMap<NodeId, usize>,
+}
+
+impl InstanceHealth {
+    pub fn new(n_instances: usize) -> Self {
+        Self {
+            states: vec![PipelineState::Active; n_instances],
+            dead: Vec::new(),
+            donations: HashMap::new(),
+        }
+    }
+
+    pub fn is_dead(&self, node: NodeId) -> bool {
+        self.dead.contains(&node)
+    }
+
+    /// Is this node currently pulling double duty for another pipeline?
+    pub fn is_donor(&self, node: NodeId) -> bool {
+        self.donations.contains_key(&node)
+    }
+}
+
+/// Choose a donor node for failed node `failed`.
+///
+/// Eligibility: the same-stage node of a *different* instance that is
+/// (a) alive, (b) part of an `Active` pipeline — a degraded or down
+/// pipeline has no headroom to lend — and (c) not already donating.
+/// Among candidates, prefer the one closest (lowest WAN latency) to the
+/// degraded pipeline's datacenter: rerouted hand-offs cross that link
+/// twice per pass.
+pub fn select_donor(
+    cluster: &ClusterConfig,
+    health: &InstanceHealth,
+    failed: NodeId,
+) -> Option<NodeId> {
+    let mut best: Option<(f64, NodeId)> = None;
+    for j in 0..cluster.n_instances {
+        if j == failed.instance {
+            continue;
+        }
+        if health.states[j] != PipelineState::Active {
+            continue;
+        }
+        let cand = NodeId::new(j, failed.stage);
+        if health.is_dead(cand) || health.is_donor(cand) {
+            continue;
+        }
+        let dist = cluster.latency_ms(cand, failed);
+        if best.map_or(true, |(d, _)| dist < d) {
+            best = Some((dist, cand));
+        }
+    }
+    best.map(|(_, n)| n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_same_stage_sibling() {
+        let c = ClusterConfig::paper_16node();
+        let h = InstanceHealth::new(4);
+        let failed = NodeId::new(0, 2);
+        let donor = select_donor(&c, &h, failed).unwrap();
+        assert_eq!(donor.stage, 2);
+        assert_ne!(donor.instance, 0);
+    }
+
+    #[test]
+    fn prefers_closest_dc() {
+        let c = ClusterConfig::paper_16node();
+        let h = InstanceHealth::new(4);
+        // instance 0 is DC0 (east); nearest sibling DC is DC1 (12ms) vs
+        // DC2 (32ms), DC3 (15ms) ⇒ donor from instance 1.
+        let donor = select_donor(&c, &h, NodeId::new(0, 2)).unwrap();
+        assert_eq!(donor, NodeId::new(1, 2));
+    }
+
+    #[test]
+    fn skips_busy_and_dead_candidates() {
+        let c = ClusterConfig::paper_16node();
+        let mut h = InstanceHealth::new(4);
+        h.donations.insert(NodeId::new(1, 2), 3); // already donating
+        h.dead.push(NodeId::new(3, 2)); // dead
+        let donor = select_donor(&c, &h, NodeId::new(0, 2)).unwrap();
+        assert_eq!(donor, NodeId::new(2, 2));
+    }
+
+    #[test]
+    fn skips_degraded_pipelines() {
+        let c = ClusterConfig::paper_16node();
+        let mut h = InstanceHealth::new(4);
+        h.states[1] = PipelineState::Degraded { failed_stage: 0, donor: NodeId::new(2, 0) };
+        h.states[2] = PipelineState::Down { until_s: 100.0 };
+        let donor = select_donor(&c, &h, NodeId::new(0, 2)).unwrap();
+        assert_eq!(donor.instance, 3);
+    }
+
+    #[test]
+    fn none_when_no_candidate() {
+        let c = ClusterConfig::paper_8node();
+        let mut h = InstanceHealth::new(2);
+        h.states[1] = PipelineState::Down { until_s: 100.0 };
+        assert_eq!(select_donor(&c, &h, NodeId::new(0, 1)), None);
+    }
+
+    #[test]
+    fn serving_predicate() {
+        assert!(PipelineState::Active.serving());
+        assert!(PipelineState::Degraded {
+            failed_stage: 1,
+            donor: NodeId::new(1, 1)
+        }
+        .serving());
+        assert!(!PipelineState::Recovering { failed_stage: 1, since_s: 0.0 }.serving());
+        assert!(!PipelineState::Down { until_s: 1.0 }.serving());
+    }
+}

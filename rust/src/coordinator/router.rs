@@ -1,0 +1,130 @@
+//! Front-end request router over the load-balancing group.
+//!
+//! The paper's testbed "distributes requests evenly across all instances
+//! in the load balancing group" (§4); the router is therefore round-robin
+//! over *serving-capable* instances. What changes between fault policies
+//! is the eligibility set: under standard fault behavior a degraded
+//! pipeline leaves the group entirely, under KevlarFlow it stays
+//! eligible the moment rerouting restores it.
+
+/// Router-visible instance state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstanceView {
+    pub id: usize,
+    /// Accepting new requests right now.
+    pub serving: bool,
+    /// Outstanding work (running + queued requests) — used by the
+    /// least-loaded tiebreak when draining a backlog after recovery.
+    pub load: usize,
+}
+
+/// Round-robin router with failure-aware eligibility.
+#[derive(Debug, Clone, Default)]
+pub struct Router {
+    cursor: usize,
+    pub routed: u64,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pick the next instance for a request, round-robin over serving
+    /// instances. Returns `None` when nothing can serve (total outage) —
+    /// the caller queues at the front door.
+    pub fn pick(&mut self, instances: &[InstanceView]) -> Option<usize> {
+        if instances.is_empty() {
+            return None;
+        }
+        let n = instances.len();
+        for off in 0..n {
+            let idx = (self.cursor + off) % n;
+            if instances[idx].serving {
+                self.cursor = (idx + 1) % n;
+                self.routed += 1;
+                return Some(instances[idx].id);
+            }
+        }
+        None
+    }
+
+    /// Least-loaded pick — used when re-dispatching a retried/migrated
+    /// backlog so it does not dogpile one instance.
+    pub fn pick_least_loaded(&mut self, instances: &[InstanceView]) -> Option<usize> {
+        let best = instances
+            .iter()
+            .filter(|i| i.serving)
+            .min_by_key(|i| i.load)?;
+        self.routed += 1;
+        Some(best.id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(serving: &[bool]) -> Vec<InstanceView> {
+        serving
+            .iter()
+            .enumerate()
+            .map(|(id, &s)| InstanceView { id, serving: s, load: 0 })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_even_distribution() {
+        let mut r = Router::new();
+        let v = views(&[true, true, true, true]);
+        let mut counts = [0usize; 4];
+        for _ in 0..400 {
+            counts[r.pick(&v).unwrap()] += 1;
+        }
+        assert_eq!(counts, [100, 100, 100, 100]);
+    }
+
+    #[test]
+    fn skips_failed_instances() {
+        let mut r = Router::new();
+        let v = views(&[true, false, true, false]);
+        let mut counts = [0usize; 4];
+        for _ in 0..100 {
+            counts[r.pick(&v).unwrap()] += 1;
+        }
+        assert_eq!(counts[1] + counts[3], 0);
+        assert_eq!(counts[0], 50);
+        assert_eq!(counts[2], 50);
+    }
+
+    #[test]
+    fn none_when_total_outage() {
+        let mut r = Router::new();
+        assert_eq!(r.pick(&views(&[false, false])), None);
+        assert_eq!(r.pick(&[]), None);
+    }
+
+    #[test]
+    fn eligibility_restored_mid_stream() {
+        let mut r = Router::new();
+        let mut v = views(&[true, false]);
+        for _ in 0..3 {
+            assert_eq!(r.pick(&v), Some(0));
+        }
+        v[1].serving = true; // KevlarFlow rerouting brings it back
+        let picks: Vec<_> = (0..4).map(|_| r.pick(&v).unwrap()).collect();
+        assert!(picks.contains(&1));
+        assert_eq!(picks.iter().filter(|&&p| p == 1).count(), 2);
+    }
+
+    #[test]
+    fn least_loaded_pick() {
+        let mut r = Router::new();
+        let v = vec![
+            InstanceView { id: 0, serving: true, load: 10 },
+            InstanceView { id: 1, serving: false, load: 0 },
+            InstanceView { id: 2, serving: true, load: 3 },
+        ];
+        assert_eq!(r.pick_least_loaded(&v), Some(2));
+    }
+}

@@ -1,0 +1,243 @@
+//! Real model execution: tokenizer, per-request KV buffers, batch
+//! packing, sampling, and a whole-model driver over the stage runtimes.
+//!
+//! Two consumption patterns:
+//!
+//! * [`ModelEngine`] — all stages in one place (quickstart example, golden
+//!   integration tests, single-replica serving).
+//! * the per-stage pieces ([`KvBuf`], [`pack_kv_batch`], …) — used by the
+//!   distributed examples where each node task owns exactly one
+//!   [`StageRuntime`] and KV stays sharded by stage, as in the paper.
+
+mod tokenizer;
+pub use tokenizer::ByteTokenizer;
+
+use anyhow::{bail, Result};
+
+use crate::config::Manifest;
+use crate::runtime::{Runtime, StageRuntime};
+
+/// Host-side KV for one request at one stage:
+/// `[2, L, 1, Smax, KH, hd]` f32, flattened.
+#[derive(Debug, Clone)]
+pub struct KvBuf {
+    pub data: Vec<f32>,
+    /// `Smax * KH * hd` — the per-(kv,layer) chunk length.
+    chunk: usize,
+    pairs: usize, // 2 * L
+}
+
+impl KvBuf {
+    pub fn zeros(man: &Manifest) -> Self {
+        let c = &man.config;
+        let chunk = c.max_seq * c.n_kv_heads * c.head_dim;
+        let pairs = 2 * c.layers_per_stage;
+        Self { data: vec![0.0; pairs * chunk], chunk, pairs }
+    }
+
+    pub fn from_literal(man: &Manifest, lit: &xla::Literal) -> Result<Self> {
+        let mut kv = Self::zeros(man);
+        if lit.element_count() != kv.data.len() {
+            bail!("kv literal size {} != {}", lit.element_count(), kv.data.len());
+        }
+        lit.copy_raw_to(&mut kv.data)?;
+        Ok(kv)
+    }
+
+    /// Byte length of one KV *page* (per token block) across layers —
+    /// the replication unit size used for bandwidth accounting.
+    pub fn page_bytes(man: &Manifest) -> usize {
+        let c = &man.config;
+        2 * c.layers_per_stage * c.page_size * c.n_kv_heads * c.head_dim * 4
+    }
+}
+
+/// Pack per-request KV buffers into the batched decode input
+/// `[2, L, B, Smax, KH, hd]` (B = bucket; unused slots stay zero).
+pub fn pack_kv_batch(man: &Manifest, reqs: &[&KvBuf], bucket: usize) -> xla::Literal {
+    let c = &man.config;
+    let chunk = c.max_seq * c.n_kv_heads * c.head_dim;
+    let pairs = 2 * c.layers_per_stage;
+    let mut data = vec![0.0f32; pairs * bucket * chunk];
+    for (b, kv) in reqs.iter().enumerate() {
+        debug_assert_eq!(kv.chunk, chunk);
+        for p in 0..pairs {
+            let src = &kv.data[p * chunk..(p + 1) * chunk];
+            let dst_off = (p * bucket + b) * chunk;
+            data[dst_off..dst_off + chunk].copy_from_slice(src);
+        }
+    }
+    let lit = xla::Literal::vec1(&data);
+    lit.reshape(&[
+        2,
+        c.layers_per_stage as i64,
+        bucket as i64,
+        c.max_seq as i64,
+        c.n_kv_heads as i64,
+        c.head_dim as i64,
+    ])
+    .expect("kv reshape")
+}
+
+/// Scatter a batched KV output back into the per-request buffers.
+pub fn unpack_kv_batch(
+    man: &Manifest,
+    batched: &xla::Literal,
+    reqs: &mut [&mut KvBuf],
+    bucket: usize,
+) -> Result<()> {
+    let c = &man.config;
+    let chunk = c.max_seq * c.n_kv_heads * c.head_dim;
+    let pairs = 2 * c.layers_per_stage;
+    let mut data = vec![0.0f32; pairs * bucket * chunk];
+    if batched.element_count() != data.len() {
+        bail!("batched kv size mismatch");
+    }
+    batched.copy_raw_to(&mut data)?;
+    for (b, kv) in reqs.iter_mut().enumerate() {
+        for p in 0..pairs {
+            let src_off = (p * bucket + b) * chunk;
+            kv.data[p * chunk..(p + 1) * chunk]
+                .copy_from_slice(&data[src_off..src_off + chunk]);
+        }
+    }
+    Ok(())
+}
+
+/// Greedy argmax over a logits row.
+pub fn greedy(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// A request being decoded by the engine.
+#[derive(Debug)]
+pub struct EngineRequest {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// Context length currently in KV (prompt + decoded so far).
+    pub ctx_len: usize,
+    /// Per-stage KV.
+    pub kv: Vec<KvBuf>,
+    pub max_new: usize,
+    pub generated: Vec<u32>,
+}
+
+/// Whole-model engine: all pipeline stages in-process.
+pub struct ModelEngine {
+    pub stages: Vec<StageRuntime>,
+    pub manifest: std::sync::Arc<Manifest>,
+}
+
+impl ModelEngine {
+    pub fn load(rt: &Runtime) -> Result<Self> {
+        Ok(Self { stages: rt.load_all_stages()?, manifest: rt.manifest.clone() })
+    }
+
+    /// Prefill a prompt; returns the request with its first generated
+    /// token appended.
+    pub fn prefill(&self, id: u64, prompt: &[u32], max_new: usize) -> Result<EngineRequest> {
+        let man = &self.manifest;
+        let s = prompt.len();
+        let bucket = man
+            .prefill_bucket_for(s)
+            .ok_or_else(|| anyhow::anyhow!("prompt too long ({s})"))?;
+        let mut toks = vec![0i32; bucket];
+        for (i, &t) in prompt.iter().enumerate() {
+            toks[i] = t as i32;
+        }
+        let mut x = xla::Literal::vec1(&toks).reshape(&[1, bucket as i64])?;
+        let mut kvs = Vec::with_capacity(self.stages.len());
+        let mut out = None;
+        for (si, stage) in self.stages.iter().enumerate() {
+            let (o, kv) = stage.prefill(&x, s as i32, bucket)?;
+            kvs.push(KvBuf::from_literal(man, &kv)?);
+            if si + 1 == self.stages.len() {
+                out = Some(o);
+            } else {
+                x = o;
+            }
+        }
+        let logits = out.unwrap().to_vec::<f32>()?;
+        let first = greedy(&logits);
+        Ok(EngineRequest {
+            id,
+            tokens: prompt.to_vec(),
+            ctx_len: s,
+            kv: kvs,
+            max_new,
+            generated: vec![first],
+        })
+    }
+
+    /// One decode step for a batch of requests (each gets one token).
+    pub fn decode_step(&self, reqs: &mut [&mut EngineRequest]) -> Result<()> {
+        let man = self.manifest.clone();
+        let n = reqs.len();
+        let bucket = man
+            .decode_bucket_for(n)
+            .ok_or_else(|| anyhow::anyhow!("batch too large ({n})"))?;
+        // stage-0 input: last generated token per request (pad with 0)
+        let mut toks = vec![0i32; bucket];
+        let mut lens = vec![0i32; bucket];
+        for (i, r) in reqs.iter().enumerate() {
+            toks[i] = *r.generated.last().unwrap() as i32;
+            lens[i] = r.ctx_len as i32;
+        }
+        let mut x = xla::Literal::vec1(&toks);
+        let mut logits: Option<xla::Literal> = None;
+        for (si, stage) in self.stages.iter().enumerate() {
+            let kv_in = {
+                let refs: Vec<&KvBuf> = reqs.iter().map(|r| &r.kv[si]).collect();
+                pack_kv_batch(&man, &refs, bucket)
+            };
+            let (o, kv_out) = stage.decode(&x, &kv_in, &lens, bucket)?;
+            {
+                let mut refs: Vec<&mut KvBuf> =
+                    reqs.iter_mut().map(|r| &mut r.kv[si]).collect();
+                unpack_kv_batch(&man, &kv_out, &mut refs, bucket)?;
+            }
+            if si + 1 == self.stages.len() {
+                logits = Some(o);
+            } else {
+                x = o;
+            }
+        }
+        let logits = logits.unwrap();
+        let v = man.config.vocab_size;
+        let all = logits.to_vec::<f32>()?;
+        for (i, r) in reqs.iter_mut().enumerate() {
+            let row = &all[i * v..(i + 1) * v];
+            r.generated.push(greedy(row));
+            r.ctx_len += 1;
+        }
+        Ok(())
+    }
+
+    /// Convenience: greedy-generate `n_new` tokens for one prompt.
+    pub fn generate(&self, prompt: &[u32], n_new: usize) -> Result<Vec<u32>> {
+        let mut req = self.prefill(0, prompt, n_new)?;
+        while req.generated.len() < n_new {
+            let mut slot = [&mut req];
+            self.decode_step(&mut slot)?;
+        }
+        Ok(req.generated)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(greedy(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(greedy(&[5.0]), 0);
+        assert_eq!(greedy(&[1.0, 1.0]), 0, "ties break low");
+    }
+}

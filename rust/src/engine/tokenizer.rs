@@ -1,0 +1,51 @@
+//! Byte-level tokenizer (vocab 256) — the substitute for Llama's BPE
+//! vocabulary (DESIGN.md §1: serving dynamics do not depend on the
+//! tokenizer; bytes keep the AOT model's vocab tiny).
+
+/// UTF-8 byte tokenizer: token id = byte value.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.as_bytes().iter().map(|&b| b as u32).collect()
+    }
+
+    /// Lossy decode (invalid UTF-8 from a random-weight model is
+    /// replaced, not an error).
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xff) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "Hello, KevlarFlow! 123";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer;
+        let s = "héllo ∞";
+        assert_eq!(t.decode(&t.encode(s)), s);
+        assert!(t.encode(s).iter().all(|&x| x < 256));
+    }
+
+    #[test]
+    fn lossy_on_garbage() {
+        let t = ByteTokenizer;
+        let out = t.decode(&[0xff, 0xfe, 72, 105]);
+        assert!(out.ends_with("Hi"));
+    }
+}

@@ -1,0 +1,333 @@
+//! Paged KV-cache accounting: block allocation, per-sequence growth, and
+//! the replica bookkeeping behind KevlarFlow's background replication.
+//!
+//! This module tracks *block ownership and occupancy*; the tensor bytes
+//! themselves live either in the simulator's abstract node memory or in
+//! the real engine's per-request buffers. A node's cache holds two block
+//! classes:
+//!
+//! * **primary** blocks — KV of requests this node is serving; never
+//!   dropped while the request lives.
+//! * **replica** blocks — copies of *other* nodes' primary blocks,
+//!   received over the background replication stream. Under memory
+//!   pressure these are dropped first and recomputed on demand (§3.2:
+//!   "When memory pressure happens, KevlarFlow drops the replicated KV
+//!   cache and recomputes them if needed").
+
+use std::collections::HashMap;
+
+use crate::config::NodeId;
+
+/// Tokens → pages, rounding up; 0 tokens still occupies 0 pages.
+pub fn blocks_for(tokens: u32, page_size: usize) -> usize {
+    (tokens as usize).div_ceil(page_size)
+}
+
+/// State of one sequence's primary KV on its serving node.
+#[derive(Debug, Clone)]
+pub struct SeqKv {
+    pub tokens: u32,
+    pub blocks: usize,
+}
+
+/// State of one sequence's replica on the replication target.
+#[derive(Debug, Clone)]
+pub struct ReplicaKv {
+    /// Node that owns the primary copy.
+    pub owner: NodeId,
+    /// Tokens whose blocks have fully arrived (monotone; lags the primary
+    /// by up to `replication_interval_iters` decode steps).
+    pub synced_tokens: u32,
+    pub blocks: usize,
+    /// Last touch (sim time) — drop victims are chosen oldest-first.
+    pub touched_s: f64,
+}
+
+/// Why an allocation could not be satisfied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvError {
+    /// Not enough free blocks even after dropping every replica.
+    OutOfMemory,
+    UnknownSeq,
+}
+
+/// Result of a successful primary allocation: how many replica blocks had
+/// to be dropped (and for which sequences) to make room.
+#[derive(Debug, Default, Clone)]
+pub struct Evictions {
+    pub dropped_replicas: Vec<u64>,
+    pub dropped_blocks: usize,
+}
+
+/// Per-node paged KV cache accounting.
+#[derive(Debug, Clone)]
+pub struct NodeKv {
+    pub node: NodeId,
+    pub capacity_blocks: usize,
+    pub page_size: usize,
+    seqs: HashMap<u64, SeqKv>,
+    replicas: HashMap<u64, ReplicaKv>,
+    used_primary: usize,
+    used_replica: usize,
+}
+
+impl NodeKv {
+    pub fn new(node: NodeId, capacity_blocks: usize, page_size: usize) -> Self {
+        Self {
+            node,
+            capacity_blocks,
+            page_size,
+            seqs: HashMap::new(),
+            replicas: HashMap::new(),
+            used_primary: 0,
+            used_replica: 0,
+        }
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.used_primary + self.used_replica
+    }
+    pub fn free_blocks(&self) -> usize {
+        self.capacity_blocks - self.used_blocks()
+    }
+    pub fn primary_blocks(&self) -> usize {
+        self.used_primary
+    }
+    pub fn replica_blocks(&self) -> usize {
+        self.used_replica
+    }
+    pub fn utilization(&self) -> f64 {
+        self.used_blocks() as f64 / self.capacity_blocks as f64
+    }
+    pub fn n_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+    pub fn seq(&self, id: u64) -> Option<&SeqKv> {
+        self.seqs.get(&id)
+    }
+    pub fn replica(&self, id: u64) -> Option<&ReplicaKv> {
+        self.replicas.get(&id)
+    }
+    pub fn replica_ids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.replicas.keys().copied()
+    }
+
+    /// Grow (or create) a sequence's primary KV to `tokens`. Drops replica
+    /// blocks (oldest first) if needed to make room.
+    pub fn grow_primary(&mut self, id: u64, tokens: u32) -> Result<Evictions, KvError> {
+        let have = self.seqs.get(&id).map(|s| s.blocks).unwrap_or(0);
+        let want = blocks_for(tokens, self.page_size);
+        let mut ev = Evictions::default();
+        if want > have {
+            let need = want - have;
+            if need > self.free_blocks() {
+                // pressure: shed replicas, oldest first
+                let mut victims: Vec<(u64, f64, usize)> = self
+                    .replicas
+                    .iter()
+                    .map(|(&k, r)| (k, r.touched_s, r.blocks))
+                    .collect();
+                victims.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                for (vid, _, vblocks) in victims {
+                    if need <= self.free_blocks() {
+                        break;
+                    }
+                    self.replicas.remove(&vid);
+                    self.used_replica -= vblocks;
+                    ev.dropped_replicas.push(vid);
+                    ev.dropped_blocks += vblocks;
+                }
+                if need > self.free_blocks() {
+                    // roll back nothing — drops are permanent (they are
+                    // just cache); report OOM for the primary.
+                    return Err(KvError::OutOfMemory);
+                }
+            }
+            self.used_primary += need;
+        }
+        let entry = self.seqs.entry(id).or_insert(SeqKv { tokens: 0, blocks: 0 });
+        entry.tokens = tokens;
+        entry.blocks = entry.blocks.max(want);
+        Ok(ev)
+    }
+
+    /// Release a sequence's primary KV (request finished or migrated).
+    pub fn free_primary(&mut self, id: u64) -> Result<usize, KvError> {
+        let s = self.seqs.remove(&id).ok_or(KvError::UnknownSeq)?;
+        self.used_primary -= s.blocks;
+        Ok(s.blocks)
+    }
+
+    /// Record replica growth for sequence `id` owned by `owner` up to
+    /// `synced_tokens`. Replica writes never evict primaries; if there is
+    /// no room the incoming blocks are simply not stored (the replication
+    /// stream retries later) and `false` is returned.
+    pub fn write_replica(
+        &mut self,
+        id: u64,
+        owner: NodeId,
+        synced_tokens: u32,
+        now_s: f64,
+    ) -> bool {
+        let want = blocks_for(synced_tokens, self.page_size);
+        let have = self.replicas.get(&id).map(|r| r.blocks).unwrap_or(0);
+        let need = want.saturating_sub(have);
+        if need > self.free_blocks() {
+            return false;
+        }
+        self.used_replica += need;
+        let r = self.replicas.entry(id).or_insert(ReplicaKv {
+            owner,
+            synced_tokens: 0,
+            blocks: 0,
+            touched_s: now_s,
+        });
+        r.owner = owner;
+        r.synced_tokens = r.synced_tokens.max(synced_tokens);
+        r.blocks = r.blocks.max(want);
+        r.touched_s = now_s;
+        true
+    }
+
+    /// Drop one replica explicitly (e.g. its request completed upstream).
+    pub fn drop_replica(&mut self, id: u64) -> Option<ReplicaKv> {
+        let r = self.replicas.remove(&id)?;
+        self.used_replica -= r.blocks;
+        Some(r)
+    }
+
+    /// Promote a replica to a primary sequence (failover: the donor node
+    /// resumes the request from the replicated state). Returns the number
+    /// of tokens that were synced — the request restarts its decode from
+    /// there; tokens past that point must be recomputed.
+    pub fn promote_replica(&mut self, id: u64) -> Result<u32, KvError> {
+        let r = self.replicas.remove(&id).ok_or(KvError::UnknownSeq)?;
+        self.used_replica -= r.blocks;
+        // merge with any existing primary for the same sequence (can
+        // happen if a request migrated here twice) — never leak blocks
+        let mut tokens = r.synced_tokens;
+        let mut blocks = r.blocks;
+        if let Some(old) = self.seqs.remove(&id) {
+            self.used_primary -= old.blocks;
+            tokens = tokens.max(old.tokens);
+            blocks = blocks.max(old.blocks);
+        }
+        self.used_primary += blocks;
+        self.seqs.insert(id, SeqKv { tokens, blocks });
+        Ok(r.synced_tokens)
+    }
+
+    /// Internal consistency — asserted by property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let p: usize = self.seqs.values().map(|s| s.blocks).sum();
+        let r: usize = self.replicas.values().map(|x| x.blocks).sum();
+        if p != self.used_primary {
+            return Err(format!("primary accounting {p} != {}", self.used_primary));
+        }
+        if r != self.used_replica {
+            return Err(format!("replica accounting {r} != {}", self.used_replica));
+        }
+        if self.used_blocks() > self.capacity_blocks {
+            return Err(format!(
+                "over capacity {} > {}",
+                self.used_blocks(),
+                self.capacity_blocks
+            ));
+        }
+        for (id, s) in &self.seqs {
+            if blocks_for(s.tokens, self.page_size) > s.blocks {
+                return Err(format!("seq {id} tokens exceed its blocks"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node() -> NodeKv {
+        NodeKv::new(NodeId::new(0, 0), 16, 16)
+    }
+
+    #[test]
+    fn blocks_math() {
+        assert_eq!(blocks_for(0, 16), 0);
+        assert_eq!(blocks_for(1, 16), 1);
+        assert_eq!(blocks_for(16, 16), 1);
+        assert_eq!(blocks_for(17, 16), 2);
+    }
+
+    #[test]
+    fn grow_and_free() {
+        let mut kv = node();
+        kv.grow_primary(1, 20).unwrap(); // 2 blocks
+        assert_eq!(kv.primary_blocks(), 2);
+        kv.grow_primary(1, 33).unwrap(); // 3 blocks
+        assert_eq!(kv.primary_blocks(), 3);
+        // shrink is a no-op on blocks
+        kv.grow_primary(1, 10).unwrap();
+        assert_eq!(kv.primary_blocks(), 3);
+        assert_eq!(kv.free_primary(1).unwrap(), 3);
+        assert_eq!(kv.used_blocks(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oom_when_full_of_primaries() {
+        let mut kv = node();
+        kv.grow_primary(1, 16 * 16).unwrap(); // all 16 blocks
+        assert_eq!(kv.grow_primary(2, 1).unwrap_err(), KvError::OutOfMemory);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pressure_drops_oldest_replicas_first() {
+        let mut kv = node();
+        let owner = NodeId::new(1, 0);
+        assert!(kv.write_replica(10, owner, 64, 1.0)); // 4 blocks, old
+        assert!(kv.write_replica(11, owner, 64, 2.0)); // 4 blocks, newer
+        kv.grow_primary(1, 10 * 16).unwrap(); // needs 10 of 16 → drop one replica
+        let ev = kv.grow_primary(2, 2 * 16).unwrap(); // needs 2 more → drop oldest
+        assert!(ev.dropped_replicas.contains(&10) || kv.replica(10).is_none());
+        kv.check_invariants().unwrap();
+        assert!(kv.used_blocks() <= kv.capacity_blocks);
+    }
+
+    #[test]
+    fn replica_never_evicts_primary() {
+        let mut kv = node();
+        kv.grow_primary(1, 15 * 16).unwrap(); // 15/16
+        assert!(kv.write_replica(10, NodeId::new(1, 0), 16, 0.0)); // fits (1)
+        assert!(!kv.write_replica(11, NodeId::new(1, 0), 16, 0.0)); // no room
+        assert_eq!(kv.primary_blocks(), 15);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn promote_replica_failover() {
+        let mut kv = node();
+        let owner = NodeId::new(1, 0);
+        kv.write_replica(7, owner, 40, 0.0);
+        let synced = kv.promote_replica(7).unwrap();
+        assert_eq!(synced, 40);
+        assert!(kv.replica(7).is_none());
+        assert_eq!(kv.seq(7).unwrap().tokens, 40);
+        assert_eq!(kv.primary_blocks(), 3);
+        assert_eq!(kv.replica_blocks(), 0);
+        kv.check_invariants().unwrap();
+        // continues growing as a normal primary
+        kv.grow_primary(7, 50).unwrap();
+        assert_eq!(kv.primary_blocks(), 4);
+    }
+
+    #[test]
+    fn replica_sync_monotone() {
+        let mut kv = node();
+        let owner = NodeId::new(1, 0);
+        kv.write_replica(7, owner, 40, 0.0);
+        kv.write_replica(7, owner, 30, 1.0); // stale update must not regress
+        assert_eq!(kv.replica(7).unwrap().synced_tokens, 40);
+    }
+}

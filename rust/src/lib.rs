@@ -1,0 +1,45 @@
+//! # KevlarFlow — fault-tolerant LLM serving
+//!
+//! Reproduction of *"Towards Resiliency in Large Language Model Serving
+//! with KevlarFlow"* (Qian et al., CS.DC 2026) as a three-layer
+//! Rust + JAX + Pallas stack. This crate is **Layer 3**: the serving
+//! coordinator and every substrate it depends on. Layers 2 (JAX model) and
+//! 1 (Pallas kernels) live in `python/` and are AOT-lowered once to
+//! `artifacts/*.hlo.txt`; the [`runtime`] module loads them through the
+//! XLA PJRT C API so Python is never on the request path.
+//!
+//! The paper's three mechanisms map onto:
+//!
+//! * **Decoupled model-parallelism initialization** — [`comm`] provides the
+//!   MPICH-style `open_port`/`connect`/`intercomm_merge` primitives and
+//!   [`coordinator::recovery`] uses them to re-form a pipeline's
+//!   communicator around a failed node without reloading weights.
+//! * **Dynamic traffic rerouting** — [`coordinator::reroute`] keeps a
+//!   degraded pipeline serving by borrowing the same-stage node of a
+//!   sibling instance (the *donor*), bounding the capacity loss to one
+//!   node instead of one pipeline.
+//! * **Background KV-cache replication** — [`coordinator::replication`]
+//!   replicates KV blocks ring-wise across the load-balancing group on a
+//!   background stream so in-flight requests resume on the donor.
+//!
+//! Two execution substrates share the same coordinator policies:
+//!
+//! * [`sim`] — a discrete-event cluster simulator (virtual clock, network
+//!   and compute model, fault injection) that regenerates every figure and
+//!   table of the paper's evaluation (see `DESIGN.md` §4).
+//! * [`engine`] + [`runtime`] — real token generation through the AOT
+//!   artifacts on the PJRT CPU client, used by the end-to-end examples.
+
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod workload;
+
+pub mod bench;
+
+pub use config::{ClusterConfig, FaultPolicy, ServingConfig, SimTimingConfig};

@@ -1,0 +1,161 @@
+//! `kevlarflow` CLI: run experiments, inspect artifacts, and generate
+//! with the real (AOT-compiled) model.
+//!
+//! Usage:
+//!   kevlarflow bench <fig3|fig4|fig6|fig7|fig8|fig9|table1|tpot|all> [--scene N]
+//!   kevlarflow generate [PROMPT] [--n TOKENS]
+//!   kevlarflow inspect-artifacts
+
+use anyhow::{bail, Result};
+
+use kevlarflow::bench;
+use kevlarflow::engine::{ByteTokenizer, ModelEngine};
+use kevlarflow::runtime::Runtime;
+
+const USAGE: &str = "\
+kevlarflow — fault-tolerant LLM serving (KevlarFlow reproduction)
+
+USAGE:
+  kevlarflow bench <EXPERIMENT> [--scene N]   regenerate a paper experiment
+      EXPERIMENT: fig3 fig4 fig6 fig7 fig8 fig9 table1 tpot all
+  kevlarflow generate [PROMPT] [--n TOKENS]   greedy-generate with the AOT model
+  kevlarflow inspect-artifacts                print the artifact manifest
+";
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("bench") => {
+            let exp = args.get(1).cloned().unwrap_or_else(|| "all".into());
+            let scene = flag_value(&args, "--scene").map(|s| s.parse::<u8>()).transpose()?;
+            run_bench(&exp, scene)
+        }
+        Some("generate") => {
+            let prompt = args
+                .get(1)
+                .filter(|a| !a.starts_with("--"))
+                .cloned()
+                .unwrap_or_else(|| "Hello, KevlarFlow!".into());
+            let n = flag_value(&args, "--n")
+                .map(|s| s.parse::<usize>())
+                .transpose()?
+                .unwrap_or(16);
+            generate(&prompt, n)
+        }
+        Some("inspect-artifacts") => inspect(),
+        _ => {
+            eprint!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn run_bench(which: &str, scene: Option<u8>) -> Result<()> {
+    match which {
+        "fig3" | "fig4" | "baseline" => {
+            bench::run_baseline_curves(false);
+        }
+        "table1" | "fig5" => {
+            let scenes: Vec<u8> = scene.map(|s| vec![s]).unwrap_or_else(|| vec![1, 2, 3]);
+            bench::run_table1(&scenes, false);
+        }
+        "fig1" | "fig6" => {
+            bench::run_rolling_ttft(1, 2.0, false);
+        }
+        "fig7" => {
+            bench::run_rolling_latency(3, 7.0, false);
+        }
+        "fig8" => {
+            bench::run_recovery_times(false);
+        }
+        "fig9" | "overhead" => {
+            bench::run_overhead(false);
+        }
+        "tpot" => {
+            let rows = bench::run_baseline_curves(true);
+            println!("| nodes | RPS | TPOT avg (ms) | TPOT p99 (ms) |");
+            println!("|---|---|---|---|");
+            for (n, r, s) in rows {
+                println!(
+                    "| {n} | {r:.1} | {:.0} | {:.0} |",
+                    s.tpot_avg * 1000.0,
+                    s.tpot_p99 * 1000.0
+                );
+            }
+        }
+        "all" => {
+            bench::run_baseline_curves(false);
+            bench::run_table1(&[1, 2, 3], false);
+            bench::run_rolling_ttft(1, 2.0, false);
+            bench::run_rolling_latency(3, 7.0, false);
+            bench::run_recovery_times(false);
+            bench::run_overhead(false);
+        }
+        other => bail!("unknown experiment '{other}' (try: fig3 fig6 fig7 fig8 fig9 table1 tpot all)"),
+    }
+    Ok(())
+}
+
+fn generate(prompt: &str, n: usize) -> Result<()> {
+    let rt = Runtime::cpu_default()?;
+    println!(
+        "loading {} stages ({} artifacts)…",
+        rt.manifest.config.n_stages,
+        rt.manifest.artifacts.len()
+    );
+    let engine = ModelEngine::load(&rt)?;
+    let tok = ByteTokenizer;
+    let ids = tok.encode(prompt);
+    let t0 = std::time::Instant::now();
+    let out = engine.generate(&ids, n)?;
+    let dt = t0.elapsed();
+    println!("prompt: {prompt:?}");
+    println!("tokens: {out:?}");
+    println!("text:   {:?}", tok.decode(&out));
+    println!(
+        "{n} tokens in {dt:.1?} ({:.0} ms/token)",
+        dt.as_millis() as f64 / n as f64
+    );
+    Ok(())
+}
+
+fn inspect() -> Result<()> {
+    let rt = Runtime::cpu_default()?;
+    let m = &rt.manifest;
+    println!("preset: {} (seed {})", m.preset, m.seed);
+    println!(
+        "model:  d={} L={} H={} KH={} ffn={} vocab={} Smax={} page={}",
+        m.config.d_model,
+        m.config.n_layers,
+        m.config.n_heads,
+        m.config.n_kv_heads,
+        m.config.ffn_dim,
+        m.config.vocab_size,
+        m.config.max_seq,
+        m.config.page_size
+    );
+    println!(
+        "stages: {} × {} layers",
+        m.config.n_stages, m.config.layers_per_stage
+    );
+    println!(
+        "buckets: prefill {:?}, decode {:?}",
+        m.config.prefill_buckets, m.config.decode_buckets
+    );
+    println!("artifacts ({}):", m.artifacts.len());
+    for a in &m.artifacts {
+        println!("  {}", a.file);
+    }
+    println!(
+        "goldens: prompt {:?} → greedy {:?}",
+        m.goldens.prompt, m.goldens.greedy_tokens
+    );
+    Ok(())
+}

@@ -1,0 +1,231 @@
+//! Request-level metrics: latency / TTFT / TPOT recorders, percentile
+//! summaries, and the rolling time-series used for the paper's Fig 1/6/7.
+
+/// Lifecycle timestamps of one served request (seconds, sim or wall time).
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrival_s: f64,
+    /// First token emitted (prefill completed) — absolute time.
+    pub first_token_s: f64,
+    /// Last token emitted — absolute time.
+    pub completion_s: f64,
+    pub prompt_len: u32,
+    pub output_len: u32,
+    /// Times the request was restarted from scratch (standard fault
+    /// behavior) — 0 under KevlarFlow's seamless migration.
+    pub retries: u32,
+    /// Instance that completed it.
+    pub instance: usize,
+}
+
+impl RequestRecord {
+    pub fn latency(&self) -> f64 {
+        self.completion_s - self.arrival_s
+    }
+    pub fn ttft(&self) -> f64 {
+        self.first_token_s - self.arrival_s
+    }
+    /// Time-per-output-token over the decode phase.
+    pub fn tpot(&self) -> f64 {
+        if self.output_len > 1 {
+            (self.completion_s - self.first_token_s) / (self.output_len as f64 - 1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// p-th percentile (0..=100) by linear interpolation; `None` on empty.
+pub fn percentile(values: &mut [f64], p: f64) -> Option<f64> {
+    if values.is_empty() {
+        return None;
+    }
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (values.len() as f64 - 1.0);
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    Some(values[lo] * (1.0 - frac) + values[hi.min(values.len() - 1)] * frac)
+}
+
+fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        0.0
+    } else {
+        values.iter().sum::<f64>() / values.len() as f64
+    }
+}
+
+/// Aggregate summary over a set of completed requests — the columns of
+/// the paper's Table 1.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub latency_avg: f64,
+    pub latency_p99: f64,
+    pub ttft_avg: f64,
+    pub ttft_p99: f64,
+    pub tpot_avg: f64,
+    pub tpot_p99: f64,
+}
+
+impl Summary {
+    pub fn from_records(records: &[RequestRecord]) -> Self {
+        let mut lat: Vec<f64> = records.iter().map(|r| r.latency()).collect();
+        let mut ttft: Vec<f64> = records.iter().map(|r| r.ttft()).collect();
+        let mut tpot: Vec<f64> =
+            records.iter().filter(|r| r.output_len > 1).map(|r| r.tpot()).collect();
+        Self {
+            n: records.len(),
+            latency_avg: mean(&lat),
+            latency_p99: percentile(&mut lat, 99.0).unwrap_or(0.0),
+            ttft_avg: mean(&ttft),
+            ttft_p99: percentile(&mut ttft, 99.0).unwrap_or(0.0),
+            tpot_avg: mean(&tpot),
+            tpot_p99: percentile(&mut tpot, 99.0).unwrap_or(0.0),
+        }
+    }
+}
+
+/// One point of a rolling series: window-average and window-p99.
+#[derive(Debug, Clone, Copy)]
+pub struct RollingPoint {
+    pub t: f64,
+    pub avg: f64,
+    pub p99: f64,
+    pub n: usize,
+}
+
+/// Rolling average + p99 of a metric over completion-time windows —
+/// exactly what the paper plots in Figures 1, 6 and 7 ("rolling average
+/// and p99 TTFT").
+pub fn rolling_series(
+    samples: &[(f64, f64)], // (completion time, metric value)
+    window_s: f64,
+    step_s: f64,
+    t_end: f64,
+) -> Vec<RollingPoint> {
+    let mut sorted: Vec<(f64, f64)> = samples.to_vec();
+    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut out = Vec::new();
+    let mut t = window_s;
+    while t <= t_end {
+        let lo = sorted.partition_point(|&(ts, _)| ts < t - window_s);
+        let hi = sorted.partition_point(|&(ts, _)| ts <= t);
+        let mut vals: Vec<f64> = sorted[lo..hi].iter().map(|&(_, v)| v).collect();
+        if !vals.is_empty() {
+            out.push(RollingPoint {
+                t,
+                avg: mean(&vals),
+                p99: percentile(&mut vals, 99.0).unwrap(),
+                n: vals.len(),
+            });
+        }
+        t += step_s;
+    }
+    out
+}
+
+/// Collector the sim/engine push completions into.
+#[derive(Debug, Default, Clone)]
+pub struct Recorder {
+    pub records: Vec<RequestRecord>,
+}
+
+impl Recorder {
+    pub fn push(&mut self, r: RequestRecord) {
+        self.records.push(r);
+    }
+    pub fn summary(&self) -> Summary {
+        Summary::from_records(&self.records)
+    }
+    /// (completion time, TTFT) pairs for rolling plots, keyed by *arrival*
+    /// windows? — the paper keys by wall-clock; we key by first-token time
+    /// so a spike appears when affected requests finally get served.
+    pub fn ttft_samples(&self) -> Vec<(f64, f64)> {
+        self.records.iter().map(|r| (r.first_token_s, r.ttft())).collect()
+    }
+    pub fn latency_samples(&self) -> Vec<(f64, f64)> {
+        self.records.iter().map(|r| (r.completion_s, r.latency())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, arr: f64, ft: f64, done: f64, out: u32) -> RequestRecord {
+        RequestRecord {
+            id,
+            arrival_s: arr,
+            first_token_s: ft,
+            completion_s: done,
+            prompt_len: 10,
+            output_len: out,
+            retries: 0,
+            instance: 0,
+        }
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&mut v, 0.0), Some(1.0));
+        assert_eq!(percentile(&mut v, 100.0), Some(4.0));
+        assert_eq!(percentile(&mut v, 50.0), Some(2.5));
+        assert_eq!(percentile(&mut [], 99.0), None);
+        assert_eq!(percentile(&mut [7.0], 99.0), Some(7.0));
+    }
+
+    #[test]
+    fn record_derived_metrics() {
+        let r = rec(0, 10.0, 10.5, 20.5, 101);
+        assert!((r.ttft() - 0.5).abs() < 1e-12);
+        assert!((r.latency() - 10.5).abs() < 1e-12);
+        assert!((r.tpot() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tpot_single_token_is_zero() {
+        assert_eq!(rec(0, 0.0, 1.0, 1.0, 1).tpot(), 0.0);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let recs: Vec<_> = (0..100)
+            .map(|i| rec(i, 0.0, 0.1 * (i + 1) as f64, 1.0 * (i + 1) as f64, 2))
+            .collect();
+        let s = Summary::from_records(&recs);
+        assert_eq!(s.n, 100);
+        assert!((s.latency_avg - 50.5).abs() < 1e-9);
+        assert!(s.latency_p99 > 98.9 && s.latency_p99 <= 100.0);
+        assert!(s.ttft_p99 > 9.89 && s.ttft_p99 <= 10.0);
+    }
+
+    #[test]
+    fn rolling_window_isolates_spike() {
+        // flat 0.1s TTFT except a burst of 10s TTFTs around t=50
+        let mut samples: Vec<(f64, f64)> = (0..100).map(|i| (i as f64, 0.1)).collect();
+        for i in 0..5 {
+            samples.push((50.0 + i as f64 * 0.1, 10.0));
+        }
+        let series = rolling_series(&samples, 10.0, 5.0, 100.0);
+        let at_30 = series.iter().find(|p| p.t == 30.0).unwrap();
+        let at_55 = series.iter().find(|p| p.t == 55.0).unwrap();
+        assert!(at_30.avg < 0.2);
+        assert!(at_55.avg > 1.0);
+        assert!(at_55.p99 > 9.0);
+        let at_90 = series.iter().find(|p| p.t == 90.0).unwrap();
+        assert!(at_90.avg < 0.2, "spike must leave the window");
+    }
+
+    #[test]
+    fn rolling_empty_windows_skipped() {
+        let series = rolling_series(&[(100.0, 1.0)], 10.0, 10.0, 200.0);
+        assert!(series.iter().all(|p| p.n > 0));
+        // the sample sits on two window edges (windows are closed on
+        // both ends at the boundary step)
+        assert_eq!(series.len(), 2);
+    }
+}

@@ -1,0 +1,47 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `weights.npz`) and executes stage computations from the Rust hot path.
+//!
+//! This is the boundary that keeps Python off the request path: artifacts
+//! are HLO *text* (see `python/compile/aot.py` for why text, not
+//! serialized protos), compiled once per (stage × phase × shape-bucket)
+//! at startup, with the stage's weights uploaded once as device-resident
+//! buffers. Per-step host↔device traffic is limited to the activations /
+//! KV tensors the step actually consumes.
+
+mod stage;
+
+pub use stage::{StageRuntime, KV_DIMS};
+
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+use crate::config::Manifest;
+
+/// Shared PJRT client + manifest — one per process.
+pub struct Runtime {
+    pub client: Arc<xla::PjRtClient>,
+    pub manifest: Arc<Manifest>,
+}
+
+impl Runtime {
+    /// CPU PJRT client over the default artifact directory.
+    pub fn cpu_default() -> Result<Self> {
+        let manifest = Manifest::load_default()?;
+        Self::cpu(manifest)
+    }
+
+    pub fn cpu(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client: Arc::new(client), manifest: Arc::new(manifest) })
+    }
+
+    /// Load (compile + weight-upload) one pipeline stage.
+    pub fn load_stage(&self, stage: usize) -> Result<StageRuntime> {
+        StageRuntime::load(self.client.clone(), self.manifest.clone(), stage)
+    }
+
+    /// Load every stage (a whole model replica).
+    pub fn load_all_stages(&self) -> Result<Vec<StageRuntime>> {
+        (0..self.manifest.config.n_stages).map(|s| self.load_stage(s)).collect()
+    }
+}

@@ -1,0 +1,177 @@
+//! One pipeline stage: compiled executables per shape bucket + resident
+//! weights, with typed prefill/decode entry points.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use xla::FromRawBytes;
+
+use crate::config::Manifest;
+
+/// Rank of the fused KV I/O tensor `[2, L, B, Smax, KH, hd]`.
+pub const KV_DIMS: usize = 6;
+
+/// A loaded, executable pipeline stage.
+pub struct StageRuntime {
+    client: Arc<xla::PjRtClient>,
+    pub manifest: Arc<Manifest>,
+    pub stage: usize,
+    /// Device-resident stage weights in ABI order (uploaded once).
+    weights: Vec<xla::PjRtBuffer>,
+    prefill: HashMap<usize, xla::PjRtLoadedExecutable>,
+    decode: HashMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl StageRuntime {
+    /// Compile this stage's artifacts and upload its weights.
+    pub fn load(
+        client: Arc<xla::PjRtClient>,
+        manifest: Arc<Manifest>,
+        stage: usize,
+    ) -> Result<Self> {
+        let p = manifest.config.prefill_buckets.clone();
+        let d = manifest.config.decode_buckets.clone();
+        Self::load_with_buckets(client, manifest, stage, &p, &d)
+    }
+
+    /// Like [`StageRuntime::load`] but compiling only the listed shape
+    /// buckets — multi-node deployments use this to cut startup time.
+    pub fn load_with_buckets(
+        client: Arc<xla::PjRtClient>,
+        manifest: Arc<Manifest>,
+        stage: usize,
+        prefill_buckets: &[usize],
+        decode_buckets: &[usize],
+    ) -> Result<Self> {
+        // -- weights: read s{stage}.* entries of weights.npz straight to
+        //    device buffers, in ABI order
+        let spec = manifest.params_for_stage(stage);
+        let names: Vec<String> = spec.iter().map(|p| format!("s{stage}.{}", p.name)).collect();
+        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        // NOTE: read into Literals and upload via buffer_from_host_literal;
+        // the crate's raw-bytes→buffer path passes an ElementType where the
+        // C API expects a PrimitiveType id and silently creates f16 buffers.
+        let literals =
+            xla::Literal::read_npz_by_name(manifest.weights_path(), &(), &name_refs)
+                .with_context(|| format!("loading stage {stage} weights"))?;
+        let weights = literals
+            .iter()
+            .map(|l| client.buffer_from_host_literal(None, l))
+            .collect::<Result<Vec<_>, _>>()
+            .with_context(|| format!("uploading stage {stage} weights"))?;
+        // BufferFromHostLiteral is asynchronous and does NOT pin the
+        // source literal; force every transfer to complete while the
+        // literals are still alive (a dropped-literal race corrupts the
+        // runtime — see xla_rs.cc's own comment in `execute`).
+        for w in &weights {
+            let _ = w.to_literal_sync().context("awaiting weight transfer")?;
+        }
+        drop(literals);
+
+        // -- executables per bucket
+        let mut prefill = HashMap::new();
+        for &b in prefill_buckets {
+            prefill.insert(b, compile(&client, &manifest, stage, "prefill", b)?);
+        }
+        let mut decode = HashMap::new();
+        for &b in decode_buckets {
+            decode.insert(b, compile(&client, &manifest, stage, "decode", b)?);
+        }
+        Ok(Self { client, manifest, stage, weights, prefill, decode })
+    }
+
+    /// Prefill one request. `x` is `[1, S] i32` tokens for stage 0 or
+    /// `[1, S, D] f32` hidden otherwise; `bucket` = S.
+    ///
+    /// Returns `(out, kv)`: `out` is `[1, S, D]` hidden (or `[1, vocab]`
+    /// last-token logits on the final stage); `kv` is
+    /// `[2, L, 1, Smax, KH, hd]`.
+    pub fn prefill(&self, x: &xla::Literal, seq_len: i32, bucket: usize)
+        -> Result<(xla::Literal, xla::Literal)> {
+        let exe = self
+            .prefill
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no prefill bucket {bucket}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        // keep every source literal alive until run() has synchronised —
+        // input transfers are async and unpinned (see load()).
+        let sl = xla::Literal::scalar(seq_len);
+        let xb = self.upload(x)?;
+        let lb = self.upload(&sl)?;
+        args.push(&xb);
+        args.push(&lb);
+        let out = self.run(exe, &args);
+        drop(sl);
+        out
+    }
+
+    /// Decode one token for a batch. `x` is `[B] i32` tokens (stage 0) or
+    /// `[B, D] f32` hidden; `kv` is `[2, L, B, Smax, KH, hd]`;
+    /// `seq_lens[b]` = pre-append context length. `bucket` = B.
+    pub fn decode(
+        &self,
+        x: &xla::Literal,
+        kv: &xla::Literal,
+        seq_lens: &[i32],
+        bucket: usize,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let exe = self
+            .decode
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no decode bucket {bucket}"))?;
+        if seq_lens.len() != bucket {
+            bail!("seq_lens {} != bucket {bucket}", seq_lens.len());
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        let sl = xla::Literal::vec1(seq_lens);
+        let xb = self.upload(x)?;
+        let kvb = self.upload(kv)?;
+        let sb = self.upload(&sl)?;
+        args.push(&xb);
+        args.push(&kvb);
+        args.push(&sb);
+        let out = self.run(exe, &args);
+        drop(sl);
+        out
+    }
+
+    fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let result = exe.execute_b(args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let (out, kv) = tuple.to_tuple2()?;
+        Ok((out, kv))
+    }
+
+    /// Expected KV tensor dims for batch `b`.
+    pub fn kv_shape(&self, b: usize) -> [usize; KV_DIMS] {
+        let c = &self.manifest.config;
+        [2, c.layers_per_stage, b, c.max_seq, c.n_kv_heads, c.head_dim]
+    }
+}
+
+fn compile(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    stage: usize,
+    phase: &str,
+    bucket: usize,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = manifest.artifact_path(stage, phase, bucket)?;
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("artifact path utf8")?,
+    )
+    .with_context(|| format!("parsing {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling stage{stage} {phase} b{bucket}"))
+}

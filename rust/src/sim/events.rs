@@ -1,0 +1,140 @@
+//! The simulator's event queue: a time-ordered heap with a deterministic
+//! FIFO tiebreak (events at equal timestamps fire in scheduling order).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::config::NodeId;
+
+/// Everything that can happen in the cluster simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A request from the trace reaches the front door.
+    Arrival { req: usize },
+    /// A pass (prefill or decode) arrives at stage `stage` of `instance`
+    /// after the inter-stage hop latency. `pass` indexes the in-flight
+    /// pass table.
+    PassArrive { pass: usize, stage: usize },
+    /// The node finished servicing its current pass.
+    StageDone { node: usize },
+    /// A pass completed after its trailing replication-stream wait.
+    PassDone { pass: usize },
+    /// Fault injection: the node's process/host dies now.
+    FailureInject { node: NodeId },
+    /// The membership layer declares the node dead (heartbeat timeout).
+    FailureDetect { node: NodeId },
+    /// KevlarFlow recovery (locate + re-form + restore + resume) done.
+    RecoveryDone { instance: usize },
+    /// The background replacement node is provisioned and swaps in.
+    ReplacementReady { instance: usize },
+    /// Standard fault behavior: full re-init finished, pipeline rejoins.
+    InstanceRejoin { instance: usize },
+    /// Periodic utilization sampling.
+    Sample,
+}
+
+#[derive(Debug)]
+struct Entry {
+    t: f64,
+    seq: u64,
+    ev: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap: earlier time first, then lower seq (FIFO)
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap()
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic time-ordered event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+    pub processed: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: f64, ev: Event) {
+        debug_assert!(t.is_finite());
+        self.heap.push(Entry { t, seq: self.seq, ev });
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        let e = self.heap.pop()?;
+        self.processed += 1;
+        Some((e.t, e.ev))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_ordering() {
+        let mut q = EventQueue::new();
+        q.push(2.0, Event::Sample);
+        q.push(1.0, Event::Arrival { req: 0 });
+        q.push(3.0, Event::Arrival { req: 1 });
+        assert_eq!(q.pop().unwrap().0, 1.0);
+        assert_eq!(q.pop().unwrap().0, 2.0);
+        assert_eq!(q.pop().unwrap().0, 3.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn fifo_tiebreak_at_equal_time() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(5.0, Event::Arrival { req: i });
+        }
+        for i in 0..10 {
+            match q.pop().unwrap().1 {
+                Event::Arrival { req } => assert_eq!(req, i),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::Sample);
+        assert_eq!(q.pop().unwrap().0, 1.0);
+        q.push(0.5, Event::Sample);
+        q.push(0.25, Event::Sample);
+        assert_eq!(q.pop().unwrap().0, 0.25);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.processed, 2);
+    }
+}

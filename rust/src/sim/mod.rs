@@ -1,0 +1,37 @@
+//! Discrete-event cluster simulator.
+//!
+//! Substitutes for the paper's two geo-distributed A10 clusters (see
+//! DESIGN.md §1): virtual time, FIFO stage servers with a calibrated
+//! compute model, a WAN latency/bandwidth model, fault injection, and the
+//! full serving semantics (continuous batching, paged KV accounting,
+//! replication, rerouting, recovery) driven by the *same* coordinator
+//! policies as the real engine.
+//!
+//! ## Timing model (calibrated to the paper's §4.1 baselines)
+//!
+//! * A decode **iteration** advances every running request of an instance
+//!   by one token: one pass through the 4 stage servers, ~40.75 ms each ⇒
+//!   TPOT ≈ 163 ms, flat in RPS (iterations are serial per instance, so
+//!   batch size does not change iteration latency — the behaviour of
+//!   TensorRT-LLM's default scheduler the paper reports).
+//! * A **prefill** is an independent pass through the same stage servers
+//!   (`base + tokens·per_token` per stage); it overlaps decode in the
+//!   pipeline and only contends near stage saturation.
+//! * Saturation comes from continuous-batching slots (`max_batch`) and
+//!   paged-KV capacity, which is what produces the paper's knees at
+//!   RPS 3→4 (8 nodes) and 6→7 (16 nodes).
+//!
+//! ## Failure semantics
+//!
+//! `FaultPolicy::Standard` — a node failure takes its whole pipeline out;
+//! in-flight requests retry from scratch elsewhere; the pipeline returns
+//! after `baseline_mttr_s` (600 s). `FaultPolicy::KevlarFlow` — detect →
+//! donor → decoupled re-form (~30 s, during which the pipeline is paused)
+//! → degraded serving through the donor + promotion of replicated KV,
+//! with a background replacement after `baseline_mttr_s`.
+
+mod cluster;
+mod events;
+
+pub use cluster::{ClusterSim, SimResult};
+pub use events::{Event, EventQueue};

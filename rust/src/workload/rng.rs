@@ -1,0 +1,127 @@
+//! Small deterministic PRNG (PCG-XSH-RR 64/32) + distribution helpers.
+//!
+//! Implemented locally instead of pulling the `rand` crate: every
+//! experiment must be bit-reproducible across the simulator, the bench
+//! harness and tests, and the generator is on the DES hot path.
+
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+    /// cached second normal from Box–Muller
+    spare: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = (stream << 1) | 1;
+        let mut rng = Self { state: 0, inc, spare: None };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng.state = rng.state.wrapping_add(seed);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in (0, 1] — never returns 0 so it is safe under `ln()`.
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u32() as f64 + 1.0) / (u32::MAX as f64 + 1.0)
+    }
+
+    /// Uniform integer in `[0, n)`.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        let u1 = self.uniform();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.spare = Some(r * s);
+        r * c
+    }
+
+    /// Lognormal multiplicative jitter with mean 1:
+    /// exp(sigma * N - sigma^2/2).
+    pub fn lognormal_jitter(&mut self, sigma: f64) -> f64 {
+        (sigma * self.normal() - sigma * sigma / 2.0).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+        let mut c = Pcg32::new(2);
+        assert_ne!(a.next_u32(), c.next_u32());
+        let mut s1 = Pcg32::with_stream(1, 10);
+        let mut s2 = Pcg32::with_stream(1, 11);
+        assert_ne!(s1.next_u32(), s2.next_u32());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Pcg32::new(3);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!(u > 0.0 && u <= 1.0);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::new(4);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let m = xs.iter().sum::<f64>() / n as f64;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n as f64;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.03, "var {v}");
+    }
+
+    #[test]
+    fn jitter_mean_one() {
+        let mut r = Pcg32::new(5);
+        let n = 100_000;
+        let m: f64 = (0..n).map(|_| r.lognormal_jitter(0.094)).sum::<f64>() / n as f64;
+        assert!((m - 1.0).abs() < 0.005, "mean {m}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Pcg32::new(6);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! Randomized property tests on the coordinator invariants (routing,
+//! replication planning, KV accounting, recovery timing), driven by the
+//! crate's own seeded PRNG — the offline stand-in for proptest
+//! (DESIGN.md §1): hundreds of random cases per property, fully
+//! reproducible by seed.
+
+use kevlarflow::config::{ClusterConfig, NodeId};
+use kevlarflow::coordinator::reroute::{select_donor, InstanceHealth, PipelineState};
+use kevlarflow::coordinator::router::{InstanceView, Router};
+use kevlarflow::coordinator::ReplicationPlanner;
+use kevlarflow::kvcache::NodeKv;
+use kevlarflow::workload::Pcg32;
+
+fn random_cluster(rng: &mut Pcg32) -> ClusterConfig {
+    let mut c = if rng.below(2) == 0 {
+        ClusterConfig::paper_8node()
+    } else {
+        ClusterConfig::paper_16node()
+    };
+    // mutate placement a bit: instances may share DCs
+    for dc in c.instance_dc.iter_mut() {
+        *dc = rng.below(4);
+    }
+    c
+}
+
+fn random_health(rng: &mut Pcg32, c: &ClusterConfig) -> InstanceHealth {
+    let mut h = InstanceHealth::new(c.n_instances);
+    for i in 0..c.n_instances {
+        match rng.below(5) {
+            0 => {
+                let s = rng.below(c.n_stages);
+                h.states[i] = PipelineState::Down { until_s: 100.0 };
+                h.dead.push(NodeId::new(i, s));
+            }
+            1 => {
+                let s = rng.below(c.n_stages);
+                h.states[i] = PipelineState::Recovering { failed_stage: s, since_s: 0.0 };
+                h.dead.push(NodeId::new(i, s));
+            }
+            _ => {}
+        }
+    }
+    h
+}
+
+// ---------------------------------------------------------------- routing
+
+#[test]
+fn prop_router_conservation_and_eligibility() {
+    // every routed request lands on a serving instance; counts differ by
+    // at most 1 across serving instances (fairness); None only when no
+    // instance serves.
+    for seed in 0..300u64 {
+        let mut rng = Pcg32::new(seed);
+        let n = 2 + rng.below(6);
+        let serving: Vec<bool> = (0..n).map(|_| rng.below(3) > 0).collect();
+        let views: Vec<InstanceView> = serving
+            .iter()
+            .enumerate()
+            .map(|(id, &s)| InstanceView { id, serving: s, load: rng.below(100) })
+            .collect();
+        let mut router = Router::new();
+        let mut counts = vec![0usize; n];
+        let k = 40 + rng.below(100);
+        for _ in 0..k {
+            match router.pick(&views) {
+                Some(i) => {
+                    assert!(serving[i], "seed {seed}: routed to dead instance {i}");
+                    counts[i] += 1;
+                }
+                None => assert!(serving.iter().all(|&s| !s), "seed {seed}"),
+            }
+        }
+        let live: Vec<usize> =
+            (0..n).filter(|&i| serving[i]).map(|i| counts[i]).collect();
+        if !live.is_empty() {
+            let (mn, mx) = (live.iter().min().unwrap(), live.iter().max().unwrap());
+            assert!(mx - mn <= 1, "seed {seed}: unfair {live:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------- donors
+
+#[test]
+fn prop_donor_always_valid() {
+    // whenever a donor is returned it is: same stage, different instance,
+    // alive, not already donating, and from an Active pipeline.
+    for seed in 0..500u64 {
+        let mut rng = Pcg32::new(seed);
+        let c = random_cluster(&mut rng);
+        let mut h = random_health(&mut rng, &c);
+        // some pre-existing donations
+        for _ in 0..rng.below(3) {
+            let d = NodeId::new(rng.below(c.n_instances), rng.below(c.n_stages));
+            if !h.is_dead(d) {
+                h.donations.insert(d, rng.below(c.n_instances));
+            }
+        }
+        let failed = NodeId::new(rng.below(c.n_instances), rng.below(c.n_stages));
+        if let Some(donor) = select_donor(&c, &h, failed) {
+            assert_eq!(donor.stage, failed.stage, "seed {seed}");
+            assert_ne!(donor.instance, failed.instance, "seed {seed}");
+            assert!(!h.is_dead(donor), "seed {seed}");
+            assert!(!h.is_donor(donor), "seed {seed}");
+            assert_eq!(h.states[donor.instance], PipelineState::Active, "seed {seed}");
+        } else {
+            // verify there really was no candidate
+            for j in 0..c.n_instances {
+                if j == failed.instance {
+                    continue;
+                }
+                let cand = NodeId::new(j, failed.stage);
+                assert!(
+                    h.states[j] != PipelineState::Active
+                        || h.is_dead(cand)
+                        || h.is_donor(cand),
+                    "seed {seed}: missed candidate {cand}"
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- replication
+
+#[test]
+fn prop_replication_ring_well_formed() {
+    // for any health state: no self-edges, targets share the stage,
+    // excluded nodes have no in/out edges, and per stage the live ring is
+    // a permutation (every participant has exactly one in and one out).
+    for seed in 0..400u64 {
+        let mut rng = Pcg32::new(seed);
+        let c = random_cluster(&mut rng);
+        let h = random_health(&mut rng, &c);
+        let mut p = ReplicationPlanner::new(&c);
+        p.replan(&c, &h, &[]);
+        for s in 0..c.n_stages {
+            let mut outs = Vec::new();
+            let mut ins = Vec::new();
+            for i in 0..c.n_instances {
+                let node = NodeId::new(i, s);
+                if let Some(t) = p.target(node) {
+                    assert_ne!(t, node, "seed {seed}: self edge");
+                    assert_eq!(t.stage, s, "seed {seed}: cross-stage edge");
+                    assert!(!h.is_dead(t), "seed {seed}: edge to dead node");
+                    assert!(!h.is_dead(node), "seed {seed}: dead source");
+                    outs.push(node);
+                    ins.push(t);
+                }
+            }
+            ins.sort();
+            let mut outs_sorted = outs.clone();
+            outs_sorted.sort();
+            assert_eq!(ins, outs_sorted, "seed {seed}: ring not a permutation");
+        }
+    }
+}
+
+// ---------------------------------------------------------------- kvcache
+
+#[test]
+fn prop_kv_accounting_under_random_ops() {
+    // random interleavings of grow/free/replica/promote/drop keep the
+    // internal accounting exact and never exceed capacity.
+    for seed in 0..200u64 {
+        let mut rng = Pcg32::new(seed);
+        let cap = 32 + rng.below(96);
+        let mut kv = NodeKv::new(NodeId::new(0, 0), cap, 16);
+        let mut live: Vec<u64> = Vec::new();
+        let mut reps: Vec<u64> = Vec::new();
+        for step in 0..300 {
+            match rng.below(6) {
+                0 | 1 => {
+                    let id = rng.below(40) as u64;
+                    let tokens = 1 + rng.below(cap * 8) as u32;
+                    if kv.grow_primary(id, tokens).is_ok() && !live.contains(&id) {
+                        live.push(id);
+                    }
+                    // growth may have evicted replicas
+                    reps.retain(|&r| kv.replica(r).is_some());
+                }
+                2 => {
+                    if let Some(&id) = live.get(rng.below(live.len().max(1))) {
+                        let _ = kv.free_primary(id);
+                        live.retain(|&x| x != id);
+                    }
+                }
+                3 => {
+                    let id = 1000 + rng.below(40) as u64;
+                    let tokens = 1 + rng.below(64) as u32;
+                    if kv.write_replica(id, NodeId::new(1, 0), tokens, step as f64)
+                        && !reps.contains(&id)
+                    {
+                        reps.push(id);
+                    }
+                }
+                4 => {
+                    if let Some(&id) = reps.get(rng.below(reps.len().max(1))) {
+                        if kv.promote_replica(id).is_ok() {
+                            reps.retain(|&x| x != id);
+                            if !live.contains(&id) {
+                                live.push(id);
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    if let Some(&id) = reps.get(rng.below(reps.len().max(1))) {
+                        kv.drop_replica(id);
+                        reps.retain(|&x| x != id);
+                    }
+                }
+            }
+            kv.check_invariants()
+                .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+            assert!(kv.used_blocks() <= cap, "seed {seed}: over capacity");
+        }
+    }
+}
+
+// ---------------------------------------------------------------- recovery
+
+#[test]
+fn prop_recovery_time_bounded_and_scenario_ordered() {
+    use kevlarflow::config::SimTimingConfig;
+    use kevlarflow::coordinator::recovery::RecoveryPlan;
+    // recovery is always well under a minute (≪ the 600s baseline);
+    // single-candidate clusters are slower on average.
+    let timing = SimTimingConfig::default();
+    let c8 = ClusterConfig::paper_8node();
+    let c16 = ClusterConfig::paper_16node();
+    let mut sum1 = 0.0;
+    let mut sum3 = 0.0;
+    for seed in 0..300u64 {
+        let mut rng = Pcg32::new(seed);
+        let p1 =
+            RecoveryPlan::build(&c8, &timing, NodeId::new(0, 2), NodeId::new(1, 2), 1, &mut rng);
+        let p3 =
+            RecoveryPlan::build(&c16, &timing, NodeId::new(0, 2), NodeId::new(1, 2), 3, &mut rng);
+        for p in [&p1, &p3] {
+            let t = p.total_s();
+            assert!((15.0..60.0).contains(&t), "seed {seed}: {t}");
+            assert!(600.0 / t > 10.0, "seed {seed}: <10x MTTR win");
+        }
+        sum1 += p1.total_s();
+        sum3 += p3.total_s();
+    }
+    assert!(sum1 / 300.0 > sum3 / 300.0, "1-candidate must be slower on avg");
+}
+
+// ---------------------------------------------------------------- sim-level
+
+#[test]
+fn prop_sim_no_lost_requests_across_policies() {
+    // for random small workloads and any failure pattern, every arrived
+    // request is eventually served exactly once (ids unique in records).
+    use kevlarflow::config::{ExperimentConfig, FaultPolicy};
+    use kevlarflow::sim::ClusterSim;
+    for seed in 0..12u64 {
+        let mut rng = Pcg32::new(seed);
+        let cluster = if rng.below(2) == 0 {
+            ClusterConfig::paper_8node()
+        } else {
+            ClusterConfig::paper_16node()
+        };
+        let n_inst = cluster.n_instances;
+        let mut cfg = ExperimentConfig::new(cluster, 0.5 + rng.below(3) as f64);
+        cfg.seed = seed;
+        cfg.arrival_window_s = 200.0;
+        cfg.max_sim_time_s = 4000.0;
+        let policy = if rng.below(2) == 0 {
+            FaultPolicy::Standard
+        } else {
+            FaultPolicy::KevlarFlow
+        };
+        cfg = cfg.with_policy(policy);
+        for _ in 0..rng.below(3) {
+            let node = NodeId::new(rng.below(n_inst), rng.below(4));
+            cfg = cfg.with_failure(30.0 + rng.below(200) as f64, node);
+        }
+        let res = ClusterSim::new(cfg).run();
+        assert_eq!(res.incomplete, 0, "seed {seed} ({policy:?}): lost requests");
+        let mut ids: Vec<u64> = res.recorder.records.iter().map(|r| r.id).collect();
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "seed {seed}: duplicate completions");
+    }
+}

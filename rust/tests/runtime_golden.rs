@@ -1,0 +1,156 @@
+//! Integration: the PJRT runtime must reproduce the Python (JAX/Pallas)
+//! goldens exactly — loading HLO-text artifacts, uploading weights.npz,
+//! and running prefill + decode through all four pipeline stages.
+//!
+//! These tests isolate the Rust runtime: the goldens were produced by the
+//! *same* kernel-path computation at AOT time, so any mismatch here is a
+//! loading/ABI/packing bug, not a model bug.
+
+use kevlarflow::engine::{pack_kv_batch, unpack_kv_batch, KvBuf, ModelEngine};
+use kevlarflow::runtime::Runtime;
+
+fn engine() -> ModelEngine {
+    let rt = Runtime::cpu_default().expect("artifacts present (make artifacts)");
+    ModelEngine::load(&rt).expect("stage load")
+}
+
+#[test]
+fn prefill_logits_match_golden() {
+    let rt = Runtime::cpu_default().unwrap();
+    let eng = ModelEngine::load(&rt).unwrap();
+    let g = &rt.manifest.goldens;
+    let req = eng.prefill(0, &g.prompt, 4).unwrap();
+    // greedy first token comes from the golden logits row
+    assert_eq!(req.generated[0], g.greedy_tokens[0], "first token mismatch");
+    // spot-check raw logits: rerun stage-by-stage for the first 8 values
+    let s = g.prompt.len();
+    let bucket = rt.manifest.prefill_bucket_for(s).unwrap();
+    let mut toks = vec![0i32; bucket];
+    for (i, &t) in g.prompt.iter().enumerate() {
+        toks[i] = t as i32;
+    }
+    let mut x = xla::Literal::vec1(&toks).reshape(&[1, bucket as i64]).unwrap();
+    let mut out = None;
+    for (si, st) in eng.stages.iter().enumerate() {
+        let (o, _kv) = st.prefill(&x, s as i32, bucket).unwrap();
+        if si + 1 == eng.stages.len() {
+            out = Some(o);
+        } else {
+            x = o;
+        }
+    }
+    let logits = out.unwrap().to_vec::<f32>().unwrap();
+    for (i, &want) in g.prefill_logits_first8.iter().enumerate() {
+        assert!(
+            (logits[i] - want).abs() < 1e-3 * want.abs().max(1.0),
+            "logit {i}: {} vs golden {want}",
+            logits[i]
+        );
+    }
+}
+
+#[test]
+fn greedy_generation_matches_golden() {
+    let rt = Runtime::cpu_default().unwrap();
+    let eng = ModelEngine::load(&rt).unwrap();
+    let g = &rt.manifest.goldens;
+    let out = eng.generate(&g.prompt, g.greedy_tokens.len()).unwrap();
+    assert_eq!(out, g.greedy_tokens, "greedy continuation diverged from JAX");
+}
+
+#[test]
+fn batched_decode_matches_individual() {
+    // batch-of-2 decode must equal two batch-of-1 decodes — the property
+    // the continuous batcher relies on (mirrors the python test at the
+    // PJRT level, exercising bucket padding).
+    let eng = engine();
+    let p1: Vec<u32> = vec![10, 20, 30, 40, 50];
+    let p2: Vec<u32> = vec![7, 7, 7];
+    let mut a1 = eng.prefill(1, &p1, 4).unwrap();
+    let mut a2 = eng.prefill(2, &p2, 4).unwrap();
+    let mut b1 = eng.prefill(3, &p1, 4).unwrap();
+    let mut b2 = eng.prefill(4, &p2, 4).unwrap();
+    assert_eq!(a1.generated, b1.generated);
+
+    // path A: joint batch (bucket 2)
+    {
+        let mut batch = [&mut a1, &mut a2];
+        eng.decode_step(&mut batch).unwrap();
+        let mut batch = [&mut a1, &mut a2];
+        eng.decode_step(&mut batch).unwrap();
+    }
+    // path B: separate batches (bucket 1)
+    for _ in 0..2 {
+        let mut s1 = [&mut b1];
+        eng.decode_step(&mut s1).unwrap();
+        let mut s2 = [&mut b2];
+        eng.decode_step(&mut s2).unwrap();
+    }
+    assert_eq!(a1.generated, b1.generated, "req1 diverged under batching");
+    assert_eq!(a2.generated, b2.generated, "req2 diverged under batching");
+}
+
+#[test]
+fn decode_bucket_padding_is_inert() {
+    // a batch of 3 runs in the bucket-4 executable; the padded slot must
+    // not affect real requests
+    let eng = engine();
+    let prompts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![4, 5, 6, 7], vec![9; 10]];
+    let mut batched: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| eng.prefill(i as u64, p, 3).unwrap())
+        .collect();
+    let mut singles: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| eng.prefill(100 + i as u64, p, 3).unwrap())
+        .collect();
+    {
+        let mut refs: Vec<&mut _> = batched.iter_mut().collect();
+        eng.decode_step(&mut refs).unwrap(); // bucket 4 (3 requests)
+    }
+    for s in singles.iter_mut() {
+        let mut one = [s];
+        eng.decode_step(&mut one).unwrap();
+    }
+    for (b, s) in batched.iter().zip(singles.iter()) {
+        assert_eq!(b.generated, s.generated);
+    }
+}
+
+#[test]
+fn kv_pack_unpack_roundtrip() {
+    let rt = Runtime::cpu_default().unwrap();
+    let man = &rt.manifest;
+    let mut kv1 = KvBuf::zeros(man);
+    let mut kv2 = KvBuf::zeros(man);
+    for (i, v) in kv1.data.iter_mut().enumerate() {
+        *v = i as f32 * 0.5;
+    }
+    for (i, v) in kv2.data.iter_mut().enumerate() {
+        *v = -(i as f32);
+    }
+    let orig1 = kv1.data.clone();
+    let orig2 = kv2.data.clone();
+    let batched = pack_kv_batch(man, &[&kv1, &kv2], 4);
+    // wipe and unpack
+    kv1.data.iter_mut().for_each(|v| *v = 0.0);
+    kv2.data.iter_mut().for_each(|v| *v = 0.0);
+    let mut refs = vec![&mut kv1, &mut kv2];
+    unpack_kv_batch(man, &batched, &mut refs, 4).unwrap();
+    assert_eq!(kv1.data, orig1);
+    assert_eq!(kv2.data, orig2);
+}
+
+#[test]
+fn all_prefill_buckets_execute() {
+    let eng = engine();
+    let man = eng.manifest.clone();
+    for &b in &man.config.prefill_buckets {
+        let prompt: Vec<u32> = (0..b as u32).map(|i| i % 250).collect();
+        let req = eng.prefill(b as u64, &prompt, 1).unwrap();
+        assert_eq!(req.ctx_len, b);
+        assert!(req.generated[0] < man.config.vocab_size as u32);
+    }
+}
