@@ -2,7 +2,8 @@
 //! real 4-stage pipeline (single replica, in-process), and print tokens.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! python python/compile/aot.py   # writes artifacts/
+//! cargo run --release --features pjrt --example quickstart
 //! ```
 
 use anyhow::Result;

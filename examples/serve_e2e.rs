@@ -13,7 +13,8 @@
 //! checked at token level.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_e2e
+//! python python/compile/aot.py   # writes artifacts/
+//! cargo run --release --features pjrt --example serve_e2e
 //! ```
 
 use std::collections::HashMap;

@@ -1,5 +1,5 @@
-//! L3 hot-path micro-benchmarks (plain harness — criterion is not in the
-//! offline vendor set). Drives the §Perf pass in EXPERIMENTS.md.
+//! L3 hot-path micro-benchmarks (plain harness — criterion is
+//! intentionally not a dependency; see DESIGN.md §1).
 //!
 //! Run: `cargo bench --bench hot_paths`
 

@@ -1,5 +1,6 @@
 //! Experiment harness: regenerates every table and figure of the paper's
-//! evaluation from the simulator (DESIGN.md §4 maps experiment → here).
+//! evaluation from the simulator (`DESIGN.md` §4 maps paper figure →
+//! function here). Sim-only: available in the default feature set.
 //!
 //! Each `run_*` function prints the same rows/series the paper reports
 //! and returns the structured data so tests and the criterion benches can

@@ -5,23 +5,26 @@
 //! `MPI_Open_port` / `MPI_Comm_connect` / `MPI_Intercomm_merge` (§3.3) and
 //! rendezvouses metadata through a PyTorch `TCPStore`. This module
 //! provides the same primitives with the same semantics over in-process
-//! async channels:
+//! channels:
 //!
-//! * [`Store`] — the TCPStore analogue: an async KV store with blocking
-//!   `wait`, `compare_exchange`, and counters. Used for rendezvous and by
-//!   the [`DistLock`].
-//! * [`PortRegistry`] / [`open_port`]-style naming — a node publishes a
-//!   port name; peers `connect` to it and get a bidirectional [`Endpoint`].
-//! * [`Communicator`] — a ranked group built from endpoints. Supports
-//!   point-to-point `send`/`recv` and, crucially, [`Communicator::merge`]
-//!   (the `MPI_Intercomm_merge` analogue) so a degraded pipeline can
-//!   splice a donor node into a *new* communicator without restarting the
-//!   world — the mechanism behind the paper's 20× MTTR reduction.
+//! * [`Store`] — the TCPStore analogue: a shared KV store with blocking
+//!   [`wait`](Store::wait), [`compare_exchange`](Store::compare_exchange),
+//!   and counters. Used for rendezvous and by the [`DistLock`].
+//! * [`PortRegistry`] / [`open_port`](PortRegistry::open_port)-style
+//!   naming — a node publishes a port name; peers
+//!   [`connect`](PortRegistry::connect) to it and get a bidirectional
+//!   [`Endpoint`].
+//! * [`Communicator`] — a ranked group over a shared [`Fabric`]. Supports
+//!   point-to-point `send`/`recv` and, crucially, runtime epoch
+//!   re-formation ([`Fabric::new_epoch`] + [`Fabric::join`] — the
+//!   `MPI_Intercomm_merge` analogue) so a degraded pipeline can splice a
+//!   donor node into a *new* communicator without restarting the world —
+//!   the mechanism behind the paper's 20× MTTR reduction.
 //! * [`DistLock`] — the distributed lock serializing the ring-shaped KV
 //!   replication scheme (§3.3: needed because NCCL send/recv pairs on a
 //!   ring can deadlock).
 //!
-//! Failure surfaces as `CommError::PeerGone` the moment a peer's endpoint
+//! Failure surfaces as [`CommError::PeerGone`] the moment a peer's endpoint
 //! is dropped — the same abrupt-connection-loss signal a dead node
 //! produces — which is what [`crate::coordinator::membership`] converts
 //! into failure detection.

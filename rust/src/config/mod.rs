@@ -1,15 +1,18 @@
-//! Typed configuration for clusters, serving, workloads and the sim
-//! timing model, plus the parsed AOT artifact manifest.
+//! Typed configuration for clusters ([`ClusterConfig`]), serving policy
+//! ([`ServingConfig`]), the sim timing model ([`SimTimingConfig`]) and
+//! whole experiments ([`ExperimentConfig`]), plus the parsed AOT artifact
+//! manifest ([`Manifest`]).
 //!
-//! Presets mirror the paper's two testbeds: an 8-node cluster (2 pipeline
-//! instances × 4 stages) and a 16-node cluster (4 instances × 4 stages),
-//! each instance pinned to one of four US datacenters and connected over
-//! commodity 1 Gbps transit (§4 of the paper).
+//! Presets mirror the paper's two testbeds ([`ClusterConfig::paper_8node`]
+//! and [`ClusterConfig::paper_16node`]): 2 pipeline instances × 4 stages
+//! and 4 instances × 4 stages respectively, each instance pinned to one
+//! of four US datacenters and connected over commodity 1 Gbps transit
+//! (§4 of the paper).
 
 pub mod json;
 mod manifest;
 pub use json::Json;
-pub use manifest::{ArtifactEntry, Manifest, ManifestConfig, ParamSpec};
+pub use manifest::{ArtifactEntry, Goldens, Manifest, ManifestConfig, ParamSpec};
 
 /// Identifies one model executor: `(instance, stage)` — the paper's
 /// `(i, s)` node naming (e.g. node (0, 2) = stage 2 of instance 0).

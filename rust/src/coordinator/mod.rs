@@ -4,9 +4,9 @@
 //! system makes about routing, membership, failure handling, replication
 //! targeting and recovery sequencing. Policies are pure state machines so
 //! the discrete-event simulator ([`crate::sim`]) and the real engine
-//! ([`crate::engine`]) drive the exact same logic — the figures in the
-//! paper are properties of these policies plus a timing model, not of
-//! CUDA (see DESIGN.md §1).
+//! (the `engine` module, behind the `pjrt` feature) drive the exact same
+//! logic — the figures in the paper are properties of these policies plus
+//! a timing model, not of CUDA (see `DESIGN.md` §1).
 //!
 //! Mechanism map (paper §3.2 → modules):
 //!

@@ -1,5 +1,6 @@
 //! Real model execution: tokenizer, per-request KV buffers, batch
 //! packing, sampling, and a whole-model driver over the stage runtimes.
+//! Only compiled with the `pjrt` cargo feature.
 //!
 //! Two consumption patterns:
 //!

@@ -5,13 +5,14 @@
 //! Rust + JAX + Pallas stack. This crate is **Layer 3**: the serving
 //! coordinator and every substrate it depends on. Layers 2 (JAX model) and
 //! 1 (Pallas kernels) live in `python/` and are AOT-lowered once to
-//! `artifacts/*.hlo.txt`; the [`runtime`] module loads them through the
-//! XLA PJRT C API so Python is never on the request path.
+//! `artifacts/*.hlo.txt`; the `runtime` module (behind the `pjrt` cargo
+//! feature) loads them through the XLA PJRT C API so Python is never on
+//! the request path.
 //!
 //! The paper's three mechanisms map onto:
 //!
 //! * **Decoupled model-parallelism initialization** — [`comm`] provides the
-//!   MPICH-style `open_port`/`connect`/`intercomm_merge` primitives and
+//!   MPICH-style open-port/connect/merge primitives and
 //!   [`coordinator::recovery`] uses them to re-form a pipeline's
 //!   communicator around a failed node without reloading weights.
 //! * **Dynamic traffic rerouting** — [`coordinator::reroute`] keeps a
@@ -27,15 +28,30 @@
 //! * [`sim`] — a discrete-event cluster simulator (virtual clock, network
 //!   and compute model, fault injection) that regenerates every figure and
 //!   table of the paper's evaluation (see `DESIGN.md` §4).
-//! * [`engine`] + [`runtime`] — real token generation through the AOT
-//!   artifacts on the PJRT CPU client, used by the end-to-end examples.
+//! * `engine` + `runtime` (with `--features pjrt`) — real token generation
+//!   through the AOT artifacts on the PJRT CPU client, used by the
+//!   end-to-end examples.
+//!
+//! ## Cargo features
+//!
+//! * **default (no features)** — the sim-only build: [`sim`],
+//!   [`coordinator`], [`comm`], [`kvcache`], [`workload`], [`metrics`],
+//!   [`bench`] and [`config`]. No native dependencies; `cargo test`
+//!   exercises the simulator, the coordinator policies, the comm
+//!   primitives and the property tests out of the box.
+//! * **`pjrt`** — additionally compiles `runtime` and `engine` (which
+//!   depend on the `xla` crate and, at run time, on the AOT artifacts
+//!   produced by `python/compile/aot.py`), plus the `generate` /
+//!   `inspect-artifacts` CLI subcommands and the e2e examples.
 
 pub mod comm;
 pub mod config;
 pub mod coordinator;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod kvcache;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod workload;

@@ -1,16 +1,18 @@
 //! `kevlarflow` CLI: run experiments, inspect artifacts, and generate
 //! with the real (AOT-compiled) model.
 //!
+//! The `bench` subcommand only needs the simulator and works in the
+//! default (sim-only) build; `generate` and `inspect-artifacts` drive the
+//! PJRT runtime and require building with `--features pjrt`.
+//!
 //! Usage:
 //!   kevlarflow bench <fig3|fig4|fig6|fig7|fig8|fig9|table1|tpot|all> [--scene N]
-//!   kevlarflow generate [PROMPT] [--n TOKENS]
-//!   kevlarflow inspect-artifacts
+//!   kevlarflow generate [PROMPT] [--n TOKENS]     (requires --features pjrt)
+//!   kevlarflow inspect-artifacts                  (requires --features pjrt)
 
 use anyhow::{bail, Result};
 
 use kevlarflow::bench;
-use kevlarflow::engine::{ByteTokenizer, ModelEngine};
-use kevlarflow::runtime::Runtime;
 
 const USAGE: &str = "\
 kevlarflow — fault-tolerant LLM serving (KevlarFlow reproduction)
@@ -20,6 +22,9 @@ USAGE:
       EXPERIMENT: fig3 fig4 fig6 fig7 fig8 fig9 table1 tpot all
   kevlarflow generate [PROMPT] [--n TOKENS]   greedy-generate with the AOT model
   kevlarflow inspect-artifacts                print the artifact manifest
+
+`generate` and `inspect-artifacts` need a binary built with
+`--features pjrt` plus the artifacts produced by python/compile/aot.py.
 ";
 
 fn main() -> Result<()> {
@@ -103,7 +108,11 @@ fn run_bench(which: &str, scene: Option<u8>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn generate(prompt: &str, n: usize) -> Result<()> {
+    use kevlarflow::engine::{ByteTokenizer, ModelEngine};
+    use kevlarflow::runtime::Runtime;
+
     let rt = Runtime::cpu_default()?;
     println!(
         "loading {} stages ({} artifacts)…",
@@ -126,7 +135,15 @@ fn generate(prompt: &str, n: usize) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn generate(_prompt: &str, _n: usize) -> Result<()> {
+    bail!("`generate` drives the PJRT runtime; rebuild with `--features pjrt`")
+}
+
+#[cfg(feature = "pjrt")]
 fn inspect() -> Result<()> {
+    use kevlarflow::runtime::Runtime;
+
     let rt = Runtime::cpu_default()?;
     let m = &rt.manifest;
     println!("preset: {} (seed {})", m.preset, m.seed);
@@ -158,4 +175,9 @@ fn inspect() -> Result<()> {
         m.goldens.prompt, m.goldens.greedy_tokens
     );
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn inspect() -> Result<()> {
+    bail!("`inspect-artifacts` reads the PJRT artifact manifest; rebuild with `--features pjrt`")
 }

@@ -1,5 +1,7 @@
 //! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
 //! `weights.npz`) and executes stage computations from the Rust hot path.
+//! Only compiled with the `pjrt` cargo feature (it is the one module,
+//! together with [`crate::engine`], that needs the native `xla` crate).
 //!
 //! This is the boundary that keeps Python off the request path: artifacts
 //! are HLO *text* (see `python/compile/aot.py` for why text, not

@@ -1,11 +1,15 @@
 //! Discrete-event cluster simulator.
 //!
 //! Substitutes for the paper's two geo-distributed A10 clusters (see
-//! DESIGN.md §1): virtual time, FIFO stage servers with a calibrated
-//! compute model, a WAN latency/bandwidth model, fault injection, and the
-//! full serving semantics (continuous batching, paged KV accounting,
-//! replication, rerouting, recovery) driven by the *same* coordinator
-//! policies as the real engine.
+//! `DESIGN.md` §1): virtual time, FIFO stage servers with a calibrated
+//! compute model ([`crate::config::SimTimingConfig`]), a WAN
+//! latency/bandwidth model ([`crate::config::ClusterConfig`]), fault
+//! injection, and the full serving semantics (continuous batching, paged
+//! KV accounting via [`crate::kvcache`], replication, rerouting,
+//! recovery) driven by the *same* [`crate::coordinator`] policies as the
+//! real engine. Build a run with [`ClusterSim::new`] from an
+//! [`crate::config::ExperimentConfig`] and execute it with
+//! [`ClusterSim::run`].
 //!
 //! ## Timing model (calibrated to the paper's §4.1 baselines)
 //!
@@ -23,9 +27,10 @@
 //!
 //! ## Failure semantics
 //!
-//! `FaultPolicy::Standard` — a node failure takes its whole pipeline out;
-//! in-flight requests retry from scratch elsewhere; the pipeline returns
-//! after `baseline_mttr_s` (600 s). `FaultPolicy::KevlarFlow` — detect →
+//! [`FaultPolicy::Standard`](crate::config::FaultPolicy::Standard) — a
+//! node failure takes its whole pipeline out; in-flight requests retry
+//! from scratch elsewhere; the pipeline returns after `baseline_mttr_s`
+//! (600 s). [`FaultPolicy::KevlarFlow`](crate::config::FaultPolicy::KevlarFlow) — detect →
 //! donor → decoupled re-form (~30 s, during which the pipeline is paused)
 //! → degraded serving through the donor + promotion of replicated KV,
 //! with a background replacement after `baseline_mttr_s`.

@@ -2,11 +2,12 @@
 //! samples from, and a ShareGPT-like request trace generator.
 //!
 //! The paper replays ShareGPT prompts with Poisson arrivals (§4). The
-//! dataset itself is not redistributable here, so `sharegpt_like` samples
-//! from log-normal prompt/output length distributions fitted to published
-//! ShareGPT serving statistics (prompt ≈ 205 tokens mean, output ≈ 390
-//! tokens mean — the latter also reconciles the paper's RPS=1 latency of
-//! ~64 s with its 163 ms TPOT). See DESIGN.md §1.
+//! dataset itself is not redistributable here, so
+//! [`WorkloadSpec::sharegpt_like`] samples from log-normal prompt/output
+//! length distributions fitted to published ShareGPT serving statistics
+//! (prompt ≈ 192 tokens mean, output ≈ 390 tokens mean — the latter also
+//! reconciles the paper's RPS=1 latency of ~64 s with its 163 ms TPOT).
+//! See `DESIGN.md` §1.
 
 mod rng;
 pub use rng::Pcg32;

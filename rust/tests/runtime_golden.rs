@@ -5,12 +5,19 @@
 //! These tests isolate the Rust runtime: the goldens were produced by the
 //! *same* kernel-path computation at AOT time, so any mismatch here is a
 //! loading/ABI/packing bug, not a model bug.
+//!
+//! Requires `--features pjrt` (enforced by the manifest's
+//! `required-features`; the inner cfg below keeps the file inert even if
+//! target auto-discovery ever picks it up) and `artifacts/` built by
+//! python/compile/aot.py.
+
+#![cfg(feature = "pjrt")]
 
 use kevlarflow::engine::{pack_kv_batch, unpack_kv_batch, KvBuf, ModelEngine};
 use kevlarflow::runtime::Runtime;
 
 fn engine() -> ModelEngine {
-    let rt = Runtime::cpu_default().expect("artifacts present (make artifacts)");
+    let rt = Runtime::cpu_default().expect("artifacts present (run python/compile/aot.py)");
     ModelEngine::load(&rt).expect("stage load")
 }
 

@@ -1,0 +1,54 @@
+//! Feature-split smoke test: the DEFAULT (sim-only) build must expose the
+//! whole simulation substrate — cluster presets, experiment config, fault
+//! injection and KevlarFlow recovery — with no PJRT/xla dependency.
+//!
+//! This file intentionally compiles without `--features pjrt`; if a
+//! refactor accidentally moves any of these items behind the `pjrt` gate
+//! (or drags an xla dependency into the sim path), tier-1
+//! (`cargo test -q`) fails right here.
+
+use kevlarflow::config::{ClusterConfig, ExperimentConfig, FaultPolicy, NodeId};
+use kevlarflow::sim::ClusterSim;
+
+#[test]
+fn default_build_runs_sim_with_fault_recovery() {
+    // default 8-node preset, one injected fault, KevlarFlow policy
+    let mut cfg = ExperimentConfig::new(ClusterConfig::paper_8node(), 1.0)
+        .with_policy(FaultPolicy::KevlarFlow)
+        .with_failure(60.0, NodeId::new(0, 2));
+    cfg.arrival_window_s = 180.0;
+
+    let res = ClusterSim::new(cfg).run();
+
+    // recovery completed through the donor path…
+    assert_eq!(res.recovery.completed.len(), 1, "fault must recover");
+    let rec = &res.recovery.completed[0];
+    assert_eq!(rec.failed, NodeId::new(0, 2));
+    assert_eq!(rec.donor.stage, 2, "donor holds the same stage shard");
+    assert_ne!(rec.donor.instance, 0, "donor comes from a sibling instance");
+    assert!(
+        rec.recovery_time_s() < 120.0,
+        "recovery took {:.1}s — decoupled init should be well under 2 min",
+        rec.recovery_time_s()
+    );
+
+    // …and no request was stranded by the failure.
+    assert_eq!(res.incomplete, 0, "all requests must complete");
+    assert!(res.recorder.summary().n > 50, "sim served a real workload");
+}
+
+#[test]
+fn default_build_exposes_coordinator_policies() {
+    // The policy layer (donor selection, replication ring) must be usable
+    // standalone in the sim-only build.
+    use kevlarflow::coordinator::reroute::{select_donor, InstanceHealth};
+    use kevlarflow::coordinator::ReplicationPlanner;
+
+    let cluster = ClusterConfig::paper_16node();
+    let health = InstanceHealth::new(cluster.n_instances);
+    let donor = select_donor(&cluster, &health, NodeId::new(0, 1)).expect("healthy cluster");
+    assert_eq!(donor.stage, 1);
+
+    let planner = ReplicationPlanner::new(&cluster);
+    assert_eq!(planner.edges().count(), cluster.n_nodes());
+}
