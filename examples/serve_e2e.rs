@@ -3,14 +3,21 @@
 //! runtime for its AOT-compiled shard. Requests flow through the comm
 //! substrate (ports/communicators); KV replicates ring-wise in the
 //! background; node (0,2) is killed mid-run; KevlarFlow recovery splices
-//! the donor (1,2) into a fresh communicator epoch and decoding resumes
-//! from the replicated KV.
+//! the donor into a fresh communicator epoch and decoding resumes from
+//! the replicated KV.
+//!
+//! Every coordinator decision — request placement, failover choreography,
+//! donor choice, replica promotion — comes from the SAME
+//! `coordinator::ControlPlane` facade the discrete-event simulator
+//! drives, via the engine's `ControlDriver` failover hooks. This file
+//! only owns mechanisms: the wire protocol, the stage threads, and the
+//! execution of the facade's actions with real communicators.
 //!
 //! Proves every layer composes: Pallas kernels → JAX stages → HLO-text
-//! artifacts → PJRT runtime → comm substrate → coordinator policies.
-//! The run is executed twice (with and without the failure); generated
-//! tokens must be IDENTICAL — the paper's "seamless migration" claim,
-//! checked at token level.
+//! artifacts → PJRT runtime → comm substrate → control plane. The run is
+//! executed twice (with and without the failure); generated tokens must
+//! be IDENTICAL — the paper's "seamless migration" claim, checked at
+//! token level.
 //!
 //! ```sh
 //! python python/compile/aot.py   # writes artifacts/
@@ -23,10 +30,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use kevlarflow::comm::{Communicator, Fabric, Store};
-use kevlarflow::config::{ClusterConfig, Manifest, NodeId};
-use kevlarflow::coordinator::reroute::{select_donor, InstanceHealth, PipelineState};
-use kevlarflow::coordinator::ReplicationPlanner;
-use kevlarflow::engine::{greedy, pack_kv_batch, unpack_kv_batch, ByteTokenizer, KvBuf};
+use kevlarflow::config::{ClusterConfig, Manifest, NodeId, ServingConfig, SimTimingConfig};
+use kevlarflow::coordinator::control::{Action as CpAction, Event as CpEvent};
+use kevlarflow::engine::{
+    greedy, pack_kv_batch, unpack_kv_batch, ByteTokenizer, ControlDriver, KvBuf,
+};
 use kevlarflow::metrics::{Recorder, RequestRecord};
 use kevlarflow::runtime::StageRuntime;
 
@@ -46,7 +54,7 @@ mod wire {
         }
     }
     pub struct Rd<'a>(pub &'a [u8], pub usize);
-    impl<'a> Rd<'a> {
+    impl Rd<'_> {
         pub fn u64(&mut self) -> u64 {
             let x = u64::from_le_bytes(self.0[self.1..self.1 + 8].try_into().unwrap());
             self.1 += 8;
@@ -79,10 +87,13 @@ const T_TOKENS: u64 = 6; // last stage→driver: reqs, tokens
 const T_REPL: u64 = 7; // node→ring target: req, synced, kv data
 const T_REPORT: u64 = 8; // donor→driver after reconfig: promoted reqs
 
-// control-plane messages (std mpsc, per node)
+// node-thread control messages (std mpsc, per node)
 enum Ctl {
     /// Join pipeline `pid` communicator `epoch` as stage rank (1+stage).
     Reconfig { pid: usize, epoch: u64 },
+    /// New ring-replication target from the control plane's replan
+    /// (None = replication suspended for this node).
+    Retarget { target: Option<NodeId> },
     Die,
 }
 
@@ -98,15 +109,28 @@ struct NodeCfg {
     repl_epoch: u64,
     n_nodes: usize,
     ctl: mpsc::Receiver<Ctl>,
-    planner: ReplicationPlanner,
+    /// Initial ring-replication target (the control plane's healthy
+    /// ring); updated at runtime via `Ctl::Retarget`.
+    repl_target: Option<NodeId>,
 }
 
 fn global_rank(id: NodeId) -> usize {
     id.instance * N_STAGES + id.stage
 }
 
+/// Push the control plane's current ring-replication targets to every
+/// node — called after any event that can replan the ring, so the node
+/// side never drifts from the facade's view.
+fn sync_ring(ctl: &ControlDriver, ctls: &HashMap<NodeId, mpsc::Sender<Ctl>>) {
+    for (&id, tx) in ctls {
+        let target = ctl.control_plane().replication_target(id);
+        let _ = tx.send(Ctl::Retarget { target });
+    }
+}
+
 /// One serving node: owns its stage shard, its per-request KV, and its
-/// replica store; speaks the pipeline + replication protocols.
+/// replica store; speaks the pipeline + replication protocols. Pure
+/// mechanism — it executes reconfigurations, it never decides them.
 fn node_main(cfg: NodeCfg, manifest: Arc<Manifest>) -> Result<()> {
     // own PJRT client per node (mirrors one-process-per-GPU deployments)
     let client = Arc::new(xla::PjRtClient::cpu()?);
@@ -126,15 +150,16 @@ fn node_main(cfg: NodeCfg, manifest: Arc<Manifest>) -> Result<()> {
     pipes.insert(
         cfg.id.instance,
         // rank 0 is the driver; stages are ranks 1..=4
-        futures_join(&cfg.fabric, cfg.pipe_epoch, 1 + cfg.id.stage, 1 + N_STAGES),
+        cfg.fabric.join(cfg.pipe_epoch, 1 + cfg.id.stage, 1 + N_STAGES),
     );
-    let repl = futures_join(&cfg.fabric, cfg.repl_epoch, global_rank(cfg.id), cfg.n_nodes);
+    let repl = cfg.fabric.join(cfg.repl_epoch, global_rank(cfg.id), cfg.n_nodes);
     // rendezvous: tell the deployment this node's mailboxes exist
     cfg.store.add("ready", 1);
 
     let mut kv: HashMap<u64, KvBuf> = HashMap::new();
     let mut replicas: HashMap<u64, (u32, KvBuf)> = HashMap::new();
     let mut iters: u64 = 0;
+    let mut repl_target = cfg.repl_target;
 
     let hb_key = format!("hb/{}/{}", cfg.id.instance, cfg.id.stage);
     let mut last_hb = Instant::now() - Duration::from_secs(1);
@@ -145,14 +170,15 @@ fn node_main(cfg: NodeCfg, manifest: Arc<Manifest>) -> Result<()> {
             cfg.store.set(&hb_key, format!("{:?}", Instant::now()).into_bytes());
             last_hb = Instant::now();
         }
-        // control plane
+        // control messages from the deployment
         match cfg.ctl.try_recv() {
             Ok(Ctl::Die) => return Ok(()), // drops comms → peers see PeerGone
             Ok(Ctl::Reconfig { pid, epoch }) => {
-                let comm = futures_join(&cfg.fabric, epoch, 1 + cfg.id.stage, 1 + N_STAGES);
-                // donor: promote replicas whose owner was pipeline `pid`'s
-                // failed node (same stage as us) and report them
-                if pid != cfg.id.instance && last_or_any(true) {
+                let comm = cfg.fabric.join(epoch, 1 + cfg.id.stage, 1 + N_STAGES);
+                // donor side of the control plane's PromoteReplicas: make
+                // the replicated KV primary and report the synced
+                // watermarks so the driver can roll requests back
+                if pid != cfg.id.instance {
                     let mut payload = Vec::new();
                     let promoted: Vec<(u64, u32)> = replicas
                         .iter()
@@ -170,6 +196,7 @@ fn node_main(cfg: NodeCfg, manifest: Arc<Manifest>) -> Result<()> {
                 }
                 pipes.insert(pid, comm);
             }
+            Ok(Ctl::Retarget { target }) => repl_target = target,
             Err(_) => {}
         }
         // replication traffic
@@ -227,7 +254,7 @@ fn node_main(cfg: NodeCfg, manifest: Arc<Manifest>) -> Result<()> {
                         let _ = comm.send(2 + cfg.id.stage, T_HIDDEN_P, p);
                     }
                     // replicate the prefilled KV right away (prompt pages)
-                    flush_replica(&cfg, &repl, &kv, req, seq_len);
+                    flush_replica(repl_target, &repl, &kv, req, seq_len);
                 }
                 T_DECODE | T_HIDDEN_D => {
                     let mut r = wire::Rd(&m.payload, 0);
@@ -293,9 +320,11 @@ fn node_main(cfg: NodeCfg, manifest: Arc<Manifest>) -> Result<()> {
                         let _ = comm.send(2 + cfg.id.stage, T_HIDDEN_D, p);
                     }
                     iters += 1;
+                    // node-side mirror of the control plane's
+                    // FlushReplicas cadence (replication_interval_iters)
                     if iters % FLUSH_EVERY == 0 {
                         for (i, r) in reqs.iter().enumerate() {
-                            flush_replica(&cfg, &repl, &kv, *r, seq_lens[i] as u32 + 1);
+                            flush_replica(repl_target, &repl, &kv, *r, seq_lens[i] as u32 + 1);
                         }
                     }
                 }
@@ -308,22 +337,14 @@ fn node_main(cfg: NodeCfg, manifest: Arc<Manifest>) -> Result<()> {
     }
 }
 
-fn last_or_any(_x: bool) -> bool {
-    true
-}
-
-fn futures_join(fabric: &Fabric, epoch: u64, rank: usize, size: usize) -> Communicator {
-    fabric.join(epoch, rank, size)
-}
-
 fn flush_replica(
-    cfg: &NodeCfg,
+    target: Option<NodeId>,
     repl: &Communicator,
     kv: &HashMap<u64, KvBuf>,
     req: u64,
     synced: u32,
 ) {
-    let Some(target) = cfg.planner.target(cfg.id) else { return };
+    let Some(target) = target else { return };
     let Some(buf) = kv.get(&req) else { return };
     let mut p = Vec::new();
     wire::put_u64(&mut p, req);
@@ -352,7 +373,6 @@ struct PipeDriver {
     prefilling: Option<u64>,
 }
 
-#[allow(clippy::too_many_arguments)]
 fn run_cluster(
     inject_failure: bool,
     prompts: &[(String, usize)],
@@ -361,10 +381,18 @@ fn run_cluster(
     let fabric = Fabric::new();
     let store = Store::new();
     let cluster = ClusterConfig::paper_8node();
-    let planner = ReplicationPlanner::new(&cluster);
     let n_nodes = 2 * N_STAGES;
     let repl_epoch = fabric.new_epoch();
     let pipe_epochs: Vec<u64> = (0..2).map(|_| fabric.new_epoch()).collect();
+
+    // the one coordinator: the same pure facade the simulator drives,
+    // adapted to the wall clock by the engine's failover hooks. The
+    // node-side flush cadence mirrors replication_interval_iters.
+    let serving = ServingConfig {
+        replication_interval_iters: FLUSH_EVERY as u32,
+        ..ServingConfig::default()
+    };
+    let mut ctl = ControlDriver::new(&cluster, &serving, &SimTimingConfig::default(), 42);
 
     // spawn node threads
     let mut ctls: HashMap<NodeId, mpsc::Sender<Ctl>> = HashMap::new();
@@ -382,7 +410,9 @@ fn run_cluster(
                 repl_epoch,
                 n_nodes,
                 ctl: rx,
-                planner: planner.clone(),
+                // the ring target comes from the facade, never a private
+                // planner copy (and is re-synced after every replan)
+                repl_target: ctl.control_plane().replication_target(id),
             };
             let man = manifest.clone();
             handles.push(std::thread::spawn(move || {
@@ -424,25 +454,30 @@ fn run_cluster(
     let mut waiting: Vec<Vec<u64>> = vec![Vec::new(), Vec::new()];
     for (i, (p, max_new)) in prompts.iter().enumerate() {
         let id = i as u64;
-        let instance = i % 2; // round-robin router
         reqs.insert(id, ReqState {
             id,
             prompt: tok.encode(p),
             max_new: *max_new,
             generated: Vec::new(),
-            instance,
+            instance: 0, // placed by the control plane below
             t_arrive: Instant::now(),
             t_first: None,
             t_done: None,
         });
-        waiting[instance].push(id);
+        // the control plane places every request (round-robin over the
+        // serving LB group — no more driver-private routing)
+        for a in ctl.feed(CpEvent::RequestArrived { req: id }) {
+            if let CpAction::Dispatch { req, instance } = a {
+                reqs.get_mut(&req).unwrap().instance = instance;
+                waiting[instance].push(req);
+            }
+        }
     }
 
     let t_start = Instant::now();
     let mut fail_at: Option<Instant> = None;
     let mut recovered_in: Option<Duration> = None;
     let dead_node = NodeId::new(0, 2);
-    let mut health = InstanceHealth::new(2);
     let mut recovering = false;
 
     loop {
@@ -464,37 +499,61 @@ fn run_cluster(
             if tokens0 >= 6 {
                 ctls[&dead_node].send(Ctl::Die).ok();
                 fail_at = Some(Instant::now());
-                health.dead.push(dead_node);
                 println!("  !! node {dead_node} killed at t={:.2?}", t_start.elapsed());
             }
         }
 
-        // failure detection via heartbeat staleness + PeerGone would both
-        // work; the driver notices the stalled pipeline by timeout on its
-        // in-flight pass (checked below through heartbeats):
+        // the driver notices the stalled pipeline (timeout on its
+        // in-flight pass) and reports the heartbeat miss; EVERYTHING that
+        // follows — donor choice, reroute of queued requests, the
+        // communicator re-formation plan — is the control plane's call
         if let (Some(t), false) = (fail_at, recovering) {
             if t.elapsed() > Duration::from_millis(300) {
                 recovering = true;
-                // decoupled re-formation: survivors + donor join a fresh epoch
-                let donor = select_donor(&cluster, &health, dead_node).expect("donor");
-                let epoch = fabric.new_epoch();
-                for s in 0..N_STAGES {
-                    let target = if s == dead_node.stage {
-                        donor
-                    } else {
-                        NodeId::new(0, s)
-                    };
-                    ctls[&target].send(Ctl::Reconfig { pid: 0, epoch }).ok();
+                let actions = ctl.feed(CpEvent::HeartbeatMissed { node: dead_node });
+                let mut reformed = false;
+                for a in actions {
+                    match a {
+                        CpAction::DropEpoch { instance } => {
+                            drivers[instance].inflight = false;
+                            drivers[instance].prefilling = None;
+                        }
+                        CpAction::Evict { instance, .. } => {
+                            // queued requests reroute to healthy siblings
+                            // immediately; in-flight ones wait for the donor
+                            for req in std::mem::take(&mut waiting[instance]) {
+                                for d in ctl.feed(CpEvent::RequestDisplaced { req }) {
+                                    if let CpAction::Dispatch { req, instance } = d {
+                                        reqs.get_mut(&req).unwrap().instance = instance;
+                                        waiting[instance].push(req);
+                                    }
+                                }
+                            }
+                        }
+                        CpAction::SpliceDonor { donor, .. } => {
+                            println!("  !! control plane spliced donor {donor} into pipeline 0");
+                        }
+                        CpAction::ReformCommunicator { instance, members } => {
+                            // decoupled re-formation: survivors + donor
+                            // join a fresh epoch; the driver re-joins as
+                            // rank 0
+                            let epoch = fabric.new_epoch();
+                            for m in &members {
+                                ctls[m].send(Ctl::Reconfig { pid: instance, epoch }).ok();
+                            }
+                            drivers[instance].comm = fabric.join(epoch, 0, 1 + N_STAGES);
+                            reformed = true;
+                        }
+                        // modeled deadlines — the real engine resumes on
+                        // ground truth (the donor's report) instead
+                        CpAction::StartTimer { .. } => {}
+                        _ => {}
+                    }
                 }
-                health.donations.insert(donor, 0);
-                health.states[0] = PipelineState::Degraded {
-                    failed_stage: dead_node.stage,
-                    donor,
-                };
-                drivers[0].comm = fabric.join(epoch, 0, 1 + N_STAGES);
-                drivers[0].inflight = false;
-                drivers[0].prefilling = None;
-                // wait for the donor's replica report to resume requests
+                anyhow::ensure!(reformed, "control plane did not re-form pipeline 0");
+                sync_ring(&ctl, &ctls);
+                // wait for the donor's replica report, the ground truth
+                // that the re-formed pipeline is live
                 let report = loop {
                     if let Some(m) = drivers[0].comm.try_recv() {
                         if m.tag == T_REPORT {
@@ -511,31 +570,43 @@ fn run_cluster(
                     let s = r.u32();
                     synced.insert(id, s);
                 }
-                // roll running requests back to the replicated watermark
-                let run0 = drivers[0].running.clone();
-                drivers[0].running.clear();
-                for id in run0 {
-                    let rq = reqs.get_mut(&id).unwrap();
-                    match synced.get(&id) {
-                        Some(&s) if s as usize > rq.prompt.len() => {
-                            rq.generated.truncate(s as usize - rq.prompt.len());
-                            drivers[0].running.push(id);
-                        }
-                        _ => {
-                            // replica missing/stale: full recompute via prefill
-                            rq.generated.clear();
-                            waiting[0].insert(0, id);
+                // recovery completed ahead of the modeled phase budget:
+                // tell the facade, then execute its promotion decision
+                for a in ctl.feed(CpEvent::RecoveryElapsed { instance: 0 }) {
+                    if !matches!(a, CpAction::PromoteReplicas { .. }) {
+                        continue;
+                    }
+                    // roll running requests back to the replicated
+                    // watermark; replica-less ones recompute via prefill
+                    let run0 = std::mem::take(&mut drivers[0].running);
+                    for id in run0 {
+                        let rq = reqs.get_mut(&id).unwrap();
+                        match synced.get(&id) {
+                            Some(&s) if s as usize > rq.prompt.len() => {
+                                rq.generated.truncate(s as usize - rq.prompt.len());
+                                drivers[0].running.push(id);
+                            }
+                            _ => {
+                                rq.generated.clear();
+                                waiting[0].insert(0, id);
+                            }
                         }
                     }
                 }
+                sync_ring(&ctl, &ctls);
                 recovered_in = Some(fail_at.unwrap().elapsed());
                 println!(
-                    "  !! recovery complete in {:.2?}: donor {donor} spliced into pipeline 0, \
-                     {} requests resumed from replicas",
+                    "  !! recovery complete in {:.2?}: {} requests resumed from replicas",
                     recovered_in.unwrap(),
                     drivers[0].running.len()
                 );
             }
+        }
+
+        // fire any modeled control-plane deadlines that came due (stale
+        // ones — e.g. the recovery budget we beat above — are no-ops)
+        for ev in ctl.due() {
+            let _ = ctl.feed(ev);
         }
 
         // drive both pipelines
@@ -558,6 +629,7 @@ fn run_cluster(
                         drivers[pid].prefilling = None;
                         if rq.generated.len() >= rq.max_new {
                             rq.t_done = Some(Instant::now());
+                            ctl.feed(CpEvent::RequestCompleted { req: id });
                         } else {
                             drivers[pid].running.push(id);
                         }
@@ -566,6 +638,7 @@ fn run_cluster(
                         let mut r = wire::Rd(&m.payload, 0);
                         let n = r.u32() as usize;
                         drivers[pid].inflight = false;
+                        ctl.feed(CpEvent::PassCompleted { instance: pid, decode: true });
                         for _ in 0..n {
                             let id = r.u64();
                             let t = r.u32();
@@ -574,6 +647,7 @@ fn run_cluster(
                             if rq.generated.len() >= rq.max_new {
                                 rq.t_done = Some(Instant::now());
                                 drivers[pid].running.retain(|&x| x != id);
+                                ctl.feed(CpEvent::RequestCompleted { req: id });
                             }
                         }
                     }
@@ -581,29 +655,27 @@ fn run_cluster(
                 }
             }
             // issue work: one prefill at a time + one decode pass in flight
-            if drivers[pid].prefilling.is_none() {
-                if let Some(pos) = waiting[pid]
+            if drivers[pid].prefilling.is_none()
+                && !waiting[pid].is_empty()
+                && drivers[pid].running.len() < MAX_BATCH
+            {
+                let id = waiting[pid].remove(0);
+                let rq = &reqs[&id];
+                let ctx: Vec<u32> = rq
+                    .prompt
                     .iter()
-                    .position(|_| drivers[pid].running.len() < MAX_BATCH)
-                {
-                    let id = waiting[pid].remove(pos);
-                    let rq = &reqs[&id];
-                    let ctx: Vec<u32> = rq
-                        .prompt
-                        .iter()
-                        .copied()
-                        .chain(rq.generated.iter().copied())
-                        .collect();
-                    let bucket = if ctx.len() <= 16 { 16 } else { 32 };
-                    let mut p = Vec::new();
-                    wire::put_u64(&mut p, id);
-                    wire::put_u32(&mut p, ctx.len() as u32);
-                    wire::put_u32(&mut p, bucket as u32);
-                    let tf: Vec<f32> = ctx.iter().map(|&t| t as f32).collect();
-                    wire::put_f32s(&mut p, &tf);
-                    let _ = drivers[pid].comm.send(1, T_PREFILL, p);
-                    drivers[pid].prefilling = Some(id);
-                }
+                    .copied()
+                    .chain(rq.generated.iter().copied())
+                    .collect();
+                let bucket = if ctx.len() <= 16 { 16 } else { 32 };
+                let mut p = Vec::new();
+                wire::put_u64(&mut p, id);
+                wire::put_u32(&mut p, ctx.len() as u32);
+                wire::put_u32(&mut p, bucket as u32);
+                let tf: Vec<f32> = ctx.iter().map(|&t| t as f32).collect();
+                wire::put_f32s(&mut p, &tf);
+                let _ = drivers[pid].comm.send(1, T_PREFILL, p);
+                drivers[pid].prefilling = Some(id);
             }
             if !drivers[pid].inflight && !drivers[pid].running.is_empty() {
                 let batch: Vec<u64> =
@@ -630,7 +702,7 @@ fn run_cluster(
     }
 
     // shut everything down
-    for (_, tx) in ctls {
+    for tx in ctls.into_values() {
         let _ = tx.send(Ctl::Die);
     }
     for h in handles {
@@ -701,10 +773,7 @@ fn main() -> Result<()> {
         if got != want {
             ok = false;
         }
-        println!(
-            "   req {id}: {line} {:?}",
-            tok.decode(got)
-        );
+        println!("   req {id}: {line} {:?}", tok.decode(got));
     }
     anyhow::ensure!(ok, "outputs diverged after failover — replication broken");
     println!("\nALL OUTPUTS IDENTICAL ACROSS FAILOVER — seamless migration verified.");

@@ -200,6 +200,17 @@ pub struct SimTimingConfig {
     pub prefill_stage_per_token_ms: f64,
     /// Failure-detection time (s): heartbeat timeout as seen end-to-end.
     pub detect_s: f64,
+    /// LocateDonor phase base time (s) when only one donor candidate
+    /// exists: the LB-group store query serializes with the verification
+    /// handshake (the 8-node testbed's case — why the paper measures 35 s
+    /// there vs ~30 s on 16 nodes).
+    pub locate_single_s: f64,
+    /// LocateDonor phase base time (s) with multiple candidates (queries
+    /// fan out in parallel).
+    pub locate_multi_s: f64,
+    /// Extra communicator-reform serialization cost (s) paid when there
+    /// was a single donor candidate (no pipelined health verification).
+    pub reform_single_extra_s: f64,
     /// Decoupled communicator re-formation (s): open_port + N connects +
     /// intercomm merges over WAN + health verification (§3.3, Fig 8).
     pub comm_reform_s: f64,
@@ -224,6 +235,9 @@ impl Default for SimTimingConfig {
             prefill_stage_base_ms: 15.0,
             prefill_stage_per_token_ms: 0.15,
             detect_s: 4.0,
+            locate_single_s: 2.5,
+            locate_multi_s: 0.8,
+            reform_single_extra_s: 2.0,
             comm_reform_s: 24.0,
             resume_s: 2.0,
             repl_tax: 0.005,

@@ -1,0 +1,759 @@
+//! The substrate-agnostic control plane — the coordinator's single public
+//! entry point.
+//!
+//! [`ControlPlane`] is a pure, deterministic state machine over a typed
+//! event/action interface: substrates (the discrete-event simulator, the
+//! PJRT engine) translate what *happened* into an [`Event`], call
+//! [`ControlPlane::handle`], and execute the returned [`Action`]s with
+//! whatever mechanism they own (virtual timers and abstract KV accounting
+//! in the sim; real communicator epochs, node threads and KV buffers in
+//! the engine). Every policy decision the paper describes — round-robin
+//! routing, donor selection, decoupled re-formation sequencing, ring
+//! replication cadence, replica promotion, replacement swap-in — is made
+//! *here and only here*, so a new failure mode is a new `Event` variant,
+//! not a second implementation.
+//!
+//! Purity contract: `handle(now, event)` reads nothing but its own state
+//! and arguments (its only randomness is an internal PRNG seeded at
+//! construction), so an identical event trace replayed into a fresh
+//! `ControlPlane` with the same configuration and seed reproduces the
+//! identical action trace. `rust/tests/coordinator_props.rs` and the
+//! sim-vs-replay test in `rust/tests/sim_behavior.rs` pin this.
+//!
+//! ```
+//! use kevlarflow::config::{ClusterConfig, ServingConfig, SimTimingConfig};
+//! use kevlarflow::coordinator::control::{Action, ControlPlane, Event};
+//!
+//! let cluster = ClusterConfig::paper_8node();
+//! let mut cp = ControlPlane::new(
+//!     &cluster,
+//!     &ServingConfig::default(),
+//!     &SimTimingConfig::default(),
+//!     42,
+//! );
+//! // a request reaches the front door: the control plane places it
+//! let actions = cp.handle(0.0, Event::RequestArrived { req: 0 });
+//! assert_eq!(actions, vec![Action::Dispatch { req: 0, instance: 0 }]);
+//! // round-robin over serving instances
+//! let actions = cp.handle(0.1, Event::RequestArrived { req: 1 });
+//! assert_eq!(actions, vec![Action::Dispatch { req: 1, instance: 1 }]);
+//! ```
+//!
+//! A node failure turns into the full KevlarFlow recovery choreography in
+//! one exchange:
+//!
+//! ```
+//! use kevlarflow::config::{ClusterConfig, NodeId, ServingConfig, SimTimingConfig};
+//! use kevlarflow::coordinator::control::{Action, ControlPlane, Event};
+//!
+//! let cluster = ClusterConfig::paper_16node();
+//! let mut cp = ControlPlane::new(
+//!     &cluster,
+//!     &ServingConfig::default(),
+//!     &SimTimingConfig::default(),
+//!     7,
+//! );
+//! let actions = cp.handle(124.0, Event::HeartbeatMissed { node: NodeId::new(0, 2) });
+//! assert!(actions
+//!     .iter()
+//!     .any(|a| matches!(a, Action::SpliceDonor { donor, .. } if donor.stage == 2)));
+//! assert!(actions
+//!     .iter()
+//!     .any(|a| matches!(a, Action::ReformCommunicator { members, .. } if members.len() == 4)));
+//! ```
+
+use std::collections::HashMap;
+
+use crate::config::{ClusterConfig, FaultPolicy, NodeId, ServingConfig, SimTimingConfig};
+use crate::workload::Pcg32;
+
+use super::recovery::{RecoveryManager, RecoveryPlan, RecoveryRecord};
+use super::replication::ReplicationPlanner;
+use super::reroute::{select_donor, InstanceHealth, PipelineState};
+use super::router::{InstanceView, Router};
+
+/// Something that happened on the substrate, reported to the control
+/// plane. Times are carried by the `now_s` argument of
+/// [`ControlPlane::handle`]; events are substrate-agnostic facts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A new request reached the front door and needs a placement.
+    RequestArrived { req: u64 },
+    /// A request displaced by a failure (after the driver executed an
+    /// [`Action::Evict`]) needs a new placement. Routed least-loaded so a
+    /// rerouted backlog does not dogpile one instance.
+    RequestDisplaced { req: u64 },
+    /// A dispatched request finished (all output tokens emitted).
+    RequestCompleted { req: u64 },
+    /// One pipeline pass finished traversing the stages. Decode passes
+    /// drive the background-replication cadence.
+    PassCompleted { instance: usize, decode: bool },
+    /// The substrate finished replicating `req`'s context up to `tokens`
+    /// to its ring targets (the watermark that survives a failover).
+    ReplicaSynced { req: u64, tokens: u32 },
+    /// The membership layer declared `node` dead (heartbeat timeout).
+    HeartbeatMissed { node: NodeId },
+    /// The recovery phases (locate → re-form → restore → resume) for
+    /// `instance` completed on the substrate.
+    RecoveryElapsed { instance: usize },
+    /// The background replacement node for `instance`'s failed slot is
+    /// provisioned and ready to swap in.
+    NodeProvisioned { instance: usize },
+    /// A fully re-initialized pipeline (standard fault behavior) is back.
+    InstanceRejoined { instance: usize },
+}
+
+/// Which of an instance's requests an [`Action::Evict`] displaces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictScope {
+    /// Running + queued (standard fault behavior: the pipeline is gone).
+    All,
+    /// Queued only (KevlarFlow: in-flight requests wait for the donor,
+    /// queued ones reroute to healthy siblings immediately).
+    Queued,
+}
+
+/// What happens to a displaced request's progress.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResetMode {
+    /// Progress is lost: the request restarts from scratch (counts a
+    /// retry).
+    Restart,
+    /// Progress is kept; only the placement changes.
+    KeepProgress,
+}
+
+/// A deadline the substrate must schedule; when it fires, feed
+/// [`Wake::event`] back into [`ControlPlane::handle`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Wake {
+    /// The modeled recovery phases for `instance` have elapsed.
+    RecoveryElapsed { instance: usize },
+    /// The background replacement node for `instance` is provisioned.
+    NodeProvisioned { instance: usize },
+    /// The full re-initialization of `instance` (standard fault behavior)
+    /// is done.
+    InstanceRejoined { instance: usize },
+}
+
+impl Wake {
+    /// The event a driver feeds back when this wake-up fires.
+    pub fn event(self) -> Event {
+        match self {
+            Wake::RecoveryElapsed { instance } => Event::RecoveryElapsed { instance },
+            Wake::NodeProvisioned { instance } => Event::NodeProvisioned { instance },
+            Wake::InstanceRejoined { instance } => Event::InstanceRejoined { instance },
+        }
+    }
+}
+
+/// A decision the substrate must execute.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Enqueue `req` on `instance`'s scheduler. During a total outage the
+    /// placement is a parking spot: the instance serves it on rejoin.
+    Dispatch { req: u64, instance: usize },
+    /// Advance `instance`'s pipeline epoch: in-flight passes are stale
+    /// and must be dropped; aborted prefills re-enter the queue head.
+    DropEpoch { instance: usize },
+    /// Displace requests from `instance` per `scope`/`reset`; the driver
+    /// releases their substrate state and reports each back via
+    /// [`Event::RequestDisplaced`] for a new placement.
+    Evict { instance: usize, scope: EvictScope, reset: ResetMode },
+    /// Replication cadence hit: stream `instance`'s newest KV blocks to
+    /// the ring targets.
+    FlushReplicas { instance: usize },
+    /// Route `instance`'s traffic for `failed`'s stage through `donor`
+    /// (the same-stage node of a sibling instance).
+    SpliceDonor { instance: usize, failed: NodeId, donor: NodeId },
+    /// Decoupled re-formation: `members` (survivors + donor, in stage
+    /// order) open/connect/merge into a fresh communicator epoch.
+    ReformCommunicator { instance: usize, members: Vec<NodeId> },
+    /// Promote the replicated KV held on `donor` to primaries so
+    /// `instance`'s in-flight requests resume from their synced
+    /// watermark (requests without a live replica recompute).
+    PromoteReplicas { instance: usize, donor: NodeId },
+    /// The replacement node `fresh` swaps in for `instance`; migrate the
+    /// stage primaries off `donor` and release it.
+    ReleaseDonor { instance: usize, donor: NodeId, fresh: NodeId },
+    /// Schedule `wake` to fire `after_s` seconds from now.
+    StartTimer { after_s: f64, wake: Wake },
+}
+
+/// A failure being recovered on one instance.
+#[derive(Debug, Clone, Copy)]
+struct PendingFailure {
+    /// When the node actually died (detection time minus the heartbeat
+    /// timeout) — the paper's recovery clock starts here.
+    injected_s: f64,
+    /// The failed slot from this instance's perspective.
+    failed: NodeId,
+    /// The donor selected for this recovery (its death before
+    /// `RecoveryElapsed` forces a restart with a fresh donor).
+    donor: NodeId,
+}
+
+/// The coordinator facade: one pure state machine driven by both
+/// substrates. See the module docs for the contract and examples.
+#[derive(Debug, Clone)]
+pub struct ControlPlane {
+    cluster: ClusterConfig,
+    serving: ServingConfig,
+    timing: SimTimingConfig,
+    router: Router,
+    health: InstanceHealth,
+    planner: ReplicationPlanner,
+    recovery: RecoveryManager,
+    /// Recovery-plan jitter stream — the only randomness in the facade.
+    rng: Pcg32,
+    /// Outstanding (dispatched, not completed) requests per instance —
+    /// the load signal for least-loaded re-dispatch.
+    load: Vec<usize>,
+    /// Current placement of every outstanding request.
+    assigned: HashMap<u64, usize>,
+    /// Decode iterations per instance (replication cadence).
+    iters: Vec<u64>,
+    /// Replicated-context watermark per request (from
+    /// [`Event::ReplicaSynced`]) — advisory bookkeeping for drivers.
+    synced: HashMap<u64, u32>,
+    /// In-flight recovery per instance.
+    pending: Vec<Option<PendingFailure>>,
+}
+
+impl ControlPlane {
+    pub fn new(
+        cluster: &ClusterConfig,
+        serving: &ServingConfig,
+        timing: &SimTimingConfig,
+        seed: u64,
+    ) -> Self {
+        let n = cluster.n_instances;
+        Self {
+            cluster: cluster.clone(),
+            serving: serving.clone(),
+            timing: timing.clone(),
+            router: Router::new(),
+            health: InstanceHealth::new(n),
+            planner: ReplicationPlanner::new(cluster),
+            recovery: RecoveryManager::new(),
+            rng: Pcg32::with_stream(seed, 0xc011),
+            load: vec![0; n],
+            assigned: HashMap::new(),
+            iters: vec![0; n],
+            synced: HashMap::new(),
+            pending: vec![None; n],
+        }
+    }
+
+    /// Process one event at time `now_s`, returning the decisions the
+    /// substrate must execute, in order.
+    pub fn handle(&mut self, now_s: f64, event: Event) -> Vec<Action> {
+        match event {
+            Event::RequestArrived { req } => self.route(req, false),
+            Event::RequestDisplaced { req } => {
+                self.synced.remove(&req);
+                self.route(req, true)
+            }
+            Event::RequestCompleted { req } => {
+                if let Some(i) = self.assigned.remove(&req) {
+                    self.load[i] = self.load[i].saturating_sub(1);
+                }
+                self.synced.remove(&req);
+                Vec::new()
+            }
+            Event::PassCompleted { instance, decode } => self.pass_completed(instance, decode),
+            Event::ReplicaSynced { req, tokens } => {
+                self.synced.insert(req, tokens);
+                Vec::new()
+            }
+            Event::HeartbeatMissed { node } => self.node_failed(now_s, node),
+            Event::RecoveryElapsed { instance } => self.recovery_elapsed(now_s, instance),
+            Event::NodeProvisioned { instance } => self.node_provisioned(instance),
+            Event::InstanceRejoined { instance } => self.instance_rejoined(instance),
+        }
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    /// Coordinator-wide health view (states, dead nodes, donations).
+    pub fn health(&self) -> &InstanceHealth {
+        &self.health
+    }
+
+    /// Availability state of one pipeline instance.
+    pub fn state(&self, instance: usize) -> PipelineState {
+        self.health.states[instance]
+    }
+
+    /// Current ring-replication target of `node` (None = suspended).
+    pub fn replication_target(&self, node: NodeId) -> Option<NodeId> {
+        self.planner.target(node)
+    }
+
+    /// Completed recoveries (Fig 8 reporting).
+    pub fn recovery(&self) -> &RecoveryManager {
+        &self.recovery
+    }
+
+    /// Where `req` is currently placed, if outstanding.
+    pub fn assigned_instance(&self, req: u64) -> Option<usize> {
+        self.assigned.get(&req).copied()
+    }
+
+    /// Outstanding requests dispatched to `instance`.
+    pub fn load(&self, instance: usize) -> usize {
+        self.load[instance]
+    }
+
+    /// Replicated-context watermark of `req` (0 if never synced).
+    pub fn synced_tokens(&self, req: u64) -> u32 {
+        self.synced.get(&req).copied().unwrap_or(0)
+    }
+
+    // -------------------------------------------------------------- routing
+
+    fn views(&self) -> Vec<InstanceView> {
+        (0..self.cluster.n_instances)
+            .map(|id| InstanceView {
+                id,
+                serving: self.health.states[id].serving(),
+                load: self.load[id],
+            })
+            .collect()
+    }
+
+    fn route(&mut self, req: u64, least_loaded: bool) -> Vec<Action> {
+        if let Some(prev) = self.assigned.remove(&req) {
+            self.load[prev] = self.load[prev].saturating_sub(1);
+        }
+        let views = self.views();
+        let pick = if least_loaded {
+            self.router.pick_least_loaded(&views)
+        } else {
+            self.router.pick(&views)
+        };
+        // total outage: park at a deterministic DOWN instance's queue; it
+        // serves on rejoin (only reachable when no pipeline serves).
+        let instance = pick.unwrap_or(req as usize % self.cluster.n_instances);
+        self.assigned.insert(req, instance);
+        self.load[instance] += 1;
+        vec![Action::Dispatch { req, instance }]
+    }
+
+    // ---------------------------------------------------------- replication
+
+    fn pass_completed(&mut self, instance: usize, decode: bool) -> Vec<Action> {
+        if !decode {
+            return Vec::new();
+        }
+        self.iters[instance] += 1;
+        let every = self.serving.replication_interval_iters as u64;
+        if self.serving.replication && self.iters[instance] % every == 0 {
+            vec![Action::FlushReplicas { instance }]
+        } else {
+            Vec::new()
+        }
+    }
+
+    // --------------------------------------------------------------- faults
+
+    fn node_failed(&mut self, now_s: f64, node: NodeId) -> Vec<Action> {
+        if self.health.is_dead(node) {
+            return Vec::new();
+        }
+        self.health.dead.push(node);
+        // every pipeline whose traffic traverses this node is affected:
+        // its own instance, plus a borrower it was donating to
+        let mut affected = vec![node.instance];
+        if let Some(&borrower) = self.health.donations.get(&node) {
+            affected.push(borrower);
+        }
+        self.health.donations.remove(&node);
+
+        let mut out = Vec::new();
+        for instance in affected {
+            if !self.health.states[instance].serving() {
+                continue;
+            }
+            out.push(Action::DropEpoch { instance });
+            // from this instance's perspective the hole is at its OWN
+            // slot for the failed stage (for a borrower whose donor died,
+            // that slot was already dead)
+            let local_failed = NodeId::new(instance, node.stage);
+            // a hole at a SECOND stage of an already-degraded pipeline
+            // exceeds the single-donor model: a re-splice would leave the
+            // original hole routed at a dead node forever. Full re-init
+            // guarantees progress.
+            let second_hole = matches!(
+                self.health.states[instance],
+                PipelineState::Degraded { failed_stage, .. } if failed_stage != node.stage
+            );
+            match self.serving.fault_policy {
+                FaultPolicy::KevlarFlow if !second_hole => {
+                    self.kevlar_failover(now_s, instance, local_failed, &mut out)
+                }
+                _ => self.standard_failover(now_s, instance, &mut out),
+            }
+        }
+        self.planner.replan(&self.cluster, &self.health, &[node]);
+        out
+    }
+
+    /// Standard fault behavior: the pipeline leaves the LB group;
+    /// displaced requests retry from scratch on the survivors; a full
+    /// re-initialization returns it after `baseline_mttr_s`.
+    fn standard_failover(&mut self, now_s: f64, instance: usize, out: &mut Vec<Action>) {
+        self.health.states[instance] =
+            PipelineState::Down { until_s: now_s + self.serving.baseline_mttr_s };
+        // release any donor still attached to this pipeline (a KevlarFlow
+        // recovery that fell back here must not strand its donor)
+        self.health.donations.retain(|_, b| *b != instance);
+        self.pending[instance] = None;
+        out.push(Action::Evict {
+            instance,
+            scope: EvictScope::All,
+            reset: ResetMode::Restart,
+        });
+        out.push(Action::StartTimer {
+            after_s: self.serving.baseline_mttr_s,
+            wake: Wake::InstanceRejoined { instance },
+        });
+    }
+
+    /// KevlarFlow: pause, locate donor, decoupled re-form; resume through
+    /// the donor with replicated KV. Falls back to standard behavior when
+    /// no donor exists (e.g. every sibling already degraded).
+    fn kevlar_failover(
+        &mut self,
+        now_s: f64,
+        instance: usize,
+        failed: NodeId,
+        out: &mut Vec<Action>,
+    ) {
+        let n_candidates = (0..self.cluster.n_instances)
+            .filter(|&j| {
+                j != instance
+                    && self.health.states[j] == PipelineState::Active
+                    && !self.health.is_dead(NodeId::new(j, failed.stage))
+                    && !self.health.is_donor(NodeId::new(j, failed.stage))
+            })
+            .count();
+        // resume where the replicas actually live: the failed node has
+        // been streaming its KV to its ring target, so splicing THAT node
+        // (when eligible) lets PromoteReplicas find the blocks. Fall back
+        // to the latency-closest candidate otherwise (paper §3.2).
+        let eligible = |t: NodeId| {
+            t.instance != instance
+                && self.health.states[t.instance] == PipelineState::Active
+                && !self.health.is_dead(t)
+                && !self.health.is_donor(t)
+        };
+        let donor = self
+            .planner
+            .target(failed)
+            .filter(|&t| eligible(t))
+            .or_else(|| select_donor(&self.cluster, &self.health, failed));
+        let Some(donor) = donor else {
+            return self.standard_failover(now_s, instance, out);
+        };
+        let plan = RecoveryPlan::build(
+            &self.cluster,
+            &self.timing,
+            failed,
+            donor,
+            n_candidates,
+            &mut self.rng,
+        );
+        // detection already happened (we are handling HeartbeatMissed);
+        // the remaining service-visible phases run from now.
+        let phases_s: f64 = plan.phases.iter().map(|&(_, d)| d).sum();
+        self.health.states[instance] =
+            PipelineState::Recovering { failed_stage: failed.stage, since_s: now_s };
+        // only requests with in-flight KV must wait for the donor; queued
+        // requests reroute to healthy siblings immediately
+        out.push(Action::Evict {
+            instance,
+            scope: EvictScope::Queued,
+            reset: ResetMode::KeepProgress,
+        });
+        self.pending[instance] =
+            Some(PendingFailure { injected_s: now_s - plan.detect_s, failed, donor });
+        self.health.donations.insert(donor, instance);
+        let members: Vec<NodeId> = (0..self.cluster.n_stages)
+            .map(|s| if s == failed.stage { donor } else { NodeId::new(instance, s) })
+            .collect();
+        out.push(Action::SpliceDonor { instance, failed, donor });
+        out.push(Action::ReformCommunicator { instance, members });
+        out.push(Action::StartTimer {
+            after_s: phases_s,
+            wake: Wake::RecoveryElapsed { instance },
+        });
+        // the replacement provisions from the moment the node died
+        out.push(Action::StartTimer {
+            after_s: self.serving.baseline_mttr_s - plan.detect_s,
+            wake: Wake::NodeProvisioned { instance },
+        });
+    }
+
+    fn recovery_elapsed(&mut self, now_s: f64, instance: usize) -> Vec<Action> {
+        // stale wake-up (the engine may complete real re-formation ahead
+        // of the modeled phase budget and feed the event early)
+        if !matches!(self.health.states[instance], PipelineState::Recovering { .. }) {
+            return Vec::new();
+        }
+        let Some(PendingFailure { injected_s, failed, donor }) = self.pending[instance] else {
+            return Vec::new();
+        };
+        // a second node of this instance died while it was recovering
+        // (its failover was skipped — the pipeline was not serving): two
+        // holes exceed the single-donor model, so full re-init instead
+        let second_hole = self
+            .health
+            .dead
+            .iter()
+            .any(|n| n.instance == instance && n.stage != failed.stage);
+        if second_hole {
+            let mut out = Vec::new();
+            self.standard_failover(now_s, instance, &mut out);
+            return out;
+        }
+        // the planned donor must still be donating to this instance
+        if self.health.donations.get(&donor) != Some(&instance) {
+            // the donor died while recovery was in flight: restart the
+            // recovery with a freshly-selected donor
+            let mut out = Vec::new();
+            self.kevlar_failover(now_s, instance, failed, &mut out);
+            return out;
+        }
+        self.health.states[instance] =
+            PipelineState::Degraded { failed_stage: failed.stage, donor };
+        self.recovery.record(RecoveryRecord {
+            failed,
+            donor,
+            injected_s,
+            detected_s: injected_s + self.timing.detect_s,
+            resumed_s: now_s,
+            replacement_s: injected_s + self.serving.baseline_mttr_s,
+        });
+        self.planner.replan(&self.cluster, &self.health, &[]);
+        vec![Action::PromoteReplicas { instance, donor }]
+    }
+
+    fn node_provisioned(&mut self, instance: usize) -> Vec<Action> {
+        // e.g. the recovery fell back to standard behavior, or a second
+        // failure restarted it — the swap only applies to a Degraded
+        // pipeline
+        let PipelineState::Degraded { failed_stage, donor } = self.health.states[instance] else {
+            return Vec::new();
+        };
+        let fresh = NodeId::new(instance, failed_stage);
+        self.health.donations.remove(&donor);
+        self.health.dead.retain(|&n| n != fresh);
+        self.health.states[instance] = PipelineState::Active;
+        self.pending[instance] = None;
+        self.planner.replan(&self.cluster, &self.health, &[]);
+        vec![Action::ReleaseDonor { instance, donor, fresh }]
+    }
+
+    fn instance_rejoined(&mut self, instance: usize) -> Vec<Action> {
+        self.health.dead.retain(|n| n.instance != instance);
+        self.health.states[instance] = PipelineState::Active;
+        self.planner.replan(&self.cluster, &self.health, &[]);
+        // fresh pipeline, fresh epoch: anything still in flight is stale
+        vec![Action::DropEpoch { instance }]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cp(cluster: ClusterConfig, policy: FaultPolicy) -> ControlPlane {
+        let serving = ServingConfig { fault_policy: policy, ..ServingConfig::default() };
+        ControlPlane::new(&cluster, &serving, &SimTimingConfig::default(), 42)
+    }
+
+    fn timers(actions: &[Action]) -> Vec<Wake> {
+        actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::StartTimer { wake, .. } => Some(*wake),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn routes_round_robin_and_tracks_load() {
+        let mut cp = cp(ClusterConfig::paper_8node(), FaultPolicy::KevlarFlow);
+        for req in 0..4u64 {
+            let a = cp.handle(0.0, Event::RequestArrived { req });
+            assert_eq!(a, vec![Action::Dispatch { req, instance: (req % 2) as usize }]);
+        }
+        assert_eq!(cp.load(0), 2);
+        assert_eq!(cp.load(1), 2);
+        cp.handle(1.0, Event::RequestCompleted { req: 0 });
+        assert_eq!(cp.load(0), 1);
+        assert_eq!(cp.assigned_instance(0), None);
+        assert_eq!(cp.assigned_instance(1), Some(1));
+    }
+
+    #[test]
+    fn replication_cadence_fires_on_interval() {
+        let mut cp = cp(ClusterConfig::paper_8node(), FaultPolicy::KevlarFlow);
+        let every = ServingConfig::default().replication_interval_iters as u64;
+        let mut flushes = 0;
+        for _ in 0..(2 * every) {
+            let a = cp.handle(0.0, Event::PassCompleted { instance: 0, decode: true });
+            flushes += a.len();
+        }
+        assert_eq!(flushes, 2, "one flush per interval");
+        // prefill passes never drive the cadence
+        let a = cp.handle(0.0, Event::PassCompleted { instance: 0, decode: false });
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn kevlar_failover_full_choreography() {
+        let mut cp = cp(ClusterConfig::paper_16node(), FaultPolicy::KevlarFlow);
+        let failed = NodeId::new(0, 2);
+        let a = cp.handle(124.0, Event::HeartbeatMissed { node: failed });
+        assert_eq!(a[0], Action::DropEpoch { instance: 0 });
+        assert_eq!(
+            a[1],
+            Action::Evict {
+                instance: 0,
+                scope: EvictScope::Queued,
+                reset: ResetMode::KeepProgress
+            }
+        );
+        // the failed node's ring-replication target (its same-stage
+        // sibling in the next instance) is the donor — it already holds
+        // the replicated KV
+        let donor = NodeId::new(1, 2);
+        assert_eq!(a[2], Action::SpliceDonor { instance: 0, failed, donor });
+        let Action::ReformCommunicator { members, .. } = &a[3] else {
+            panic!("expected reform, got {:?}", a[3]);
+        };
+        assert_eq!(members[2], donor, "donor fills the failed slot");
+        assert_eq!(members.len(), 4);
+        assert_eq!(
+            timers(&a),
+            vec![Wake::RecoveryElapsed { instance: 0 }, Wake::NodeProvisioned { instance: 0 }]
+        );
+        assert!(matches!(cp.state(0), PipelineState::Recovering { failed_stage: 2, .. }));
+        assert!(cp.health().is_donor(donor));
+
+        // phases elapse → promote replicas, pipeline degraded, recovery
+        // recorded
+        let a = cp.handle(155.0, Event::RecoveryElapsed { instance: 0 });
+        assert_eq!(a, vec![Action::PromoteReplicas { instance: 0, donor }]);
+        assert!(matches!(cp.state(0), PipelineState::Degraded { .. }));
+        let rec = &cp.recovery().completed[0];
+        assert_eq!(rec.failed, failed);
+        assert_eq!(rec.donor, donor);
+        assert!((rec.injected_s - 120.0).abs() < 1e-9);
+        assert!((rec.resumed_s - 155.0).abs() < 1e-9);
+
+        // a duplicate wake-up is ignored (idempotence for real drivers)
+        assert!(cp.handle(156.0, Event::RecoveryElapsed { instance: 0 }).is_empty());
+        assert_eq!(cp.recovery().completed.len(), 1);
+
+        // replacement provisions → donor released, instance Active again
+        let a = cp.handle(720.0, Event::NodeProvisioned { instance: 0 });
+        assert_eq!(a, vec![Action::ReleaseDonor { instance: 0, donor, fresh: failed }]);
+        assert_eq!(cp.state(0), PipelineState::Active);
+        assert!(!cp.health().is_donor(donor));
+        assert!(!cp.health().is_dead(failed));
+    }
+
+    #[test]
+    fn standard_failover_evicts_all_and_rejoins() {
+        let mut cp = cp(ClusterConfig::paper_8node(), FaultPolicy::Standard);
+        let a = cp.handle(100.0, Event::HeartbeatMissed { node: NodeId::new(0, 1) });
+        assert_eq!(a[0], Action::DropEpoch { instance: 0 });
+        assert_eq!(
+            a[1],
+            Action::Evict { instance: 0, scope: EvictScope::All, reset: ResetMode::Restart }
+        );
+        assert_eq!(timers(&a), vec![Wake::InstanceRejoined { instance: 0 }]);
+        assert!(matches!(cp.state(0), PipelineState::Down { .. }));
+        // routing skips the down pipeline
+        let a = cp.handle(101.0, Event::RequestArrived { req: 9 });
+        assert_eq!(a, vec![Action::Dispatch { req: 9, instance: 1 }]);
+        // rejoin restores it
+        let a = cp.handle(700.0, Event::InstanceRejoined { instance: 0 });
+        assert_eq!(a, vec![Action::DropEpoch { instance: 0 }]);
+        assert_eq!(cp.state(0), PipelineState::Active);
+        assert!(!cp.health().is_dead(NodeId::new(0, 1)));
+    }
+
+    #[test]
+    fn kevlar_falls_back_to_standard_without_donor() {
+        // 8-node cluster: kill the same stage in both instances — the
+        // second failure finds no Active sibling and degrades to standard
+        let mut cp = cp(ClusterConfig::paper_8node(), FaultPolicy::KevlarFlow);
+        cp.handle(50.0, Event::HeartbeatMissed { node: NodeId::new(0, 1) });
+        let a = cp.handle(51.0, Event::HeartbeatMissed { node: NodeId::new(1, 1) });
+        assert!(
+            a.contains(&Action::Evict {
+                instance: 1,
+                scope: EvictScope::All,
+                reset: ResetMode::Restart
+            }),
+            "no donor ⇒ standard fallback: {a:?}"
+        );
+        assert!(matches!(cp.state(1), PipelineState::Down { .. }));
+    }
+
+    #[test]
+    fn donor_death_mid_recovery_restarts_with_new_donor() {
+        let mut cp = cp(ClusterConfig::paper_16node(), FaultPolicy::KevlarFlow);
+        let a = cp.handle(124.0, Event::HeartbeatMissed { node: NodeId::new(0, 2) });
+        let donor1 = match a.iter().find(|x| matches!(x, Action::SpliceDonor { .. })) {
+            Some(Action::SpliceDonor { donor, .. }) => *donor,
+            _ => panic!("no splice"),
+        };
+        // the donor dies before recovery completes; its own instance
+        // starts recovering, the borrower's donation is cleared
+        let a = cp.handle(130.0, Event::HeartbeatMissed { node: donor1 });
+        let donor_inst = donor1.instance;
+        assert!(a
+            .iter()
+            .any(|x| matches!(x, Action::DropEpoch { instance } if *instance == donor_inst)));
+        // the borrower's recovery deadline fires: a fresh donor is spliced
+        let a = cp.handle(155.0, Event::RecoveryElapsed { instance: 0 });
+        let donor2 = match a.iter().find(|x| matches!(x, Action::SpliceDonor { .. })) {
+            Some(Action::SpliceDonor { donor, .. }) => *donor,
+            _ => panic!("restart must re-splice: {a:?}"),
+        };
+        assert_ne!(donor2, donor1);
+        assert_eq!(donor2.stage, 2);
+    }
+
+    #[test]
+    fn total_outage_parks_deterministically() {
+        let mut cp = cp(ClusterConfig::paper_8node(), FaultPolicy::Standard);
+        cp.handle(10.0, Event::HeartbeatMissed { node: NodeId::new(0, 0) });
+        cp.handle(10.0, Event::HeartbeatMissed { node: NodeId::new(1, 0) });
+        let a = cp.handle(11.0, Event::RequestArrived { req: 5 });
+        assert_eq!(a, vec![Action::Dispatch { req: 5, instance: 1 }], "parked at req % n");
+    }
+
+    #[test]
+    fn identical_event_streams_produce_identical_actions() {
+        let run = || {
+            let mut cp = cp(ClusterConfig::paper_16node(), FaultPolicy::KevlarFlow);
+            let mut log = Vec::new();
+            for req in 0..20u64 {
+                log.extend(cp.handle(req as f64, Event::RequestArrived { req }));
+            }
+            log.extend(cp.handle(124.0, Event::HeartbeatMissed { node: NodeId::new(0, 2) }));
+            log.extend(cp.handle(155.0, Event::RecoveryElapsed { instance: 0 }));
+            log.extend(cp.handle(160.0, Event::RequestArrived { req: 99 }));
+            log.extend(cp.handle(720.0, Event::NodeProvisioned { instance: 0 }));
+            log
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -2,31 +2,49 @@
 //!
 //! This module holds the *policy* layer: every decision the serving
 //! system makes about routing, membership, failure handling, replication
-//! targeting and recovery sequencing. Policies are pure state machines so
-//! the discrete-event simulator ([`crate::sim`]) and the real engine
-//! (the `engine` module, behind the `pjrt` feature) drive the exact same
-//! logic — the figures in the paper are properties of these policies plus
-//! a timing model, not of CUDA (see `DESIGN.md` §1).
+//! targeting and recovery sequencing. Since PR 2 all of it is fronted by
+//! one facade — [`control::ControlPlane`], a pure deterministic state
+//! machine with a typed event/action interface — and the two substrates
+//! (the discrete-event simulator in [`crate::sim`] and the real engine
+//! behind the `pjrt` feature) are thin drivers of that single facade: the
+//! figures in the paper are properties of these policies plus a timing
+//! model, not of CUDA (see `DESIGN.md` §1–§2).
 //!
 //! Mechanism map (paper §3.2 → modules):
 //!
 //! | Paper mechanism | Module |
 //! |---|---|
+//! | One coordinator, every substrate (event/action facade) | [`control`] |
 //! | Load-balancing group, even distribution | [`router`] |
 //! | Heartbeat failure detection | [`membership`] |
 //! | Dynamic traffic rerouting / partial availability | [`reroute`] |
 //! | Background block-wise KV replication (ring) | [`replication`] |
 //! | Decoupled-init recovery (donor splice, 30 s MTTR) | [`recovery`] |
 //! | Standard-vs-KevlarFlow fault semantics | [`crate::config::FaultPolicy`] |
+//!
+//! The submodules below [`control`] are the facade's internals; they stay
+//! public for property tests and benchmarks, but substrates should only
+//! ever construct a [`ControlPlane`].
 
+pub mod control;
 pub mod membership;
 pub mod recovery;
 pub mod replication;
 pub mod reroute;
 pub mod router;
 
+pub use control::ControlPlane;
 pub use membership::Membership;
 pub use recovery::{RecoveryManager, RecoveryPhase, RecoveryPlan};
 pub use replication::ReplicationPlanner;
 pub use reroute::{select_donor, InstanceHealth, PipelineState};
 pub use router::Router;
+
+/// One-stop imports for driving the coordinator from a substrate:
+/// the facade, its event/action vocabulary, and the read-side types
+/// drivers inspect ([`PipelineState`], [`InstanceHealth`]).
+pub mod prelude {
+    pub use super::control::{Action, ControlPlane, Event, EvictScope, ResetMode, Wake};
+    pub use super::recovery::RecoveryManager;
+    pub use super::reroute::{InstanceHealth, PipelineState};
+}

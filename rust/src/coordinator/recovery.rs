@@ -59,11 +59,16 @@ impl RecoveryPlan {
         rng: &mut Pcg32,
     ) -> Self {
         let rtt_ms = 2.0 * cluster.latency_ms(failed, donor);
-        let locate = if n_donor_candidates <= 1 { 2.5 } else { 0.8 } * rng.lognormal_jitter(0.15);
+        let locate_base = if n_donor_candidates <= 1 {
+            timing.locate_single_s
+        } else {
+            timing.locate_multi_s
+        };
+        let locate = locate_base * rng.lognormal_jitter(0.15);
         // connect handshakes for each survivor + merge barrier, plus the
         // fixed communicator/bootstrap cost.
         let reform = (timing.comm_reform_s
-            + if n_donor_candidates <= 1 { 2.0 } else { 0.0 }
+            + if n_donor_candidates <= 1 { timing.reform_single_extra_s } else { 0.0 }
             + (cluster.n_stages as f64) * 2.0 * rtt_ms / 1000.0)
             * rng.lognormal_jitter(0.08);
         let restore = timing.resume_s * 0.5 * rng.lognormal_jitter(0.2);

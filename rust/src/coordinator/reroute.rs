@@ -87,7 +87,11 @@ pub fn select_donor(
             continue;
         }
         let dist = cluster.latency_ms(cand, failed);
-        if best.map_or(true, |(d, _)| dist < d) {
+        let closer = match best {
+            Some((d, _)) => dist < d,
+            None => true,
+        };
+        if closer {
             best = Some((dist, cand));
         }
     }

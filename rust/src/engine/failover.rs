@@ -1,0 +1,86 @@
+//! Failover hooks for the real engine: [`ControlDriver`] adapts the pure
+//! [`ControlPlane`] facade to wall-clock drivers. The PJRT serving
+//! examples feed it the same events the simulator feeds (arrivals,
+//! completions, decode passes, heartbeat misses) and execute the same
+//! actions with real mechanisms — fresh communicator epochs instead of
+//! simulated timers, KV buffer promotion instead of block accounting.
+//!
+//! Timing semantics differ from the simulator on purpose: the facade's
+//! [`Action::StartTimer`] deadlines are *modeled* phase budgets. A real
+//! engine knows ground truth — it feeds `Event::RecoveryElapsed` the
+//! moment the re-formed communicator actually reports in, which may be
+//! well ahead of the modeled budget. The facade ignores the stale
+//! wake-up when it later fires, so drivers never need to cancel timers.
+
+use std::time::Instant;
+
+use crate::config::{ClusterConfig, ServingConfig, SimTimingConfig};
+use crate::coordinator::control::{Action, ControlPlane, Event, Wake};
+
+/// Wall-clock adapter around [`ControlPlane`] for engine-side drivers.
+pub struct ControlDriver {
+    cp: ControlPlane,
+    origin: Instant,
+    /// (deadline seconds since origin, wake) for modeled timers.
+    timers: Vec<(f64, Wake)>,
+}
+
+impl ControlDriver {
+    pub fn new(
+        cluster: &ClusterConfig,
+        serving: &ServingConfig,
+        timing: &SimTimingConfig,
+        seed: u64,
+    ) -> Self {
+        Self {
+            cp: ControlPlane::new(cluster, serving, timing, seed),
+            origin: Instant::now(),
+            timers: Vec::new(),
+        }
+    }
+
+    /// Seconds since this driver started — the wall-clock `now` fed to
+    /// the pure control plane.
+    pub fn now_s(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+
+    /// Feed one event at the current wall clock. `StartTimer` actions are
+    /// registered internally (poll with [`Self::due`]) and still returned
+    /// so callers can observe the full decision.
+    pub fn feed(&mut self, event: Event) -> Vec<Action> {
+        let now = self.now_s();
+        let actions = self.cp.handle(now, event);
+        for a in &actions {
+            if let Action::StartTimer { after_s, wake } = a {
+                self.timers.push((now + after_s, *wake));
+            }
+        }
+        actions
+    }
+
+    /// Events for wake-ups whose modeled deadline has passed; feed each
+    /// back through [`Self::feed`]. Deadlines already satisfied by a
+    /// ground-truth event (e.g. an early `RecoveryElapsed`) come back as
+    /// no-ops from the facade.
+    pub fn due(&mut self) -> Vec<Event> {
+        let now = self.now_s();
+        let mut due: Vec<(f64, Wake)> = Vec::new();
+        self.timers.retain(|&(t, wake)| {
+            if t <= now {
+                due.push((t, wake));
+                false
+            } else {
+                true
+            }
+        });
+        due.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        due.into_iter().map(|(_, w)| w.event()).collect()
+    }
+
+    /// Read access to the facade (health view, replication targets,
+    /// recovery records).
+    pub fn control_plane(&self) -> &ControlPlane {
+        &self.cp
+    }
+}

@@ -2,15 +2,21 @@
 //! packing, sampling, and a whole-model driver over the stage runtimes.
 //! Only compiled with the `pjrt` cargo feature.
 //!
-//! Two consumption patterns:
+//! Three consumption patterns:
 //!
 //! * [`ModelEngine`] — all stages in one place (quickstart example, golden
 //!   integration tests, single-replica serving).
 //! * the per-stage pieces ([`KvBuf`], [`pack_kv_batch`], …) — used by the
 //!   distributed examples where each node task owns exactly one
 //!   [`StageRuntime`] and KV stays sharded by stage, as in the paper.
+//! * [`ControlDriver`] — the engine's failover hooks: a wall-clock
+//!   adapter around [`crate::coordinator::ControlPlane`], so distributed
+//!   drivers consume the *identical* coordinator facade as the simulator
+//!   instead of reimplementing routing/donor/replication bookkeeping.
 
+mod failover;
 mod tokenizer;
+pub use failover::ControlDriver;
 pub use tokenizer::ByteTokenizer;
 
 use anyhow::{bail, Result};

@@ -127,7 +127,9 @@ impl NodeKv {
                     .iter()
                     .map(|(&k, r)| (k, r.touched_s, r.blocks))
                     .collect();
-                victims.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                // oldest first; id tiebreak keeps eviction order
+                // deterministic across runs (HashMap iteration is not)
+                victims.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
                 for (vid, _, vblocks) in victims {
                     if need <= self.free_blocks() {
                         break;

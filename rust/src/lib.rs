@@ -23,14 +23,16 @@
 //!   replicates KV blocks ring-wise across the load-balancing group on a
 //!   background stream so in-flight requests resume on the donor.
 //!
-//! Two execution substrates share the same coordinator policies:
+//! Two execution substrates drive the *same* coordinator facade —
+//! [`coordinator::ControlPlane`], a pure state machine with a typed
+//! event/action interface (see `DESIGN.md` §2):
 //!
 //! * [`sim`] — a discrete-event cluster simulator (virtual clock, network
 //!   and compute model, fault injection) that regenerates every figure and
 //!   table of the paper's evaluation (see `DESIGN.md` §4).
 //! * `engine` + `runtime` (with `--features pjrt`) — real token generation
 //!   through the AOT artifacts on the PJRT CPU client, used by the
-//!   end-to-end examples.
+//!   end-to-end examples via the engine's `ControlDriver` failover hooks.
 //!
 //! ## Cargo features
 //!
@@ -59,3 +61,4 @@ pub mod workload;
 pub mod bench;
 
 pub use config::{ClusterConfig, FaultPolicy, ServingConfig, SimTimingConfig};
+pub use coordinator::ControlPlane;

@@ -7,6 +7,7 @@
 //!
 //! Usage:
 //!   kevlarflow bench <fig3|fig4|fig6|fig7|fig8|fig9|table1|tpot|all> [--scene N]
+//!   kevlarflow trace [--scene N] [--rps R]        dump the control-plane log
 //!   kevlarflow generate [PROMPT] [--n TOKENS]     (requires --features pjrt)
 //!   kevlarflow inspect-artifacts                  (requires --features pjrt)
 
@@ -20,6 +21,9 @@ kevlarflow — fault-tolerant LLM serving (KevlarFlow reproduction)
 USAGE:
   kevlarflow bench <EXPERIMENT> [--scene N]   regenerate a paper experiment
       EXPERIMENT: fig3 fig4 fig6 fig7 fig8 fig9 table1 tpot all
+  kevlarflow trace [--scene N] [--rps R]      run a failure scenario and print
+                                              the coordinator ControlPlane's
+                                              event → action exchanges
   kevlarflow generate [PROMPT] [--n TOKENS]   greedy-generate with the AOT model
   kevlarflow inspect-artifacts                print the artifact manifest
 
@@ -34,6 +38,17 @@ fn main() -> Result<()> {
             let exp = args.get(1).cloned().unwrap_or_else(|| "all".into());
             let scene = flag_value(&args, "--scene").map(|s| s.parse::<u8>()).transpose()?;
             run_bench(&exp, scene)
+        }
+        Some("trace") => {
+            let scene = flag_value(&args, "--scene")
+                .map(|s| s.parse::<u8>())
+                .transpose()?
+                .unwrap_or(1);
+            let rps = flag_value(&args, "--rps")
+                .map(|s| s.parse::<f64>())
+                .transpose()?
+                .unwrap_or(2.0);
+            trace(scene, rps)
         }
         Some("generate") => {
             let prompt = args
@@ -105,6 +120,57 @@ fn run_bench(which: &str, scene: Option<u8>) -> Result<()> {
         }
         other => bail!("unknown experiment '{other}' (try: fig3 fig6 fig7 fig8 fig9 table1 tpot all)"),
     }
+    Ok(())
+}
+
+/// Run one failure scenario and print the control plane's decision
+/// stream — the coordinator-level view of a recovery, straight from the
+/// `SimResult::control_log` the replay tests consume.
+fn trace(scene: u8, rps: f64) -> Result<()> {
+    use kevlarflow::config::FaultPolicy;
+    use kevlarflow::coordinator::control::{Action, Event};
+    use kevlarflow::sim::ClusterSim;
+
+    let mut cfg = bench::scenario(scene, rps, FaultPolicy::KevlarFlow);
+    cfg.arrival_window_s = 300.0;
+    let res = ClusterSim::new(cfg).run();
+
+    let mut dispatches = 0usize;
+    let mut flushes = 0usize;
+    let mut syncs = 0usize;
+    println!("## control-plane trace — scenario {scene}, RPS {rps:.1} (KevlarFlow)\n");
+    for (t, ev, actions) in &res.control_log {
+        match ev {
+            Event::RequestArrived { .. } | Event::RequestDisplaced { .. } => {
+                dispatches += actions.len();
+            }
+            Event::ReplicaSynced { .. } => syncs += 1,
+            Event::PassCompleted { .. } => {
+                flushes += actions
+                    .iter()
+                    .filter(|a| matches!(a, Action::FlushReplicas { .. }))
+                    .count();
+            }
+            Event::RequestCompleted { .. } => {}
+            // the failure path: print every exchange verbatim
+            _ => {
+                println!("t={t:9.3}s  {ev:?}");
+                for a in actions {
+                    println!("             -> {a:?}");
+                }
+            }
+        }
+    }
+    println!(
+        "\n(plus {dispatches} dispatches, {flushes} replica-flush cadences, \
+         {syncs} replica syncs)"
+    );
+    println!(
+        "served {} requests; recoveries: {}; incomplete: {}",
+        res.recorder.summary().n,
+        res.recovery.completed.len(),
+        res.incomplete
+    );
     Ok(())
 }
 

@@ -5,8 +5,14 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use crate::config::NodeId;
+use crate::coordinator::control::Wake;
 
 /// Everything that can happen in the cluster simulation.
+///
+/// Recovery/rejoin deadlines are no longer sim-specific variants: the
+/// control plane emits [`crate::coordinator::control::Action::StartTimer`]
+/// and the sim schedules the carried [`Wake`] as a [`Event::Control`]
+/// entry, feeding [`Wake::event`] back to the facade when it fires.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
     /// A request from the trace reaches the front door.
@@ -23,12 +29,9 @@ pub enum Event {
     FailureInject { node: NodeId },
     /// The membership layer declares the node dead (heartbeat timeout).
     FailureDetect { node: NodeId },
-    /// KevlarFlow recovery (locate + re-form + restore + resume) done.
-    RecoveryDone { instance: usize },
-    /// The background replacement node is provisioned and swaps in.
-    ReplacementReady { instance: usize },
-    /// Standard fault behavior: full re-init finished, pipeline rejoins.
-    InstanceRejoin { instance: usize },
+    /// A control-plane deadline (recovery phases elapsed, replacement
+    /// provisioned, full re-init finished) fires.
+    Control { wake: Wake },
     /// Periodic utilization sampling.
     Sample,
 }

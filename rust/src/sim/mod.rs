@@ -6,8 +6,11 @@
 //! latency/bandwidth model ([`crate::config::ClusterConfig`]), fault
 //! injection, and the full serving semantics (continuous batching, paged
 //! KV accounting via [`crate::kvcache`], replication, rerouting,
-//! recovery) driven by the *same* [`crate::coordinator`] policies as the
-//! real engine. Build a run with [`ClusterSim::new`] from an
+//! recovery). The simulator is a thin timing/event-queue driver of
+//! [`crate::coordinator::ControlPlane`] — the *same* facade the real
+//! engine drives — and logs every event/action exchange
+//! ([`ControlRecord`]) so a run can be replayed against a fresh facade.
+//! Build a run with [`ClusterSim::new`] from an
 //! [`crate::config::ExperimentConfig`] and execute it with
 //! [`ClusterSim::run`].
 //!
@@ -37,6 +40,7 @@
 
 mod cluster;
 mod events;
+mod state;
 
-pub use cluster::{ClusterSim, SimResult};
+pub use cluster::{ClusterSim, ControlRecord, SimResult};
 pub use events::{Event, EventQueue};

@@ -1,0 +1,475 @@
+//! Substrate state and serving mechanics of the cluster simulation: the
+//! per-request / per-node / per-instance entities plus the pass
+//! scheduling and KV-accounting machinery that executes the control
+//! plane's decisions. Policy lives in
+//! [`crate::coordinator::control::ControlPlane`]; nothing in this file
+//! decides *where* traffic goes or *how* a failure is handled — it only
+//! models how long the decided work takes and what memory it occupies.
+
+use std::collections::VecDeque;
+
+use crate::config::NodeId;
+use crate::coordinator::control::Event as Ctl;
+use crate::kvcache::{KvError, NodeKv};
+use crate::metrics::RequestRecord;
+use crate::workload::Request;
+
+use super::cluster::ClusterSim;
+use super::events::Event;
+
+pub(crate) const SAMPLE_INTERVAL_S: f64 = 10.0;
+
+/// What kind of work a pipeline pass carries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum PassKind {
+    /// Prefill of one request.
+    Prefill { req: usize },
+    /// One decode iteration for the instance's whole running batch.
+    Decode,
+}
+
+/// An in-flight pass traversing the stage servers.
+#[derive(Debug, Clone)]
+pub(crate) struct Pass {
+    pub(crate) instance: usize,
+    pub(crate) kind: PassKind,
+    /// Monotone epoch of the instance's pipeline; passes from a previous
+    /// epoch (pre-failure) are dropped on arrival.
+    pub(crate) epoch: u64,
+}
+
+/// Per-request dynamic state.
+#[derive(Debug, Clone)]
+pub(crate) struct ReqState {
+    pub(crate) spec: Request,
+    /// Decode tokens emitted so far (client-visible).
+    pub(crate) tokens_out: u32,
+    pub(crate) first_token_s: Option<f64>,
+    pub(crate) retries: u32,
+    pub(crate) done: bool,
+    /// Tokens of context that must be recomputed by the next prefill
+    /// pass (0 = fresh request; >0 after preemption/migration).
+    pub(crate) resume_ctx: u32,
+}
+
+impl ReqState {
+    pub(crate) fn new(spec: Request) -> Self {
+        Self {
+            spec,
+            tokens_out: 0,
+            first_token_s: None,
+            retries: 0,
+            done: false,
+            resume_ctx: 0,
+        }
+    }
+
+    pub(crate) fn context_tokens(&self) -> u32 {
+        self.spec.prompt_len + self.tokens_out
+    }
+}
+
+/// Per-node simulated executor: FIFO single server + KV accounting.
+#[derive(Debug)]
+pub(crate) struct NodeSim {
+    pub(crate) id: NodeId,
+    pub(crate) alive: bool,
+    pub(crate) kv: NodeKv,
+    /// (pass index, remaining stage) being serviced, if busy.
+    pub(crate) current: Option<usize>,
+    pub(crate) queue: VecDeque<usize>,
+}
+
+impl NodeSim {
+    pub(crate) fn new(id: NodeId, capacity_blocks: usize, page_size: usize) -> Self {
+        Self {
+            id,
+            alive: true,
+            kv: NodeKv::new(id, capacity_blocks, page_size),
+            current: None,
+            queue: VecDeque::new(),
+        }
+    }
+}
+
+/// Per-instance serving mechanics. Availability state is NOT here — the
+/// control plane owns it ([`ClusterSim`] queries
+/// `ControlPlane::state`); this is only the scheduler bookkeeping.
+#[derive(Debug)]
+pub(crate) struct InstanceSim {
+    pub(crate) waiting: VecDeque<usize>,
+    pub(crate) running: Vec<usize>,
+    /// Is a decode iteration currently traversing the stages?
+    pub(crate) decode_inflight: bool,
+    /// Prefill passes currently in the pipeline.
+    pub(crate) prefills_inflight: usize,
+    /// Requests those passes belong to (recovered on pass abort).
+    pub(crate) prefilling: Vec<usize>,
+    pub(crate) iter_count: u64,
+    pub(crate) epoch: u64,
+    /// Current slow congestion multiplier (redrawn periodically).
+    pub(crate) slow_level: f64,
+    /// The control plane flagged this decode iteration for a replica
+    /// flush (consumed by the decode completion handler).
+    pub(crate) flush_due: bool,
+}
+
+impl Default for InstanceSim {
+    fn default() -> Self {
+        Self {
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            decode_inflight: false,
+            prefills_inflight: 0,
+            prefilling: Vec::new(),
+            iter_count: 0,
+            epoch: 0,
+            slow_level: 1.0,
+            flush_due: false,
+        }
+    }
+}
+
+// ------------------------------------------------------------- mechanics
+//
+// These are `ClusterSim` methods (the type lives in `cluster.rs`); the
+// split keeps the driver file focused on the control-plane exchange and
+// this file on the timing/memory model.
+
+impl ClusterSim {
+    pub(crate) fn node_index(&self, id: NodeId) -> usize {
+        id.instance * self.cfg.cluster.n_stages + id.stage
+    }
+
+    /// The node that actually serves `stage` of `instance` (the donor in
+    /// degraded mode) — read from the control plane's health view.
+    pub(crate) fn effective_node(&self, instance: usize, stage: usize) -> NodeId {
+        use crate::coordinator::PipelineState;
+        match self.cp.state(instance) {
+            PipelineState::Degraded { failed_stage, donor } if failed_stage == stage => donor,
+            _ => NodeId::new(instance, stage),
+        }
+    }
+
+    /// Service time (ms) of `kind` at one stage server.
+    pub(crate) fn service_ms(&mut self, instance: usize, kind: PassKind) -> f64 {
+        let t = &self.cfg.timing;
+        let base = match kind {
+            PassKind::Decode => t.decode_stage_ms,
+            PassKind::Prefill { req } => {
+                let r = &self.reqs[req];
+                // recompute passes redo prompt + kept context
+                let toks = r.spec.prompt_len.max(r.resume_ctx) as f64;
+                t.prefill_stage_base_ms + t.prefill_stage_per_token_ms * toks
+            }
+        };
+        let slow = self.instances[instance].slow_level;
+        base * slow * self.rng.lognormal_jitter(t.jitter_sigma)
+    }
+
+    /// Inter-stage hop latency (ms) from `stage-1`'s server to `stage`'s.
+    pub(crate) fn hop_ms(&self, instance: usize, stage: usize) -> f64 {
+        if stage == 0 {
+            return self.cfg.cluster.intra_dc_latency_ms;
+        }
+        let from = self.effective_node(instance, stage - 1);
+        let to = self.effective_node(instance, stage);
+        self.cfg.cluster.latency_ms(from, to)
+    }
+
+    pub(crate) fn start_pass(&mut self, instance: usize, kind: PassKind) {
+        let epoch = self.instances[instance].epoch;
+        self.passes.push(Pass { instance, kind, epoch });
+        let pass = self.passes.len() - 1;
+        let hop = self.hop_ms(instance, 0) / 1000.0;
+        self.q.push(self.now + hop, Event::PassArrive { pass, stage: 0 });
+    }
+
+    /// Work-conserving scheduler for one instance: admit prefills up to
+    /// the pipeline depth + batch/KV limits, keep one decode iteration in
+    /// flight.
+    pub(crate) fn pump(&mut self, instance: usize) {
+        if !self.cp.state(instance).serving() {
+            return;
+        }
+        // admit waiting prefills
+        while self.instances[instance].prefills_inflight < self.max_prefills {
+            let inst = &self.instances[instance];
+            if inst.waiting.is_empty()
+                || inst.running.len() + inst.prefills_inflight >= self.cfg.serving.max_batch
+            {
+                break;
+            }
+            let req = *self.instances[instance].waiting.front().unwrap();
+            if !self.try_admit_kv(instance, req) {
+                break; // KV pressure: head-of-line waits for space
+            }
+            self.instances[instance].waiting.pop_front();
+            self.instances[instance].prefills_inflight += 1;
+            self.instances[instance].prefilling.push(req);
+            self.start_pass(instance, PassKind::Prefill { req });
+        }
+        // keep decoding
+        let inst = &mut self.instances[instance];
+        if !inst.decode_inflight && !inst.running.is_empty() {
+            inst.decode_inflight = true;
+            self.start_pass(instance, PassKind::Decode);
+        }
+    }
+
+    /// Reserve prompt-context KV on all effective stage nodes.
+    pub(crate) fn try_admit_kv(&mut self, instance: usize, req: usize) -> bool {
+        let ctx = self.reqs[req].spec.prompt_len.max(self.reqs[req].resume_ctx);
+        let id = self.reqs[req].spec.id;
+        let mut grown: Vec<usize> = Vec::with_capacity(self.cfg.cluster.n_stages);
+        for s in 0..self.cfg.cluster.n_stages {
+            let n = self.effective_node(instance, s);
+            let ni = self.node_index(n);
+            match self.nodes[ni].kv.grow_primary(id, ctx) {
+                Ok(_) => grown.push(ni),
+                Err(KvError::OutOfMemory) => {
+                    for &g in &grown {
+                        let _ = self.nodes[g].kv.free_primary(id);
+                    }
+                    return false;
+                }
+                Err(e) => panic!("admit: {e:?}"),
+            }
+        }
+        true
+    }
+
+    pub(crate) fn pass_arrive(&mut self, pass: usize, stage: usize) {
+        let p = &self.passes[pass];
+        if p.epoch != self.instances[p.instance].epoch {
+            return; // stale pass from before a failure
+        }
+        let node = self.effective_node(p.instance, stage);
+        let ni = self.node_index(node);
+        if !self.nodes[ni].alive {
+            // the stage server is gone; the pass stalls here until the
+            // failure is detected and the epoch advances (it is then
+            // dropped). Nothing to schedule.
+            return;
+        }
+        self.nodes[ni].queue.push_back(pass * 16 + stage);
+        self.maybe_serve(ni);
+    }
+
+    pub(crate) fn maybe_serve(&mut self, ni: usize) {
+        if self.nodes[ni].current.is_some() || !self.nodes[ni].alive {
+            return;
+        }
+        let Some(item) = self.nodes[ni].queue.pop_front() else {
+            return;
+        };
+        let (pass, _stage) = (item / 16, item % 16);
+        // stale check at service start too
+        let p = &self.passes[pass];
+        if p.epoch != self.instances[p.instance].epoch {
+            return self.maybe_serve(ni);
+        }
+        let kind = p.kind;
+        let inst = p.instance;
+        let ms = self.service_ms(inst, kind);
+        self.nodes[ni].current = Some(item);
+        self.q.push(self.now + ms / 1000.0, Event::StageDone { node: ni });
+    }
+
+    pub(crate) fn stage_done(&mut self, ni: usize) {
+        let Some(item) = self.nodes[ni].current.take() else {
+            return; // node died mid-service; cleared elsewhere
+        };
+        let (pass, stage) = (item / 16, item % 16);
+        self.maybe_serve(ni);
+
+        let p = self.passes[pass].clone();
+        if p.epoch != self.instances[p.instance].epoch {
+            return;
+        }
+        // background replication overlaps communication with compute on a
+        // separate stream (paper §3.2): it does not occupy the stage
+        // server, but the hand-off of this stage's result waits for the
+        // in-flight block copy — a small additive latency per stage.
+        let repl_extra_s = if self.cfg.serving.replication
+            && self
+                .cp
+                .replication_target(self.effective_node(p.instance, stage))
+                .is_some()
+        {
+            self.cfg.timing.decode_stage_ms * self.cfg.timing.repl_tax
+                / 1000.0
+                / self.cfg.cluster.n_stages as f64
+        } else {
+            0.0
+        };
+        let next = stage + 1;
+        if next < self.cfg.cluster.n_stages {
+            let hop = self.hop_ms(p.instance, next) / 1000.0 + repl_extra_s;
+            self.q.push(self.now + hop, Event::PassArrive { pass, stage: next });
+        } else if repl_extra_s > 0.0 {
+            self.q.push(self.now + repl_extra_s, Event::PassDone { pass });
+        } else {
+            self.finish_pass(pass);
+        }
+    }
+
+    pub(crate) fn finish_pass(&mut self, pass: usize) {
+        let p = self.passes[pass].clone();
+        let instance = p.instance;
+        match p.kind {
+            PassKind::Prefill { req } => {
+                self.instances[instance].prefills_inflight -= 1;
+                self.instances[instance].prefilling.retain(|&r| r != req);
+                let r = &mut self.reqs[req];
+                if !r.done {
+                    if r.first_token_s.is_none() {
+                        r.first_token_s = Some(self.now);
+                    }
+                    // a recompute pass restores old context; tokens_out is
+                    // unchanged (already emitted to the client)
+                    r.resume_ctx = 0;
+                    r.tokens_out = r.tokens_out.max(1);
+                    if r.tokens_out >= r.spec.output_len {
+                        self.complete(instance, req);
+                    } else {
+                        self.instances[instance].running.push(req);
+                    }
+                }
+                // else: completed elsewhere during migration churn
+            }
+            PassKind::Decode => {
+                self.instances[instance].decode_inflight = false;
+                self.instances[instance].iter_count += 1;
+                if self.instances[instance].iter_count % self.cfg.timing.slow_epoch_iters == 0
+                {
+                    self.instances[instance].slow_level =
+                        self.rng.lognormal_jitter(self.cfg.timing.slow_sigma);
+                }
+                // the control plane owns the replication cadence
+                self.control(Ctl::PassCompleted { instance, decode: true });
+                let flush = std::mem::take(&mut self.instances[instance].flush_due);
+                let running = std::mem::take(&mut self.instances[instance].running);
+                let mut keep = Vec::with_capacity(running.len());
+                for req in running {
+                    self.reqs[req].tokens_out += 1;
+                    if self.reqs[req].first_token_s.is_none() {
+                        self.reqs[req].first_token_s = Some(self.now);
+                    }
+                    if self.reqs[req].tokens_out >= self.reqs[req].spec.output_len {
+                        self.complete(instance, req);
+                        continue;
+                    }
+                    // KV grows only when the new token opens a fresh page
+                    let ctx = self.reqs[req].context_tokens();
+                    let crosses = (ctx as usize - 1) % self.cfg.serving.page_size == 0;
+                    if crosses && !self.grow_all_stages(instance, req) {
+                        self.preempt(instance, req);
+                        continue;
+                    }
+                    if flush {
+                        self.replicate(instance, req);
+                    }
+                    keep.push(req);
+                }
+                self.instances[instance].running = keep;
+            }
+        }
+        self.pump(instance);
+    }
+
+    pub(crate) fn grow_all_stages(&mut self, instance: usize, req: usize) -> bool {
+        let ctx = self.reqs[req].context_tokens();
+        let id = self.reqs[req].spec.id;
+        for s in 0..self.cfg.cluster.n_stages {
+            let n = self.effective_node(instance, s);
+            let ni = self.node_index(n);
+            if self.nodes[ni].kv.grow_primary(id, ctx).is_err() {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Background block replication of one request's newest context to
+    /// the ring targets (counts block occupancy on the target; the synced
+    /// watermark is reported to the control plane).
+    pub(crate) fn replicate(&mut self, instance: usize, req: usize) {
+        let ctx = self.reqs[req].context_tokens();
+        let id = self.reqs[req].spec.id;
+        let mut all_ok = true;
+        for s in 0..self.cfg.cluster.n_stages {
+            let src = self.effective_node(instance, s);
+            let Some(tgt) = self.cp.replication_target(src) else {
+                all_ok = false;
+                continue;
+            };
+            let ti = self.node_index(tgt);
+            if !self.nodes[ti].kv.write_replica(id, src, ctx, self.now) {
+                self.replica_stalls += 1;
+                all_ok = false;
+            }
+        }
+        if all_ok {
+            self.control(Ctl::ReplicaSynced { req: id, tokens: ctx });
+        }
+    }
+
+    pub(crate) fn free_request_kv(&mut self, instance: usize, req: usize) {
+        let id = self.reqs[req].spec.id;
+        for s in 0..self.cfg.cluster.n_stages {
+            let n = self.effective_node(instance, s);
+            let ni = self.node_index(n);
+            let _ = self.nodes[ni].kv.free_primary(id);
+        }
+        // replicas are swept cluster-wide: targets may have changed across
+        // replans and a targeted sweep measured <5% faster (§Perf) — the
+        // exhaustive sweep can never leak blocks.
+        for node in self.cfg.cluster.nodes() {
+            let ni = self.node_index(node);
+            self.nodes[ni].kv.drop_replica(id);
+        }
+    }
+
+    pub(crate) fn complete(&mut self, instance: usize, req: usize) {
+        self.free_request_kv(instance, req);
+        let r = &mut self.reqs[req];
+        r.done = true;
+        let record = RequestRecord {
+            id: r.spec.id,
+            arrival_s: r.spec.arrival_s,
+            first_token_s: r.first_token_s.unwrap_or(self.now),
+            completion_s: self.now,
+            prompt_len: r.spec.prompt_len,
+            output_len: r.spec.output_len,
+            retries: r.retries,
+            instance,
+        };
+        let id = r.spec.id;
+        self.recorder.push(record);
+        self.control(Ctl::RequestCompleted { req: id });
+    }
+
+    pub(crate) fn preempt(&mut self, instance: usize, req: usize) {
+        self.preemptions += 1;
+        self.free_request_kv(instance, req);
+        let r = &mut self.reqs[req];
+        r.resume_ctx = r.context_tokens();
+        let id = r.spec.id;
+        self.instances[instance].waiting.push_front(req);
+        // its replicas were swept: the synced watermark is gone
+        self.control(Ctl::ReplicaSynced { req: id, tokens: 0 });
+    }
+
+    pub(crate) fn sample_util(&mut self) {
+        let alive: Vec<&NodeSim> = self.nodes.iter().filter(|n| n.alive).collect();
+        if !alive.is_empty() {
+            let u = alive.iter().map(|n| n.kv.utilization()).sum::<f64>() / alive.len() as f64;
+            self.util_samples.push((self.now, u));
+        }
+        // stop sampling once all requests are done (lets the queue drain)
+        if self.reqs.iter().any(|r| !r.done) {
+            self.q.push(self.now + SAMPLE_INTERVAL_S, Event::Sample);
+        }
+    }
+}

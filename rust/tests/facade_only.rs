@@ -1,0 +1,48 @@
+//! Regression guard for the control-plane extraction: the PJRT serving
+//! example must consume `coordinator::ControlPlane` and must NOT
+//! reimplement routing / donor-selection / health bookkeeping privately.
+//! (The example itself only compiles with `--features pjrt`, so this is a
+//! source-level check that runs in the default sim-only test suite —
+//! exactly where the original `InstanceHealth` drift between
+//! `sim/cluster.rs` and `examples/serve_e2e.rs` went unnoticed.)
+
+use std::path::Path;
+
+fn example_source() -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/serve_e2e.rs");
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+#[test]
+fn serve_e2e_drives_the_control_plane() {
+    let src = example_source();
+    assert!(
+        src.contains("ControlPlane") || src.contains("ControlDriver"),
+        "examples/serve_e2e.rs must drive coordinator::ControlPlane \
+         (directly or via engine::ControlDriver)"
+    );
+}
+
+#[test]
+fn serve_e2e_has_no_private_coordinator_state() {
+    let src = example_source();
+    // each of these identifiers marks a reimplementation of coordinator
+    // bookkeeping the facade now owns — the drift this test pins down
+    for forbidden in [
+        "InstanceHealth",
+        "select_donor",
+        "PipelineState",
+        "ReplicationPlanner",
+        "coordinator::reroute",
+        ".donations",
+        ".dead.push",
+    ] {
+        assert!(
+            !src.contains(forbidden),
+            "examples/serve_e2e.rs contains `{forbidden}`: coordinator \
+             bookkeeping must live behind coordinator::ControlPlane, not \
+             be duplicated in the example"
+        );
+    }
+}
