@@ -20,8 +20,10 @@ fn main() {
     println!("scenario 1 (8-node cluster, node (0,2) fails at t={}s), RPS={rps}", bench::FAILURE_T);
 
     // full runs for the summary comparison
-    let base = ClusterSim::new(bench::scenario(1, rps, FaultPolicy::Standard)).run();
-    let kev = ClusterSim::new(bench::scenario(1, rps, FaultPolicy::KevlarFlow)).run();
+    let base =
+        ClusterSim::new(bench::scenario(1, rps, FaultPolicy::Standard).expect("scene 1")).run();
+    let kev =
+        ClusterSim::new(bench::scenario(1, rps, FaultPolicy::KevlarFlow).expect("scene 1")).run();
     let (sb, sk) = (base.recorder.summary(), kev.recorder.summary());
 
     println!("\n== summary over {} / {} completed requests", sb.n, sk.n);
@@ -50,7 +52,7 @@ fn main() {
 
     // rolling TTFT timeline (Fig 6)
     println!("\n== rolling avg TTFT (30s windows), failure at t=120s");
-    let (rb, rk) = bench::run_rolling_ttft(1, rps, true);
+    let (rb, rk) = bench::run_rolling_ttft(1, rps, true).expect("scene 1");
     println!("{:>7} {:>14} {:>14}", "t(s)", "standard", "kevlarflow");
     let mut t = 30.0;
     while t <= 900.0 {

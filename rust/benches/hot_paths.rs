@@ -105,11 +105,11 @@ fn main() {
     for (name, cfg) in [
         (
             "sim scene1 RPS2 standard (full run)",
-            kevlarflow::bench::scenario(1, 2.0, FaultPolicy::Standard),
+            kevlarflow::bench::scenario(1, 2.0, FaultPolicy::Standard).expect("scene 1"),
         ),
         (
             "sim scene1 RPS2 kevlarflow (full run)",
-            kevlarflow::bench::scenario(1, 2.0, FaultPolicy::KevlarFlow),
+            kevlarflow::bench::scenario(1, 2.0, FaultPolicy::KevlarFlow).expect("scene 1"),
         ),
         (
             "sim 16-node RPS12 healthy (full run)",

@@ -18,13 +18,13 @@ fn main() {
     bench::run_baseline_curves(false);
 
     println!("\n## §4.2 performance under node failure (Fig 5 + Table 1)");
-    bench::run_table1(&[1, 2, 3], false);
+    bench::run_table1(&[1, 2, 3], false).expect("paper scenes");
 
     println!("\n## §1/§4.2 rolling TTFT under failure (Fig 1 / Fig 6)");
-    bench::run_rolling_ttft(1, 2.0, false);
+    bench::run_rolling_ttft(1, 2.0, false).expect("paper scenes");
 
     println!("\n## §4.2 rolling latency, saturated (Fig 7)");
-    bench::run_rolling_latency(3, 7.0, false);
+    bench::run_rolling_latency(3, 7.0, false).expect("paper scenes");
 
     println!("\n## §4.3 failure recovery time (Fig 8 + 20x MTTR)");
     bench::run_recovery_times(false);

@@ -1,53 +1,69 @@
 //! Experiment harness: regenerates every table and figure of the paper's
 //! evaluation from the simulator (`DESIGN.md` §4 maps paper figure →
-//! function here). Sim-only: available in the default feature set.
+//! function here), plus the scenario sweep runner ([`sweep`]). Sim-only:
+//! available in the default feature set.
 //!
 //! Each `run_*` function prints the same rows/series the paper reports
 //! and returns the structured data so tests and the criterion benches can
 //! assert on shapes (who wins, by what factor, where the knees are).
+//!
+//! The scenario builders are fallible lookups into the
+//! [`crate::scenario`] registry — no panicking paths:
+//!
+//! ```
+//! use kevlarflow::bench;
+//! use kevlarflow::config::FaultPolicy;
+//!
+//! let cfg = bench::scenario(1, 2.0, FaultPolicy::KevlarFlow).unwrap();
+//! assert_eq!(cfg.cluster.n_nodes(), 8);
+//! assert!(bench::scenario(9, 2.0, FaultPolicy::KevlarFlow).is_err());
+//! assert!(bench::healthy(12, 2.0, FaultPolicy::Standard).is_err());
+//! ```
 
-use crate::config::{ClusterConfig, ExperimentConfig, FaultPolicy, NodeId};
+pub mod sweep;
+
+use crate::config::{ClusterConfig, ExperimentConfig, FaultPolicy};
 use crate::metrics::{rolling_series, RollingPoint, Summary};
+use crate::scenario::{paper_scene, ScenarioError};
 use crate::sim::{ClusterSim, SimResult};
 
 /// Failure injection time used across the paper-style experiments.
-pub const FAILURE_T: f64 = 120.0;
+pub const FAILURE_T: f64 = crate::scenario::FAULT_T;
 
-/// Build one of the paper's three failure scenarios (§4.2) at `rps`.
+/// Build one of the paper's three failure scenarios (§4.2) at `rps` —
+/// a lookup of `paper-{scene}` in the [`crate::scenario`] registry.
 ///
 /// 1. 8-node cluster, one node fails (one of two pipelines hit).
 /// 2. 16-node cluster, one node fails (one of four pipelines hit).
 /// 3. 16-node cluster, two nodes in two different pipelines fail.
-pub fn scenario(scene: u8, rps: f64, policy: FaultPolicy) -> ExperimentConfig {
-    let (cluster, failures): (ClusterConfig, Vec<(f64, NodeId)>) = match scene {
-        1 => (ClusterConfig::paper_8node(), vec![(FAILURE_T, NodeId::new(0, 2))]),
-        2 => (ClusterConfig::paper_16node(), vec![(FAILURE_T, NodeId::new(0, 2))]),
-        3 => (
-            ClusterConfig::paper_16node(),
-            vec![(FAILURE_T, NodeId::new(0, 2)), (FAILURE_T, NodeId::new(1, 1))],
-        ),
-        _ => panic!("scene must be 1..=3"),
-    };
-    let mut cfg = ExperimentConfig::new(cluster, rps).with_policy(policy);
-    cfg.failures = failures;
-    cfg
+pub fn scenario(
+    scene: u8,
+    rps: f64,
+    policy: FaultPolicy,
+) -> Result<ExperimentConfig, ScenarioError> {
+    Ok(paper_scene(scene)?.to_experiment(rps, policy))
 }
 
 /// Healthy-cluster config (Figs 3/4/9 baselines).
-pub fn healthy(nodes: usize, rps: f64, policy: FaultPolicy) -> ExperimentConfig {
+pub fn healthy(
+    nodes: usize,
+    rps: f64,
+    policy: FaultPolicy,
+) -> Result<ExperimentConfig, ScenarioError> {
     let cluster = match nodes {
         8 => ClusterConfig::paper_8node(),
         16 => ClusterConfig::paper_16node(),
-        _ => panic!("presets are 8 or 16 nodes"),
+        other => return Err(ScenarioError::UnsupportedNodeCount(other)),
     };
-    ExperimentConfig::new(cluster, rps).with_policy(policy)
+    Ok(ExperimentConfig::new(cluster, rps).with_policy(policy))
 }
 
+/// The RPS grid of a paper scene, from its scenario metadata (unknown
+/// scenes fall back to the 16-node grid).
 pub fn rps_grid(scene: u8) -> Vec<f64> {
-    match scene {
-        1 => (1..=8).map(|r| r as f64).collect(),
-        _ => (1..=16).map(|r| r as f64).collect(),
-    }
+    paper_scene(scene)
+        .map(|s| s.rps_grid)
+        .unwrap_or_else(|_| (1..=16).map(|r| r as f64).collect())
 }
 
 /// One (baseline, kevlarflow) comparison row of Table 1 / Fig 5.
@@ -86,7 +102,7 @@ pub fn run_baseline_curves(quiet: bool) -> Vec<(usize, f64, Summary)> {
     for &nodes in &[8usize, 16] {
         let grid = if nodes == 8 { rps_grid(1) } else { rps_grid(2) };
         for rps in grid {
-            let res = run(healthy(nodes, rps, FaultPolicy::Standard));
+            let res = run(healthy(nodes, rps, FaultPolicy::Standard).expect("preset"));
             rows.push((nodes, rps, res.recorder.summary()));
         }
     }
@@ -112,12 +128,12 @@ pub fn run_baseline_curves(quiet: bool) -> Vec<(usize, f64, Summary)> {
 // ------------------------------------------------------------- Table 1 / Fig 5
 
 /// Full Table 1: all three scenarios, baseline vs KevlarFlow.
-pub fn run_table1(scenes: &[u8], quiet: bool) -> Vec<CompareRow> {
+pub fn run_table1(scenes: &[u8], quiet: bool) -> Result<Vec<CompareRow>, ScenarioError> {
     let mut rows = Vec::new();
     for &scene in scenes {
         for rps in rps_grid(scene) {
-            let base = run(scenario(scene, rps, FaultPolicy::Standard));
-            let ours = run(scenario(scene, rps, FaultPolicy::KevlarFlow));
+            let base = run(scenario(scene, rps, FaultPolicy::Standard)?);
+            let ours = run(scenario(scene, rps, FaultPolicy::KevlarFlow)?);
             rows.push(CompareRow {
                 scene,
                 rps,
@@ -129,7 +145,7 @@ pub fn run_table1(scenes: &[u8], quiet: bool) -> Vec<CompareRow> {
     if !quiet {
         print_table1(&rows);
     }
-    rows
+    Ok(rows)
 }
 
 pub fn print_table1(rows: &[CompareRow]) {
@@ -164,11 +180,11 @@ pub fn run_rolling_ttft(
     scene: u8,
     rps: f64,
     quiet: bool,
-) -> (Vec<RollingPoint>, Vec<RollingPoint>) {
+) -> Result<(Vec<RollingPoint>, Vec<RollingPoint>), ScenarioError> {
     let window = 30.0;
     let step = 15.0;
-    let base = run(scenario(scene, rps, FaultPolicy::Standard));
-    let ours = run(scenario(scene, rps, FaultPolicy::KevlarFlow));
+    let base = run(scenario(scene, rps, FaultPolicy::Standard)?);
+    let ours = run(scenario(scene, rps, FaultPolicy::KevlarFlow)?);
     let t_end = base.sim_time_s.max(ours.sim_time_s);
     let sb = rolling_series(&base.recorder.ttft_samples(), window, step, t_end);
     let so = rolling_series(&ours.recorder.ttft_samples(), window, step, t_end);
@@ -193,7 +209,7 @@ pub fn run_rolling_ttft(
             t += step * 2.0;
         }
     }
-    (sb, so)
+    Ok((sb, so))
 }
 
 /// Fig 7: rolling latency AND TTFT, scenario 3, RPS 7 (saturated).
@@ -201,11 +217,11 @@ pub fn run_rolling_latency(
     scene: u8,
     rps: f64,
     quiet: bool,
-) -> (Vec<RollingPoint>, Vec<RollingPoint>) {
+) -> Result<(Vec<RollingPoint>, Vec<RollingPoint>), ScenarioError> {
     let window = 60.0;
     let step = 30.0;
-    let base = run(scenario(scene, rps, FaultPolicy::Standard));
-    let ours = run(scenario(scene, rps, FaultPolicy::KevlarFlow));
+    let base = run(scenario(scene, rps, FaultPolicy::Standard)?);
+    let ours = run(scenario(scene, rps, FaultPolicy::KevlarFlow)?);
     let t_end = base.sim_time_s.max(ours.sim_time_s);
     let sb = rolling_series(&base.recorder.latency_samples(), window, step, t_end);
     let so = rolling_series(&ours.recorder.latency_samples(), window, step, t_end);
@@ -217,7 +233,7 @@ pub fn run_rolling_latency(
             println!("| {:.0} | {:.1} | {:.1} |", b.t, b.avg, o.avg);
         }
     }
-    (sb, so)
+    Ok((sb, so))
 }
 
 // ------------------------------------------------------------------ Fig 8
@@ -227,7 +243,7 @@ pub fn run_recovery_times(quiet: bool) -> Vec<(u8, f64, f64)> {
     let mut rows = Vec::new();
     for scene in 1..=3u8 {
         for rps in rps_grid(scene) {
-            let res = run(scenario(scene, rps, FaultPolicy::KevlarFlow));
+            let res = run(scenario(scene, rps, FaultPolicy::KevlarFlow).expect("paper scene"));
             if let Some(mean) = res.recovery.mean_recovery_s() {
                 rows.push((scene, rps, mean));
             }
@@ -275,8 +291,8 @@ pub fn run_overhead(quiet: bool) -> Vec<(usize, f64, f64, f64)> {
             if rps > cap {
                 continue;
             }
-            let off = run(healthy(nodes, rps, FaultPolicy::Standard));
-            let on = run(healthy(nodes, rps, FaultPolicy::KevlarFlow));
+            let off = run(healthy(nodes, rps, FaultPolicy::Standard).expect("preset"));
+            let on = run(healthy(nodes, rps, FaultPolicy::KevlarFlow).expect("preset"));
             let so = off.recorder.summary();
             let sn = on.recorder.summary();
             let avg_ovh = sn.latency_avg / so.latency_avg - 1.0;
@@ -313,13 +329,25 @@ mod tests {
 
     #[test]
     fn scenario_builders() {
-        let s1 = scenario(1, 2.0, FaultPolicy::Standard);
+        let s1 = scenario(1, 2.0, FaultPolicy::Standard).unwrap();
         assert_eq!(s1.cluster.n_nodes(), 8);
-        assert_eq!(s1.failures.len(), 1);
-        let s3 = scenario(3, 7.0, FaultPolicy::KevlarFlow);
+        assert_eq!(s1.faults.len(), 1);
+        let s3 = scenario(3, 7.0, FaultPolicy::KevlarFlow).unwrap();
         assert_eq!(s3.cluster.n_nodes(), 16);
-        assert_eq!(s3.failures.len(), 2);
-        assert_ne!(s3.failures[0].1.instance, s3.failures[1].1.instance);
+        assert_eq!(s3.faults.len(), 2);
+        assert_ne!(s3.faults[0].node().instance, s3.faults[1].node().instance);
+    }
+
+    #[test]
+    fn unknown_scene_and_preset_are_typed_errors() {
+        assert!(matches!(
+            scenario(0, 2.0, FaultPolicy::Standard),
+            Err(ScenarioError::UnknownScene(0))
+        ));
+        assert!(matches!(
+            healthy(12, 2.0, FaultPolicy::Standard),
+            Err(ScenarioError::UnsupportedNodeCount(12))
+        ));
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Scenario sweep runner: execute a named scenario matrix across both
+//! fault policies and emit machine-readable JSON results
+//! (`BENCH_scenarios.json`) alongside the paper tables.
+//!
+//! One [`SweepRow`] is one `(scenario, policy, rps)` simulation; the JSON
+//! document is `{"suite", "version", "rows": [...]}` with one object per
+//! row (schema documented in `EXPERIMENTS.md`). Output is fully
+//! deterministic — scenario seeds are part of the specs and nothing
+//! wall-clock-dependent is recorded — so sweeps diff cleanly across
+//! commits.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+
+use crate::config::{FaultPolicy, Json};
+use crate::metrics::Summary;
+use crate::scenario::{registry, Scenario, ScenarioError};
+
+/// Results of one `(scenario, policy, rps)` simulation.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub scenario: String,
+    pub policy: FaultPolicy,
+    pub rps: f64,
+    pub summary: Summary,
+    /// Completed donor recoveries (0 under the standard policy).
+    pub recoveries: usize,
+    pub mean_recovery_s: Option<f64>,
+    pub preemptions: u64,
+    pub full_recomputes: u64,
+    pub incomplete: usize,
+    /// Total request restarts (standard-policy progress loss).
+    pub retries: u64,
+}
+
+/// Run one point of the matrix.
+pub fn run_point(s: &Scenario, rps: f64, policy: FaultPolicy) -> SweepRow {
+    let res = s.run(rps, policy);
+    let retries = res.recorder.records.iter().map(|r| r.retries as u64).sum();
+    SweepRow {
+        scenario: s.name.clone(),
+        policy,
+        rps,
+        summary: res.recorder.summary(),
+        recoveries: res.recovery.completed.len(),
+        mean_recovery_s: res.recovery.mean_recovery_s(),
+        preemptions: res.preemptions,
+        full_recomputes: res.full_recomputes,
+        incomplete: res.incomplete,
+        retries,
+    }
+}
+
+/// Execute scenarios × {Standard, KevlarFlow} × RPS. `names` empty runs
+/// the whole registry; `full_grid` sweeps each scenario's `rps_grid`
+/// instead of only its `default_rps`; `window_s` overrides every
+/// scenario's arrival window (CI uses a short one).
+pub fn run_sweep(
+    names: &[String],
+    full_grid: bool,
+    window_s: Option<f64>,
+    quiet: bool,
+) -> Result<Vec<SweepRow>, ScenarioError> {
+    let mut scenarios: Vec<Scenario> = if names.is_empty() {
+        registry()
+    } else {
+        names
+            .iter()
+            .map(|n| crate::scenario::find(n))
+            .collect::<Result<Vec<Scenario>, _>>()?
+    };
+    if let Some(w) = window_s {
+        for s in &mut scenarios {
+            s.arrival_window_s = w;
+        }
+    }
+    let mut rows = Vec::new();
+    for s in &scenarios {
+        let grid: Vec<f64> =
+            if full_grid { s.rps_grid.clone() } else { vec![s.default_rps] };
+        for &rps in &grid {
+            for policy in [FaultPolicy::Standard, FaultPolicy::KevlarFlow] {
+                rows.push(run_point(s, rps, policy));
+            }
+        }
+    }
+    if !quiet {
+        print_rows(&rows);
+    }
+    Ok(rows)
+}
+
+/// Markdown comparison table (one line per matrix point).
+pub fn print_rows(rows: &[SweepRow]) {
+    println!("\n## scenario sweep — standard vs KevlarFlow\n");
+    println!(
+        "| scenario | policy | RPS | n | lat avg (s) | lat p99 (s) | TTFT avg (s) | \
+         TTFT p99 (s) | recoveries | retries | incomplete |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|---|---|");
+    for r in rows {
+        println!(
+            "| {} | {} | {:.1} | {} | {:.2} | {:.2} | {:.2} | {:.2} | {} | {} | {} |",
+            r.scenario,
+            r.policy.label(),
+            r.rps,
+            r.summary.n,
+            r.summary.latency_avg,
+            r.summary.latency_p99,
+            r.summary.ttft_avg,
+            r.summary.ttft_p99,
+            r.recoveries,
+            r.retries,
+            r.incomplete,
+        );
+    }
+}
+
+fn row_json(r: &SweepRow) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("scenario".into(), Json::Str(r.scenario.clone()));
+    m.insert("policy".into(), Json::Str(r.policy.label().into()));
+    m.insert("rps".into(), Json::Num(r.rps));
+    m.insert("n".into(), Json::Num(r.summary.n as f64));
+    m.insert("latency_avg_s".into(), Json::Num(r.summary.latency_avg));
+    m.insert("latency_p99_s".into(), Json::Num(r.summary.latency_p99));
+    m.insert("ttft_avg_s".into(), Json::Num(r.summary.ttft_avg));
+    m.insert("ttft_p99_s".into(), Json::Num(r.summary.ttft_p99));
+    m.insert("tpot_avg_s".into(), Json::Num(r.summary.tpot_avg));
+    m.insert("tpot_p99_s".into(), Json::Num(r.summary.tpot_p99));
+    m.insert("recoveries".into(), Json::Num(r.recoveries as f64));
+    m.insert(
+        "mean_recovery_s".into(),
+        r.mean_recovery_s.map(Json::Num).unwrap_or(Json::Null),
+    );
+    m.insert("preemptions".into(), Json::Num(r.preemptions as f64));
+    m.insert("full_recomputes".into(), Json::Num(r.full_recomputes as f64));
+    m.insert("incomplete".into(), Json::Num(r.incomplete as f64));
+    m.insert("retries".into(), Json::Num(r.retries as f64));
+    Json::Obj(m)
+}
+
+/// The machine-readable result document (see `EXPERIMENTS.md` for the
+/// schema).
+pub fn sweep_json(rows: &[SweepRow]) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("suite".into(), Json::Str("kevlarflow-scenarios".into()));
+    m.insert("version".into(), Json::Num(1.0));
+    m.insert("rows".into(), Json::Arr(rows.iter().map(row_json).collect()));
+    Json::Obj(m)
+}
+
+/// Write the sweep document to `path` (compact JSON, trailing newline).
+pub fn write_sweep(path: &std::path::Path, rows: &[SweepRow]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(sweep_json(rows).to_string().as_bytes())?;
+    f.write_all(b"\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_rejects_unknown_names() {
+        let err = run_sweep(&["nope".to_string()], false, Some(50.0), true).unwrap_err();
+        assert!(matches!(err, ScenarioError::UnknownScenario(_)));
+    }
+
+    #[test]
+    fn json_document_shape() {
+        let row = SweepRow {
+            scenario: "paper-1".into(),
+            policy: FaultPolicy::KevlarFlow,
+            rps: 2.0,
+            summary: Summary::default(),
+            recoveries: 1,
+            mean_recovery_s: Some(31.5),
+            preemptions: 0,
+            full_recomputes: 2,
+            incomplete: 0,
+            retries: 0,
+        };
+        let doc = sweep_json(&[row]);
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("kevlarflow-scenarios"));
+        assert_eq!(doc.get("version").unwrap().as_f64(), Some(1.0));
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.get("policy").unwrap().as_str(), Some("kevlarflow"));
+        assert_eq!(r.get("mean_recovery_s").unwrap().as_f64(), Some(31.5));
+        // round-trips through the parser
+        let text = doc.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+}

@@ -14,6 +14,8 @@ mod manifest;
 pub use json::Json;
 pub use manifest::{ArtifactEntry, Goldens, Manifest, ManifestConfig, ParamSpec};
 
+use crate::workload::WorkloadSpec;
+
 /// Identifies one model executor: `(instance, stage)` — the paper's
 /// `(i, s)` node naming (e.g. node (0, 2) = stage 2 of instance 0).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -34,6 +36,44 @@ impl std::fmt::Display for NodeId {
     }
 }
 
+/// One scripted fault injection of a scenario's fault script (see
+/// [`crate::scenario`]). `Kill` is the paper's fail-stop primitive; the
+/// other arms extend the zoo to the failure modes related systems evaluate
+/// (transient flaps, fail-slow stragglers).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultOp {
+    /// Fail-stop: the node's process/host dies at `t_s` and never comes
+    /// back on its own (a background replacement provisions per policy).
+    Kill { t_s: f64, node: NodeId },
+    /// Transient flap: the node dies at `t_s` and its process rejoins
+    /// `down_s` seconds later (network partition healed / process
+    /// restarted) with its KV memory lost.
+    Flap { t_s: f64, node: NodeId, down_s: f64 },
+    /// Fail-slow straggler: from `t_s` the node services every stage pass
+    /// `factor`× slower, recovering after `duration_s` seconds.
+    Slow { t_s: f64, node: NodeId, factor: f64, duration_s: f64 },
+}
+
+impl FaultOp {
+    /// When the fault first manifests on the substrate.
+    pub fn start_s(&self) -> f64 {
+        match *self {
+            FaultOp::Kill { t_s, .. }
+            | FaultOp::Flap { t_s, .. }
+            | FaultOp::Slow { t_s, .. } => t_s,
+        }
+    }
+
+    /// The node the fault targets.
+    pub fn node(&self) -> NodeId {
+        match *self {
+            FaultOp::Kill { node, .. }
+            | FaultOp::Flap { node, .. }
+            | FaultOp::Slow { node, .. } => node,
+        }
+    }
+}
+
 /// Which failure semantics the coordinator applies (§4.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultPolicy {
@@ -46,6 +86,25 @@ pub enum FaultPolicy {
     /// re-formation → resume from replicated KV; traffic reroutes through
     /// the donor node while a replacement provisions in the background.
     KevlarFlow,
+}
+
+impl FaultPolicy {
+    /// Stable lowercase label used in JSON results and the CLI.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultPolicy::Standard => "standard",
+            FaultPolicy::KevlarFlow => "kevlarflow",
+        }
+    }
+
+    /// Inverse of [`FaultPolicy::label`] (accepts "kevlar" as shorthand).
+    pub fn parse(s: &str) -> Option<FaultPolicy> {
+        match s {
+            "standard" => Some(FaultPolicy::Standard),
+            "kevlarflow" | "kevlar" => Some(FaultPolicy::KevlarFlow),
+            _ => None,
+        }
+    }
 }
 
 /// Cluster topology: instances × stages and their datacenter placement.
@@ -80,22 +139,23 @@ impl ClusterConfig {
 
     /// Paper testbed 1: 8 nodes = 2 instances × 4 stages.
     pub fn paper_8node() -> Self {
-        Self {
-            n_instances: 2,
-            n_stages: 4,
-            instance_dc: vec![0, 1],
-            dc_latency_ms: Self::us_dc_matrix(),
-            intra_dc_latency_ms: 0.25,
-            wan_gbps: 1.0,
-        }
+        Self::custom(2, 4)
     }
 
     /// Paper testbed 2: 16 nodes = 4 instances × 4 stages.
     pub fn paper_16node() -> Self {
+        Self::custom(4, 4)
+    }
+
+    /// Arbitrary `instances × stages` topology over the same four US
+    /// datacenters (instances are assigned round-robin). The paper
+    /// presets are `custom(2, 4)` and `custom(4, 4)` with matching
+    /// placements; scenario specs use this for non-paper shapes.
+    pub fn custom(n_instances: usize, n_stages: usize) -> Self {
         Self {
-            n_instances: 4,
-            n_stages: 4,
-            instance_dc: vec![0, 1, 2, 3],
+            n_instances,
+            n_stages,
+            instance_dc: (0..n_instances).map(|i| i % 4).collect(),
             dc_latency_ms: Self::us_dc_matrix(),
             intra_dc_latency_ms: 0.25,
             wan_gbps: 1.0,
@@ -200,6 +260,11 @@ pub struct SimTimingConfig {
     pub prefill_stage_per_token_ms: f64,
     /// Failure-detection time (s): heartbeat timeout as seen end-to-end.
     pub detect_s: f64,
+    /// Fail-slow detection time (s): how long a node must exceed the
+    /// pass-time threshold before the monitoring layer reports a
+    /// straggler (much slower than heartbeat loss — slowness needs a
+    /// windowed signal, not a missed ping).
+    pub straggler_detect_s: f64,
     /// LocateDonor phase base time (s) when only one donor candidate
     /// exists: the LB-group store query serializes with the verification
     /// handshake (the 8-node testbed's case — why the paper measures 35 s
@@ -235,6 +300,7 @@ impl Default for SimTimingConfig {
             prefill_stage_base_ms: 15.0,
             prefill_stage_per_token_ms: 0.15,
             detect_s: 4.0,
+            straggler_detect_s: 20.0,
             locate_single_s: 2.5,
             locate_multi_s: 0.8,
             reform_single_extra_s: 2.0,
@@ -252,13 +318,16 @@ pub struct ExperimentConfig {
     pub cluster: ClusterConfig,
     pub serving: ServingConfig,
     pub timing: SimTimingConfig,
+    /// Request shape and arrival process (defaults to the paper's
+    /// ShareGPT-like lengths with Poisson arrivals).
+    pub workload: WorkloadSpec,
     pub rps: f64,
     /// Seconds of request arrivals (the run then drains).
     pub arrival_window_s: f64,
     /// Hard cap on simulated time (guards oversaturated drains).
     pub max_sim_time_s: f64,
-    /// (time_s, node) failure injections.
-    pub failures: Vec<(f64, NodeId)>,
+    /// Scripted fault injections (fail-stop kills, flaps, stragglers).
+    pub faults: Vec<FaultOp>,
     pub seed: u64,
 }
 
@@ -268,10 +337,11 @@ impl ExperimentConfig {
             cluster,
             serving: ServingConfig::default(),
             timing: SimTimingConfig::default(),
+            workload: WorkloadSpec::sharegpt_like(),
             rps,
             arrival_window_s: 1000.0,
             max_sim_time_s: 5400.0,
-            failures: vec![],
+            faults: vec![],
             seed: 42,
         }
     }
@@ -282,8 +352,15 @@ impl ExperimentConfig {
         self
     }
 
+    /// Shorthand for the fail-stop primitive: kill `node` at `t`.
     pub fn with_failure(mut self, t: f64, node: NodeId) -> Self {
-        self.failures.push((t, node));
+        self.faults.push(FaultOp::Kill { t_s: t, node });
+        self
+    }
+
+    /// Append any scripted fault to the experiment's fault script.
+    pub fn with_fault(mut self, op: FaultOp) -> Self {
+        self.faults.push(op);
         self
     }
 }
@@ -330,7 +407,31 @@ mod tests {
             .with_failure(120.0, NodeId::new(0, 2));
         assert_eq!(e.serving.fault_policy, FaultPolicy::Standard);
         assert!(!e.serving.replication);
-        assert_eq!(e.failures.len(), 1);
+        assert_eq!(e.faults.len(), 1);
+        assert_eq!(
+            e.faults[0],
+            FaultOp::Kill { t_s: 120.0, node: NodeId::new(0, 2) }
+        );
     }
 
+    #[test]
+    fn custom_cluster_matches_presets() {
+        let c = ClusterConfig::custom(2, 4);
+        let p = ClusterConfig::paper_8node();
+        assert_eq!(c.n_nodes(), p.n_nodes());
+        assert_eq!(c.instance_dc, p.instance_dc);
+        let odd = ClusterConfig::custom(6, 2);
+        assert_eq!(odd.n_nodes(), 12);
+        assert_eq!(odd.instance_dc, vec![0, 1, 2, 3, 0, 1]);
+    }
+
+    #[test]
+    fn fault_op_accessors_and_policy_labels() {
+        let op = FaultOp::Flap { t_s: 9.0, node: NodeId::new(1, 3), down_s: 60.0 };
+        assert_eq!(op.start_s(), 9.0);
+        assert_eq!(op.node(), NodeId::new(1, 3));
+        assert_eq!(FaultPolicy::parse("kevlar"), Some(FaultPolicy::KevlarFlow));
+        assert_eq!(FaultPolicy::parse(FaultPolicy::Standard.label()), Some(FaultPolicy::Standard));
+        assert_eq!(FaultPolicy::parse("nope"), None);
+    }
 }

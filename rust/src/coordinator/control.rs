@@ -101,6 +101,19 @@ pub enum Event {
     NodeProvisioned { instance: usize },
     /// A fully re-initialized pipeline (standard fault behavior) is back.
     InstanceRejoined { instance: usize },
+    /// A previously-failed node's own process is back (transient flap:
+    /// partition healed / process restarted), with its KV memory lost.
+    /// If its pipeline is serving degraded through a donor for exactly
+    /// this slot, the node swaps back in and the donor is released early;
+    /// in every other state the report is advisory (the background
+    /// replacement path remains the fallback).
+    NodeRecovered { node: NodeId },
+    /// The monitoring layer flagged `node` as a fail-slow straggler
+    /// (sustained pass times far above its siblings). KevlarFlow
+    /// quarantines it exactly like a fail-stop loss — donor splice,
+    /// degraded serving, background replacement; the standard policy has
+    /// no answer to slowness and ignores the signal.
+    StragglerDetected { node: NodeId },
 }
 
 /// Which of an instance's requests an [`Action::Evict`] displaces.
@@ -270,6 +283,8 @@ impl ControlPlane {
             Event::RecoveryElapsed { instance } => self.recovery_elapsed(now_s, instance),
             Event::NodeProvisioned { instance } => self.node_provisioned(instance),
             Event::InstanceRejoined { instance } => self.instance_rejoined(instance),
+            Event::NodeRecovered { node } => self.node_recovered(node),
+            Event::StragglerDetected { node } => self.straggler_detected(now_s, node),
         }
     }
 
@@ -546,13 +561,50 @@ impl ControlPlane {
         let PipelineState::Degraded { failed_stage, donor } = self.health.states[instance] else {
             return Vec::new();
         };
-        let fresh = NodeId::new(instance, failed_stage);
+        self.swap_in(instance, NodeId::new(instance, failed_stage), donor)
+    }
+
+    /// A healthy node now fills `instance`'s failed slot: release the
+    /// donor, clear the slot from the dead list, return to `Active`.
+    fn swap_in(&mut self, instance: usize, fresh: NodeId, donor: NodeId) -> Vec<Action> {
         self.health.donations.remove(&donor);
         self.health.dead.retain(|&n| n != fresh);
         self.health.states[instance] = PipelineState::Active;
         self.pending[instance] = None;
         self.planner.replan(&self.cluster, &self.health, &[]);
         vec![Action::ReleaseDonor { instance, donor, fresh }]
+    }
+
+    fn node_recovered(&mut self, node: NodeId) -> Vec<Action> {
+        if !self.health.is_dead(node) {
+            return Vec::new();
+        }
+        // an early swap-in is only safe when the pipeline already serves
+        // degraded through a donor for exactly this slot; mid-recovery or
+        // Down pipelines keep their scheduled path (the background
+        // replacement timer remains the fallback and is idempotent)
+        match self.health.states[node.instance] {
+            PipelineState::Degraded { failed_stage, donor } if failed_stage == node.stage => {
+                self.swap_in(node.instance, node, donor)
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    fn straggler_detected(&mut self, now_s: f64, node: NodeId) -> Vec<Action> {
+        // the standard policy has no partial-availability story — it
+        // tolerates the straggler; quarantining a donor would cascade a
+        // second recovery, so a slow donor is tolerated too
+        let quarantine = self.serving.fault_policy == FaultPolicy::KevlarFlow
+            && !self.health.is_dead(node)
+            && !self.health.is_donor(node)
+            && self.health.states[node.instance] == PipelineState::Active;
+        if !quarantine {
+            return Vec::new();
+        }
+        // route around the slow node exactly like a fail-stop loss: mark
+        // it dead, splice a donor, provision a replacement in background
+        self.node_failed(now_s, node)
     }
 
     fn instance_rejoined(&mut self, instance: usize) -> Vec<Action> {
@@ -729,6 +781,61 @@ mod tests {
         };
         assert_ne!(donor2, donor1);
         assert_eq!(donor2.stage, 2);
+    }
+
+    #[test]
+    fn flap_rejoin_releases_donor_early() {
+        let mut cp = cp(ClusterConfig::paper_16node(), FaultPolicy::KevlarFlow);
+        let failed = NodeId::new(0, 2);
+        cp.handle(124.0, Event::HeartbeatMissed { node: failed });
+        // rejoin mid-recovery is advisory only
+        assert!(cp.handle(130.0, Event::NodeRecovered { node: failed }).is_empty());
+        assert!(matches!(cp.state(0), PipelineState::Recovering { .. }));
+        let a = cp.handle(155.0, Event::RecoveryElapsed { instance: 0 });
+        let donor = match a.first() {
+            Some(Action::PromoteReplicas { donor, .. }) => *donor,
+            other => panic!("expected promote, got {other:?}"),
+        };
+        // once Degraded, the flapped node swaps straight back in
+        let a = cp.handle(180.0, Event::NodeRecovered { node: failed });
+        assert_eq!(a, vec![Action::ReleaseDonor { instance: 0, donor, fresh: failed }]);
+        assert_eq!(cp.state(0), PipelineState::Active);
+        assert!(!cp.health().is_dead(failed));
+        // a duplicate recovery report is a no-op
+        assert!(cp.handle(181.0, Event::NodeRecovered { node: failed }).is_empty());
+        // and so is the stale background-replacement wake-up
+        assert!(cp.handle(720.0, Event::NodeProvisioned { instance: 0 }).is_empty());
+    }
+
+    #[test]
+    fn straggler_quarantined_only_under_kevlarflow() {
+        let slow = NodeId::new(0, 1);
+        let mut std_cp = cp(ClusterConfig::paper_16node(), FaultPolicy::Standard);
+        assert!(std_cp.handle(140.0, Event::StragglerDetected { node: slow }).is_empty());
+        assert_eq!(std_cp.state(0), PipelineState::Active);
+
+        let mut cp = cp(ClusterConfig::paper_16node(), FaultPolicy::KevlarFlow);
+        let a = cp.handle(140.0, Event::StragglerDetected { node: slow });
+        assert!(
+            a.iter()
+                .any(|x| matches!(x, Action::SpliceDonor { failed, .. } if *failed == slow)),
+            "straggler must be routed around: {a:?}"
+        );
+        assert!(matches!(cp.state(0), PipelineState::Recovering { .. }));
+        // a duplicate signal for an already-quarantined node is ignored
+        assert!(cp.handle(141.0, Event::StragglerDetected { node: slow }).is_empty());
+    }
+
+    #[test]
+    fn straggling_donor_is_tolerated() {
+        let mut cp = cp(ClusterConfig::paper_16node(), FaultPolicy::KevlarFlow);
+        let a = cp.handle(124.0, Event::HeartbeatMissed { node: NodeId::new(0, 2) });
+        let donor = match a.iter().find(|x| matches!(x, Action::SpliceDonor { .. })) {
+            Some(Action::SpliceDonor { donor, .. }) => *donor,
+            _ => panic!("no splice"),
+        };
+        assert!(cp.handle(130.0, Event::StragglerDetected { node: donor }).is_empty());
+        assert!(cp.health().is_donor(donor));
     }
 
     #[test]

@@ -43,6 +43,22 @@ pub use router::Router;
 /// One-stop imports for driving the coordinator from a substrate:
 /// the facade, its event/action vocabulary, and the read-side types
 /// drivers inspect ([`PipelineState`], [`InstanceHealth`]).
+///
+/// ```
+/// use kevlarflow::config::{ClusterConfig, ServingConfig, SimTimingConfig};
+/// use kevlarflow::coordinator::prelude::*;
+///
+/// let cluster = ClusterConfig::paper_8node();
+/// let mut cp = ControlPlane::new(
+///     &cluster,
+///     &ServingConfig::default(),
+///     &SimTimingConfig::default(),
+///     42,
+/// );
+/// let actions = cp.handle(0.0, Event::RequestArrived { req: 0 });
+/// assert!(matches!(actions[0], Action::Dispatch { req: 0, .. }));
+/// assert_eq!(cp.state(0), PipelineState::Active);
+/// ```
 pub mod prelude {
     pub use super::control::{Action, ControlPlane, Event, EvictScope, ResetMode, Wake};
     pub use super::recovery::RecoveryManager;

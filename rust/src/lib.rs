@@ -29,7 +29,11 @@
 //!
 //! * [`sim`] — a discrete-event cluster simulator (virtual clock, network
 //!   and compute model, fault injection) that regenerates every figure and
-//!   table of the paper's evaluation (see `DESIGN.md` §4).
+//!   table of the paper's evaluation (see `DESIGN.md` §4). The
+//!   [`scenario`] registry scripts its fault injections — fail-stop,
+//!   flap/rejoin, correlated rack failures, cascades, fail-slow
+//!   stragglers, rejoin storms, bursty/heavy-tail arrivals — and the
+//!   [`bench::sweep`] runner executes the matrix (see `EXPERIMENTS.md`).
 //! * `engine` + `runtime` (with `--features pjrt`) — real token generation
 //!   through the AOT artifacts on the PJRT CPU client, used by the
 //!   end-to-end examples via the engine's `ControlDriver` failover hooks.
@@ -55,6 +59,7 @@ pub mod kvcache;
 pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod workload;
 

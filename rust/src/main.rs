@@ -7,13 +7,16 @@
 //!
 //! Usage:
 //!   kevlarflow bench <fig3|fig4|fig6|fig7|fig8|fig9|table1|tpot|all> [--scene N]
-//!   kevlarflow trace [--scene N] [--rps R]        dump the control-plane log
+//!   kevlarflow scenarios list|run|sweep           the fault-scenario suite
+//!   kevlarflow trace [--scenario NAME] [--rps R]  dump the control-plane log
 //!   kevlarflow generate [PROMPT] [--n TOKENS]     (requires --features pjrt)
 //!   kevlarflow inspect-artifacts                  (requires --features pjrt)
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use kevlarflow::bench;
+use kevlarflow::config::FaultPolicy;
+use kevlarflow::scenario::{self, Scenario};
 
 const USAGE: &str = "\
 kevlarflow — fault-tolerant LLM serving (KevlarFlow reproduction)
@@ -21,7 +24,15 @@ kevlarflow — fault-tolerant LLM serving (KevlarFlow reproduction)
 USAGE:
   kevlarflow bench <EXPERIMENT> [--scene N]   regenerate a paper experiment
       EXPERIMENT: fig3 fig4 fig6 fig7 fig8 fig9 table1 tpot all
-  kevlarflow trace [--scene N] [--rps R]      run a failure scenario and print
+  kevlarflow scenarios list                   show the fault-scenario registry
+  kevlarflow scenarios run <NAME> [--rps R] [--policy standard|kevlarflow|both]
+                          [--window S] [--file SPEC.json]
+                                              run one scenario, print summaries
+  kevlarflow scenarios sweep [--out FILE] [--only a,b] [--full] [--window S]
+                                              run the matrix, write JSON results
+                                              (default out: BENCH_scenarios.json)
+  kevlarflow trace [--scenario NAME | --scene N] [--rps R]
+                                              run a failure scenario and print
                                               the coordinator ControlPlane's
                                               event → action exchanges
   kevlarflow generate [PROMPT] [--n TOKENS]   greedy-generate with the AOT model
@@ -39,16 +50,30 @@ fn main() -> Result<()> {
             let scene = flag_value(&args, "--scene").map(|s| s.parse::<u8>()).transpose()?;
             run_bench(&exp, scene)
         }
+        Some("scenarios") => {
+            let sub = args.get(1).cloned().unwrap_or_else(|| "list".into());
+            match sub.as_str() {
+                "list" => scenarios_list(),
+                "run" => scenarios_run(&args),
+                "sweep" => scenarios_sweep(&args),
+                other => bail!("unknown scenarios subcommand '{other}' (list, run, sweep)"),
+            }
+        }
         Some("trace") => {
-            let scene = flag_value(&args, "--scene")
-                .map(|s| s.parse::<u8>())
-                .transpose()?
-                .unwrap_or(1);
             let rps = flag_value(&args, "--rps")
                 .map(|s| s.parse::<f64>())
                 .transpose()?
                 .unwrap_or(2.0);
-            trace(scene, rps)
+            let s = if let Some(name) = flag_value(&args, "--scenario") {
+                scenario::find(name)?
+            } else {
+                let scene = flag_value(&args, "--scene")
+                    .map(|s| s.parse::<u8>())
+                    .transpose()?
+                    .unwrap_or(1);
+                scenario::paper_scene(scene)?
+            };
+            trace(&s, rps)
         }
         Some("generate") => {
             let prompt = args
@@ -84,13 +109,13 @@ fn run_bench(which: &str, scene: Option<u8>) -> Result<()> {
         }
         "table1" | "fig5" => {
             let scenes: Vec<u8> = scene.map(|s| vec![s]).unwrap_or_else(|| vec![1, 2, 3]);
-            bench::run_table1(&scenes, false);
+            bench::run_table1(&scenes, false)?;
         }
         "fig1" | "fig6" => {
-            bench::run_rolling_ttft(1, 2.0, false);
+            bench::run_rolling_ttft(1, 2.0, false)?;
         }
         "fig7" => {
-            bench::run_rolling_latency(3, 7.0, false);
+            bench::run_rolling_latency(3, 7.0, false)?;
         }
         "fig8" => {
             bench::run_recovery_times(false);
@@ -112,9 +137,9 @@ fn run_bench(which: &str, scene: Option<u8>) -> Result<()> {
         }
         "all" => {
             bench::run_baseline_curves(false);
-            bench::run_table1(&[1, 2, 3], false);
-            bench::run_rolling_ttft(1, 2.0, false);
-            bench::run_rolling_latency(3, 7.0, false);
+            bench::run_table1(&[1, 2, 3], false)?;
+            bench::run_rolling_ttft(1, 2.0, false)?;
+            bench::run_rolling_latency(3, 7.0, false)?;
             bench::run_recovery_times(false);
             bench::run_overhead(false);
         }
@@ -126,19 +151,17 @@ fn run_bench(which: &str, scene: Option<u8>) -> Result<()> {
 /// Run one failure scenario and print the control plane's decision
 /// stream — the coordinator-level view of a recovery, straight from the
 /// `SimResult::control_log` the replay tests consume.
-fn trace(scene: u8, rps: f64) -> Result<()> {
-    use kevlarflow::config::FaultPolicy;
+fn trace(s: &Scenario, rps: f64) -> Result<()> {
     use kevlarflow::coordinator::control::{Action, Event};
-    use kevlarflow::sim::ClusterSim;
 
-    let mut cfg = bench::scenario(scene, rps, FaultPolicy::KevlarFlow);
-    cfg.arrival_window_s = 300.0;
-    let res = ClusterSim::new(cfg).run();
+    let mut s = s.clone();
+    s.arrival_window_s = s.arrival_window_s.min(300.0);
+    let res = s.run(rps, FaultPolicy::KevlarFlow);
 
     let mut dispatches = 0usize;
     let mut flushes = 0usize;
     let mut syncs = 0usize;
-    println!("## control-plane trace — scenario {scene}, RPS {rps:.1} (KevlarFlow)\n");
+    println!("## control-plane trace — scenario {}, RPS {rps:.1} (KevlarFlow)\n", s.name);
     for (t, ev, actions) in &res.control_log {
         match ev {
             Event::RequestArrived { .. } | Event::RequestDisplaced { .. } => {
@@ -171,6 +194,83 @@ fn trace(scene: u8, rps: f64) -> Result<()> {
         res.recovery.completed.len(),
         res.incomplete
     );
+    Ok(())
+}
+
+fn scenarios_list() -> Result<()> {
+    println!("## registered scenarios (kevlarflow scenarios run <NAME>)\n");
+    println!("| name | cluster | faults | first fault (s) | default RPS | grid | summary |");
+    println!("|---|---|---|---|---|---|---|");
+    for s in scenario::registry() {
+        let first = s
+            .first_fault_s()
+            .map(|t| format!("{t:.0}"))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "| {} | {}x{} | {} | {} | {:.1} | {} pts | {} |",
+            s.name,
+            s.n_instances,
+            s.n_stages,
+            s.faults.len(),
+            first,
+            s.default_rps,
+            s.rps_grid.len(),
+            s.summary,
+        );
+    }
+    Ok(())
+}
+
+/// Resolve the scenario a `scenarios run` invocation names: `--file`
+/// loads a JSON spec, otherwise the positional NAME hits the registry.
+fn resolve_scenario(args: &[String]) -> Result<Scenario> {
+    if let Some(path) = flag_value(args, "--file") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario spec {path}"))?;
+        return Ok(Scenario::from_json_str(&text)?);
+    }
+    let Some(name) = args.get(2).filter(|a| !a.starts_with("--")) else {
+        bail!("scenarios run needs a scenario NAME or --file SPEC.json");
+    };
+    Ok(scenario::find(name)?)
+}
+
+fn scenarios_run(args: &[String]) -> Result<()> {
+    let mut s = resolve_scenario(args)?;
+    if let Some(w) = flag_value(args, "--window") {
+        s.arrival_window_s = w.parse::<f64>()?;
+    }
+    let rps = flag_value(args, "--rps")
+        .map(|v| v.parse::<f64>())
+        .transpose()?
+        .unwrap_or(s.default_rps);
+    let policies: Vec<FaultPolicy> = match flag_value(args, "--policy") {
+        None | Some("both") => vec![FaultPolicy::Standard, FaultPolicy::KevlarFlow],
+        Some(p) => {
+            vec![FaultPolicy::parse(p)
+                .ok_or_else(|| anyhow::anyhow!("unknown policy '{p}'"))?]
+        }
+    };
+    println!("## scenario {} — {} (RPS {rps:.1})", s.name, s.summary);
+    println!("   stresses: {}\n", s.stresses);
+    let rows: Vec<_> = policies.iter().map(|&p| bench::sweep::run_point(&s, rps, p)).collect();
+    bench::sweep::print_rows(&rows);
+    Ok(())
+}
+
+fn scenarios_sweep(args: &[String]) -> Result<()> {
+    let names: Vec<String> = flag_value(args, "--only")
+        .map(|v| v.split(',').map(str::to_string).collect())
+        .unwrap_or_default();
+    let full = args.iter().any(|a| a == "--full");
+    let window = flag_value(args, "--window")
+        .map(|v| v.parse::<f64>())
+        .transpose()?;
+    let out = flag_value(args, "--out").unwrap_or("BENCH_scenarios.json");
+    let rows = bench::sweep::run_sweep(&names, full, window, false)?;
+    bench::sweep::write_sweep(std::path::Path::new(out), &rows)
+        .with_context(|| format!("writing {out}"))?;
+    println!("\nwrote {} rows to {out}", rows.len());
     Ok(())
 }
 

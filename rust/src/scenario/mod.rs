@@ -1,0 +1,692 @@
+//! Declarative fault scenarios: a [`Scenario`] spec (cluster shape,
+//! workload shape, fault script, RPS grid) buildable in code and loadable
+//! from JSON, plus the registry of named scenarios the CLI
+//! (`kevlarflow scenarios list|run|sweep`) and the sweep runner
+//! ([`crate::bench::sweep`]) execute.
+//!
+//! The paper's evaluation (§4.2) exercises three fixed fail-stop scenes;
+//! this module generalizes them into a zoo driven by
+//! [`FaultOp`]: fail-stop kills, transient
+//! flaps with rejoin, correlated same-rack double failures, cascading
+//! failures mid-recovery, fail-slow stragglers, rejoin storms, and
+//! bursty / heavy-tail arrival variants
+//! ([`crate::workload::ArrivalProcess`]). Every scenario runs through the
+//! same [`crate::coordinator::ControlPlane`] facade and is deterministic
+//! and replayable from its logged event trace
+//! (`SimResult::control_log`). `EXPERIMENTS.md` documents the catalog.
+//!
+//! ```
+//! use kevlarflow::config::FaultPolicy;
+//! use kevlarflow::scenario;
+//!
+//! // the three paper scenes are ordinary registry entries
+//! let s = scenario::find("paper-1").unwrap();
+//! let cfg = s.to_experiment(2.0, FaultPolicy::KevlarFlow);
+//! assert_eq!(cfg.cluster.n_nodes(), 8);
+//! assert_eq!(cfg.faults.len(), 1);
+//!
+//! // specs round-trip through the hand-rolled JSON layer
+//! let back = scenario::Scenario::from_json_str(&s.to_json().to_string()).unwrap();
+//! assert_eq!(back.name, "paper-1");
+//!
+//! // unknown names are a typed error, not a panic
+//! assert!(matches!(
+//!     scenario::find("no-such-scenario"),
+//!     Err(scenario::ScenarioError::UnknownScenario(_))
+//! ));
+//! ```
+
+use crate::config::{
+    ClusterConfig, ExperimentConfig, FaultPolicy, NodeId, SimTimingConfig,
+};
+use crate::config::Json;
+use crate::sim::{ClusterSim, SimResult};
+use crate::workload::{ArrivalProcess, LenDist, WorkloadSpec};
+
+pub use crate::config::FaultOp;
+
+/// Typed failure of scenario lookup, validation or JSON parsing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioError {
+    /// No registry entry with this name.
+    UnknownScenario(String),
+    /// Paper scenes are 1..=3.
+    UnknownScene(u8),
+    /// Cluster presets exist for 8 or 16 nodes only.
+    UnsupportedNodeCount(usize),
+    /// The spec is self-inconsistent (bad node ids, empty grid, …).
+    Invalid(String),
+    /// The JSON document does not describe a scenario.
+    Parse(String),
+}
+
+impl std::fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScenarioError::UnknownScenario(name) => {
+                write!(f, "unknown scenario '{name}' (see `kevlarflow scenarios list`)")
+            }
+            ScenarioError::UnknownScene(s) => write!(f, "paper scene must be 1..=3, got {s}"),
+            ScenarioError::UnsupportedNodeCount(n) => {
+                write!(f, "cluster presets are 8 or 16 nodes, got {n}")
+            }
+            ScenarioError::Invalid(msg) => write!(f, "invalid scenario: {msg}"),
+            ScenarioError::Parse(msg) => write!(f, "scenario json: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+/// A complete, declarative experiment description: what cluster to build,
+/// what traffic to offer, and which faults to inject when. Construct in
+/// code, pull from [`registry`], or load from JSON ([`Scenario::from_json`]).
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Registry key (kebab-case, no whitespace).
+    pub name: String,
+    /// One-line description for `scenarios list` / EXPERIMENTS.md.
+    pub summary: String,
+    /// Which subsystem / failure path the scenario stresses.
+    pub stresses: String,
+    /// Catalog metadata: which policy the scenario is expected to favor.
+    pub expected_winner: String,
+    pub n_instances: usize,
+    pub n_stages: usize,
+    pub workload: WorkloadSpec,
+    /// Seconds of request arrivals (the run then drains).
+    pub arrival_window_s: f64,
+    /// RPS used by `scenarios run` and quick sweeps.
+    pub default_rps: f64,
+    /// Full RPS grid for `--full` sweeps (paper grids for the scenes).
+    pub rps_grid: Vec<f64>,
+    /// Scripted fault injections, in any order.
+    pub faults: Vec<FaultOp>,
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// The cluster topology this scenario runs on.
+    pub fn cluster(&self) -> ClusterConfig {
+        ClusterConfig::custom(self.n_instances, self.n_stages)
+    }
+
+    /// Lower the spec into a runnable [`ExperimentConfig`] at `rps` —
+    /// lossless: the workload (incl. arrival process) rides along.
+    pub fn to_experiment(&self, rps: f64, policy: FaultPolicy) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::new(self.cluster(), rps).with_policy(policy);
+        cfg.workload = self.workload;
+        cfg.arrival_window_s = self.arrival_window_s;
+        cfg.faults = self.faults.clone();
+        cfg.seed = self.seed;
+        cfg
+    }
+
+    /// Run the scenario to completion.
+    pub fn run(&self, rps: f64, policy: FaultPolicy) -> SimResult {
+        ClusterSim::new(self.to_experiment(rps, policy)).run()
+    }
+
+    /// Earliest fault time, if the script is non-empty (list display).
+    pub fn first_fault_s(&self) -> Option<f64> {
+        self.faults.iter().map(|op| op.start_s()).reduce(f64::min)
+    }
+
+    /// Check the spec for self-consistency (node ids inside the cluster,
+    /// positive durations, sane arrival parameters, non-empty grid).
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        let bad = |msg: String| Err(ScenarioError::Invalid(msg));
+        if self.name.is_empty() || self.name.contains(char::is_whitespace) {
+            return bad(format!("name '{}' must be a non-empty token", self.name));
+        }
+        if self.n_instances == 0 || self.n_stages == 0 {
+            return bad("cluster shape must be at least 1x1".into());
+        }
+        if self.rps_grid.is_empty() || self.default_rps <= 0.0 {
+            return bad("rps grid must be non-empty and default_rps positive".into());
+        }
+        if self.arrival_window_s <= 0.0 {
+            return bad("arrival window must be positive".into());
+        }
+        for op in &self.faults {
+            let node = op.node();
+            if node.instance >= self.n_instances || node.stage >= self.n_stages {
+                return bad(format!("fault node {node} outside the cluster"));
+            }
+            if op.start_s() < 0.0 {
+                return bad(format!("fault at t={} before the run starts", op.start_s()));
+            }
+            match *op {
+                FaultOp::Kill { .. } => {}
+                FaultOp::Flap { down_s, .. } if down_s <= 0.0 => {
+                    return bad("flap down time must be positive".into());
+                }
+                FaultOp::Slow { factor, duration_s, .. }
+                    if factor <= 1.0 || duration_s <= 0.0 =>
+                {
+                    return bad("slow factor must exceed 1.0 for a positive duration".into());
+                }
+                _ => {}
+            }
+        }
+        match self.workload.arrival {
+            ArrivalProcess::Poisson => {}
+            ArrivalProcess::Bursty { mult, burst_s, period_s } => {
+                if mult <= 1.0 || burst_s <= 0.0 || period_s <= burst_s {
+                    return bad("bursty arrivals need mult > 1 and 0 < burst_s < period_s".into());
+                }
+                if mult * burst_s / period_s >= 1.0 {
+                    return bad("bursty duty cycle leaves no off-phase rate".into());
+                }
+            }
+            ArrivalProcess::HeavyTail { alpha } => {
+                if alpha <= 1.0 {
+                    return bad("heavy-tail alpha must exceed 1 (finite mean)".into());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------- JSON
+
+    /// Serialize the spec (inverse of [`Scenario::from_json`]).
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let num = Json::Num;
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("summary".into(), Json::Str(self.summary.clone()));
+        m.insert("stresses".into(), Json::Str(self.stresses.clone()));
+        m.insert("expected_winner".into(), Json::Str(self.expected_winner.clone()));
+        let mut cluster = BTreeMap::new();
+        cluster.insert("instances".into(), num(self.n_instances as f64));
+        cluster.insert("stages".into(), num(self.n_stages as f64));
+        m.insert("cluster".into(), Json::Obj(cluster));
+        m.insert("workload".into(), workload_json(&self.workload));
+        m.insert("arrival_window_s".into(), num(self.arrival_window_s));
+        m.insert("default_rps".into(), num(self.default_rps));
+        m.insert(
+            "rps_grid".into(),
+            Json::Arr(self.rps_grid.iter().map(|&r| num(r)).collect()),
+        );
+        m.insert("seed".into(), num(self.seed as f64));
+        m.insert(
+            "faults".into(),
+            Json::Arr(self.faults.iter().map(fault_json).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    /// Parse and validate a spec from a JSON document.
+    pub fn from_json(v: &Json) -> Result<Scenario, ScenarioError> {
+        let cluster = field(v, "cluster")?;
+        let s = Scenario {
+            name: str_field(v, "name")?,
+            summary: str_field(v, "summary").unwrap_or_default(),
+            stresses: str_field(v, "stresses").unwrap_or_default(),
+            expected_winner: str_field(v, "expected_winner").unwrap_or_default(),
+            n_instances: num_field(cluster, "instances")? as usize,
+            n_stages: num_field(cluster, "stages")? as usize,
+            workload: workload_from_json(field(v, "workload")?)?,
+            arrival_window_s: num_field(v, "arrival_window_s")?,
+            default_rps: num_field(v, "default_rps")?,
+            rps_grid: field(v, "rps_grid")?
+                .as_arr()
+                .ok_or_else(|| ScenarioError::Parse("'rps_grid' must be an array".into()))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .ok_or_else(|| ScenarioError::Parse("rps grid entries must be numbers".into()))
+                })
+                .collect::<Result<Vec<f64>, _>>()?,
+            seed: num_field(v, "seed")? as u64,
+            faults: field(v, "faults")?
+                .as_arr()
+                .ok_or_else(|| ScenarioError::Parse("'faults' must be an array".into()))?
+                .iter()
+                .map(fault_from_json)
+                .collect::<Result<Vec<FaultOp>, _>>()?,
+        };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Parse a spec from JSON text.
+    pub fn from_json_str(text: &str) -> Result<Scenario, ScenarioError> {
+        let v = Json::parse(text).map_err(|e| ScenarioError::Parse(e.to_string()))?;
+        Scenario::from_json(&v)
+    }
+}
+
+// ------------------------------------------------------- JSON helpers
+
+fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json, ScenarioError> {
+    v.get(key)
+        .ok_or_else(|| ScenarioError::Parse(format!("missing key '{key}'")))
+}
+
+fn str_field(v: &Json, key: &str) -> Result<String, ScenarioError> {
+    field(v, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| ScenarioError::Parse(format!("'{key}' must be a string")))
+}
+
+fn num_field(v: &Json, key: &str) -> Result<f64, ScenarioError> {
+    field(v, key)?
+        .as_f64()
+        .ok_or_else(|| ScenarioError::Parse(format!("'{key}' must be a number")))
+}
+
+fn node_from_json(v: &Json) -> Result<NodeId, ScenarioError> {
+    Ok(NodeId::new(
+        num_field(v, "instance")? as usize,
+        num_field(v, "stage")? as usize,
+    ))
+}
+
+fn fault_json(op: &FaultOp) -> Json {
+    use std::collections::BTreeMap;
+    let mut m = BTreeMap::new();
+    let node = op.node();
+    m.insert("t_s".into(), Json::Num(op.start_s()));
+    m.insert("instance".into(), Json::Num(node.instance as f64));
+    m.insert("stage".into(), Json::Num(node.stage as f64));
+    match *op {
+        FaultOp::Kill { .. } => {
+            m.insert("op".into(), Json::Str("kill".into()));
+        }
+        FaultOp::Flap { down_s, .. } => {
+            m.insert("op".into(), Json::Str("flap".into()));
+            m.insert("down_s".into(), Json::Num(down_s));
+        }
+        FaultOp::Slow { factor, duration_s, .. } => {
+            m.insert("op".into(), Json::Str("slow".into()));
+            m.insert("factor".into(), Json::Num(factor));
+            m.insert("duration_s".into(), Json::Num(duration_s));
+        }
+    }
+    Json::Obj(m)
+}
+
+fn fault_from_json(v: &Json) -> Result<FaultOp, ScenarioError> {
+    let t_s = num_field(v, "t_s")?;
+    let node = node_from_json(v)?;
+    match str_field(v, "op")?.as_str() {
+        "kill" => Ok(FaultOp::Kill { t_s, node }),
+        "flap" => Ok(FaultOp::Flap { t_s, node, down_s: num_field(v, "down_s")? }),
+        "slow" => Ok(FaultOp::Slow {
+            t_s,
+            node,
+            factor: num_field(v, "factor")?,
+            duration_s: num_field(v, "duration_s")?,
+        }),
+        other => Err(ScenarioError::Parse(format!("unknown fault op '{other}'"))),
+    }
+}
+
+fn lendist_json(d: &LenDist) -> Json {
+    use std::collections::BTreeMap;
+    let mut m = BTreeMap::new();
+    m.insert("mu".into(), Json::Num(d.mu));
+    m.insert("sigma".into(), Json::Num(d.sigma));
+    m.insert("min".into(), Json::Num(d.min as f64));
+    m.insert("max".into(), Json::Num(d.max as f64));
+    Json::Obj(m)
+}
+
+fn lendist_from_json(v: &Json) -> Result<LenDist, ScenarioError> {
+    Ok(LenDist {
+        mu: num_field(v, "mu")?,
+        sigma: num_field(v, "sigma")?,
+        min: num_field(v, "min")? as u32,
+        max: num_field(v, "max")? as u32,
+    })
+}
+
+fn workload_json(w: &WorkloadSpec) -> Json {
+    use std::collections::BTreeMap;
+    let mut m = BTreeMap::new();
+    m.insert("prompt".into(), lendist_json(&w.prompt));
+    m.insert("output".into(), lendist_json(&w.output));
+    let mut a = BTreeMap::new();
+    match w.arrival {
+        ArrivalProcess::Poisson => {
+            a.insert("kind".into(), Json::Str("poisson".into()));
+        }
+        ArrivalProcess::Bursty { mult, burst_s, period_s } => {
+            a.insert("kind".into(), Json::Str("bursty".into()));
+            a.insert("mult".into(), Json::Num(mult));
+            a.insert("burst_s".into(), Json::Num(burst_s));
+            a.insert("period_s".into(), Json::Num(period_s));
+        }
+        ArrivalProcess::HeavyTail { alpha } => {
+            a.insert("kind".into(), Json::Str("heavy_tail".into()));
+            a.insert("alpha".into(), Json::Num(alpha));
+        }
+    }
+    m.insert("arrival".into(), Json::Obj(a));
+    Json::Obj(m)
+}
+
+fn workload_from_json(v: &Json) -> Result<WorkloadSpec, ScenarioError> {
+    let arrival_v = field(v, "arrival")?;
+    let arrival = match str_field(arrival_v, "kind")?.as_str() {
+        "poisson" => ArrivalProcess::Poisson,
+        "bursty" => ArrivalProcess::Bursty {
+            mult: num_field(arrival_v, "mult")?,
+            burst_s: num_field(arrival_v, "burst_s")?,
+            period_s: num_field(arrival_v, "period_s")?,
+        },
+        "heavy_tail" => ArrivalProcess::HeavyTail { alpha: num_field(arrival_v, "alpha")? },
+        other => return Err(ScenarioError::Parse(format!("unknown arrival kind '{other}'"))),
+    };
+    Ok(WorkloadSpec {
+        prompt: lendist_from_json(field(v, "prompt")?)?,
+        output: lendist_from_json(field(v, "output")?)?,
+        arrival,
+    })
+}
+
+// ------------------------------------------------------------ registry
+
+/// Injection time shared by the scripted scenarios (the paper's t=120 s).
+pub const FAULT_T: f64 = 120.0;
+
+fn base(
+    name: &str,
+    summary: &str,
+    stresses: &str,
+    expected_winner: &str,
+    n_instances: usize,
+    faults: Vec<FaultOp>,
+) -> Scenario {
+    Scenario {
+        name: name.into(),
+        summary: summary.into(),
+        stresses: stresses.into(),
+        expected_winner: expected_winner.into(),
+        n_instances,
+        n_stages: 4,
+        workload: WorkloadSpec::sharegpt_like(),
+        arrival_window_s: 400.0,
+        default_rps: 2.0,
+        rps_grid: vec![1.0, 2.0, 4.0, 6.0],
+        faults,
+        seed: 42,
+    }
+}
+
+/// All registered scenarios, paper scenes first. Every entry passes
+/// [`Scenario::validate`] (pinned by a test) and is deterministic given
+/// its seed.
+pub fn registry() -> Vec<Scenario> {
+    let kill = |t_s: f64, i: usize, s: usize| FaultOp::Kill { t_s, node: NodeId::new(i, s) };
+    let flap = |t_s: f64, i: usize, s: usize, down_s: f64| FaultOp::Flap {
+        t_s,
+        node: NodeId::new(i, s),
+        down_s,
+    };
+
+    let mut paper1 = base(
+        "paper-1",
+        "8-node cluster, one fail-stop node kill (paper scene 1)",
+        "single-donor recovery: locate serializes with verification",
+        "kevlarflow",
+        2,
+        vec![kill(FAULT_T, 0, 2)],
+    );
+    paper1.arrival_window_s = 1000.0;
+    paper1.rps_grid = (1..=8).map(|r| r as f64).collect();
+
+    let mut paper2 = base(
+        "paper-2",
+        "16-node cluster, one fail-stop node kill (paper scene 2)",
+        "multi-candidate donor selection, parallel locate",
+        "kevlarflow",
+        4,
+        vec![kill(FAULT_T, 0, 2)],
+    );
+    paper2.arrival_window_s = 1000.0;
+    paper2.rps_grid = (1..=16).map(|r| r as f64).collect();
+
+    let mut paper3 = base(
+        "paper-3",
+        "16-node cluster, two simultaneous kills in different pipelines (paper scene 3)",
+        "two concurrent recoveries competing for donors",
+        "kevlarflow",
+        4,
+        vec![kill(FAULT_T, 0, 2), kill(FAULT_T, 1, 1)],
+    );
+    paper3.arrival_window_s = 1000.0;
+    paper3.rps_grid = (1..=16).map(|r| r as f64).collect();
+
+    let flap_s = base(
+        "flap",
+        "transient node flap: dies at t=120, process rejoins 150 s later",
+        "early donor release on rejoin vs waiting out the full MTTR",
+        "kevlarflow",
+        4,
+        vec![flap(FAULT_T, 0, 2, 150.0)],
+    );
+
+    let rack_double = base(
+        "rack-double",
+        "correlated same-rack failure: two nodes of one instance die together",
+        "the second hole exceeds the single-donor model: full re-init fallback",
+        "kevlarflow",
+        4,
+        vec![kill(FAULT_T, 0, 1), kill(FAULT_T, 0, 2)],
+    );
+
+    let cascade = base(
+        "cascade",
+        "cascading failure: the selected donor dies mid-recovery",
+        "recovery restart with a freshly-selected donor",
+        "kevlarflow",
+        4,
+        vec![kill(FAULT_T, 0, 2), kill(FAULT_T + 15.0, 1, 2)],
+    );
+
+    let slow_node = base(
+        "slow-node",
+        "fail-slow straggler: one node serves 4x slower for 300 s",
+        "straggler detection and quarantine (standard policy just suffers)",
+        "kevlarflow",
+        4,
+        vec![FaultOp::Slow {
+            t_s: FAULT_T,
+            node: NodeId::new(0, 2),
+            factor: 4.0,
+            duration_s: 300.0,
+        }],
+    );
+
+    let rejoin_storm = base(
+        "rejoin-storm",
+        "four staggered flaps across all instances, rejoins 150 s later",
+        "donor exhaustion, standard fallback, and a burst of early releases",
+        "kevlarflow",
+        4,
+        vec![
+            flap(FAULT_T, 0, 2, 150.0),
+            flap(FAULT_T + 20.0, 1, 3, 150.0),
+            flap(FAULT_T + 40.0, 2, 1, 150.0),
+            flap(FAULT_T + 60.0, 3, 0, 150.0),
+        ],
+    );
+
+    let mut burst = base(
+        "burst",
+        "bursty (on-off) arrivals with a fail-stop kill at t=120",
+        "failover under a 3x arrival burst: backlog drain and KV pressure",
+        "kevlarflow",
+        4,
+        vec![kill(FAULT_T, 0, 2)],
+    );
+    // duty product mult*burst_s/period_s must stay < 1 so the off-phase
+    // rate remains positive (validate() rejects the boundary)
+    burst.workload = burst.workload.with_arrival(ArrivalProcess::Bursty {
+        mult: 3.0,
+        burst_s: 30.0,
+        period_s: 120.0,
+    });
+
+    let mut heavy_tail = base(
+        "heavy-tail",
+        "heavy-tail (Pareto) arrivals on 8 nodes with a fail-stop kill at t=120",
+        "failover when arrival clumps collide with the recovery window",
+        "kevlarflow",
+        2,
+        vec![kill(FAULT_T, 0, 2)],
+    );
+    heavy_tail.workload =
+        heavy_tail.workload.with_arrival(ArrivalProcess::HeavyTail { alpha: 1.6 });
+
+    vec![
+        paper1,
+        paper2,
+        paper3,
+        flap_s,
+        rack_double,
+        cascade,
+        slow_node,
+        rejoin_storm,
+        burst,
+        heavy_tail,
+    ]
+}
+
+/// Look up a registered scenario by name.
+pub fn find(name: &str) -> Result<Scenario, ScenarioError> {
+    registry()
+        .into_iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| ScenarioError::UnknownScenario(name.to_string()))
+}
+
+/// The paper's §4.2 scene `1..=3` as a registry entry.
+pub fn paper_scene(scene: u8) -> Result<Scenario, ScenarioError> {
+    match scene {
+        1..=3 => find(&format!("paper-{scene}")),
+        other => Err(ScenarioError::UnknownScene(other)),
+    }
+}
+
+/// Sanity horizon for a scenario run: arrivals plus the slowest
+/// background-replacement path (used by tests to bound drains).
+pub fn horizon_s(s: &Scenario, timing: &SimTimingConfig, mttr_s: f64) -> f64 {
+    let last_fault = s.faults.iter().map(|op| op.start_s()).fold(0.0, f64::max);
+    s.arrival_window_s.max(last_fault + timing.detect_s + mttr_s) + 60.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_rich_and_valid() {
+        let all = registry();
+        assert!(all.len() >= 8, "only {} scenarios registered", all.len());
+        for s in &all {
+            s.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+        }
+        // names unique
+        let mut names: Vec<&str> = all.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), all.len(), "duplicate scenario names");
+        // the three paper scenes are present
+        for scene in 1..=3u8 {
+            paper_scene(scene).unwrap();
+        }
+        assert!(matches!(paper_scene(9), Err(ScenarioError::UnknownScene(9))));
+    }
+
+    #[test]
+    fn paper_scenes_match_original_shapes() {
+        let s1 = paper_scene(1).unwrap().to_experiment(2.0, FaultPolicy::Standard);
+        assert_eq!(s1.cluster.n_nodes(), 8);
+        assert_eq!(s1.arrival_window_s, 1000.0);
+        assert_eq!(s1.seed, 42);
+        assert_eq!(
+            s1.faults,
+            vec![FaultOp::Kill { t_s: 120.0, node: NodeId::new(0, 2) }]
+        );
+        let s3 = paper_scene(3).unwrap();
+        assert_eq!(s3.rps_grid.len(), 16);
+        assert_eq!(s3.faults.len(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip_every_scenario() {
+        for s in registry() {
+            let text = s.to_json().to_string();
+            let back = Scenario::from_json_str(&text)
+                .unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            assert_eq!(back.name, s.name);
+            assert_eq!(back.n_instances, s.n_instances);
+            assert_eq!(back.n_stages, s.n_stages);
+            assert_eq!(back.faults, s.faults);
+            assert_eq!(back.rps_grid, s.rps_grid);
+            assert_eq!(back.workload.arrival, s.workload.arrival);
+            assert_eq!(back.seed, s.seed);
+            // full fixed point: serialize again, byte-identical
+            assert_eq!(back.to_json().to_string(), text);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut s = find("paper-1").unwrap();
+        s.faults = vec![FaultOp::Kill { t_s: 10.0, node: NodeId::new(7, 0) }];
+        assert!(matches!(s.validate(), Err(ScenarioError::Invalid(_))));
+
+        let mut s = find("flap").unwrap();
+        s.faults = vec![FaultOp::Flap { t_s: 10.0, node: NodeId::new(0, 0), down_s: 0.0 }];
+        assert!(s.validate().is_err());
+
+        let mut s = find("slow-node").unwrap();
+        s.faults =
+            vec![FaultOp::Slow { t_s: 1.0, node: NodeId::new(0, 0), factor: 0.5, duration_s: 9.0 }];
+        assert!(s.validate().is_err());
+
+        let mut s = find("burst").unwrap();
+        s.workload.arrival = ArrivalProcess::Bursty { mult: 10.0, burst_s: 60.0, period_s: 120.0 };
+        assert!(s.validate().is_err(), "duty cycle 5.0 must be rejected");
+
+        let mut s = find("paper-2").unwrap();
+        s.rps_grid.clear();
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn parse_errors_are_typed() {
+        assert!(matches!(
+            Scenario::from_json_str("{"),
+            Err(ScenarioError::Parse(_))
+        ));
+        assert!(matches!(
+            Scenario::from_json_str("{\"name\": \"x\"}"),
+            Err(ScenarioError::Parse(_))
+        ));
+        let bad_op = r#"{"name":"x","cluster":{"instances":2,"stages":4},
+            "workload":{"prompt":{"mu":5.2,"sigma":0.35,"min":4,"max":1024},
+                        "output":{"mu":5.9,"sigma":0.38,"min":1,"max":1024},
+                        "arrival":{"kind":"poisson"}},
+            "arrival_window_s":100,"default_rps":2,"rps_grid":[1],
+            "seed":7,"faults":[{"op":"melt","t_s":1,"instance":0,"stage":0}]}"#;
+        assert!(matches!(
+            Scenario::from_json_str(bad_op),
+            Err(ScenarioError::Parse(_))
+        ));
+    }
+
+    #[test]
+    fn horizon_covers_replacement() {
+        let s = find("slow-node").unwrap();
+        let h = horizon_s(&s, &SimTimingConfig::default(), 600.0);
+        assert!(h > 720.0, "horizon {h}");
+    }
+}

@@ -6,7 +6,7 @@
 //! and executes its memory effects. See module docs in [`super`] and the
 //! mechanics in [`super::state`].
 
-use crate::config::{ExperimentConfig, NodeId};
+use crate::config::{ExperimentConfig, FaultOp, NodeId};
 use crate::coordinator::control::{
     Action, ControlPlane, Event as Ctl, EvictScope, ResetMode, Wake,
 };
@@ -25,6 +25,15 @@ use super::state::{InstanceSim, NodeSim, Pass, ReqState, SAMPLE_INTERVAL_S};
 pub type ControlRecord = (f64, Ctl, Vec<Action>);
 
 const PREFILL_PIPELINE_DEPTH: usize = 4;
+
+/// Slow factor at/above which the monitoring layer's windowed pass-time
+/// signal flags a node as a straggler (mild jitter must never trip it).
+const STRAGGLER_FACTOR: f64 = 2.0;
+
+/// How often a flapped node re-announces itself while its pipeline is
+/// still mid-recovery (the facade can only swap it back in once the
+/// pipeline reaches `Degraded`).
+const REJOIN_RETRY_S: f64 = 5.0;
 
 /// Outputs of one simulation run.
 #[derive(Debug)]
@@ -70,18 +79,30 @@ pub struct ClusterSim {
 }
 
 impl ClusterSim {
-    pub fn new(cfg: ExperimentConfig) -> Self {
-        Self::with_workload(cfg, WorkloadSpec::sharegpt_like())
+    /// Override the config's workload spec, then build.
+    pub fn with_workload(mut cfg: ExperimentConfig, spec: WorkloadSpec) -> Self {
+        cfg.workload = spec;
+        Self::new(cfg)
     }
 
-    pub fn with_workload(cfg: ExperimentConfig, spec: WorkloadSpec) -> Self {
-        let trace = generate_trace(&spec, cfg.rps, cfg.arrival_window_s, cfg.seed);
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        let trace = generate_trace(&cfg.workload, cfg.rps, cfg.arrival_window_s, cfg.seed);
         let mut q = EventQueue::new();
         for (i, r) in trace.iter().enumerate() {
             q.push(r.arrival_s, Event::Arrival { req: i });
         }
-        for &(t, node) in &cfg.failures {
-            q.push(t, Event::FailureInject { node });
+        for op in &cfg.faults {
+            match *op {
+                FaultOp::Kill { t_s, node } => q.push(t_s, Event::FailureInject { node }),
+                FaultOp::Flap { t_s, node, down_s } => {
+                    q.push(t_s, Event::FailureInject { node });
+                    q.push(t_s + down_s, Event::NodeRejoin { node });
+                }
+                FaultOp::Slow { t_s, node, factor, duration_s } => {
+                    q.push(t_s, Event::SlowStart { node, factor });
+                    q.push(t_s + duration_s, Event::SlowEnd { node });
+                }
+            }
         }
         q.push(SAMPLE_INTERVAL_S, Event::Sample);
 
@@ -238,6 +259,7 @@ impl ClusterSim {
         let fi = self.node_index(fresh);
         let di = self.node_index(donor);
         self.nodes[fi].alive = true;
+        self.nodes[fi].slow_factor = 1.0; // replacement hardware is healthy
         self.nodes[fi].kv =
             NodeKv::new(fresh, self.cfg.serving.kv_capacity_blocks, self.cfg.serving.page_size);
         let running: Vec<usize> = self.instances[instance].running.clone();
@@ -257,6 +279,7 @@ impl ClusterSim {
             let id = NodeId::new(instance, s);
             let ni = self.node_index(id);
             self.nodes[ni].alive = true;
+            self.nodes[ni].slow_factor = 1.0;
             self.nodes[ni].kv =
                 NodeKv::new(id, self.cfg.serving.kv_capacity_blocks, self.cfg.serving.page_size);
             self.nodes[ni].current = None;
@@ -277,6 +300,67 @@ impl ClusterSim {
         // the membership layer notices after the heartbeat timeout
         self.q
             .push(self.now + self.cfg.timing.detect_s, Event::FailureDetect { node });
+    }
+
+    /// A flapped node's process returns (KV memory lost). The control
+    /// plane decides whether it swaps back in (see
+    /// [`crate::coordinator::control::Event::NodeRecovered`]); until then
+    /// it idles. A rejoin landing while the pipeline is still
+    /// mid-recovery is re-announced until the facade can act on it.
+    fn node_rejoin(&mut self, node: NodeId) {
+        use crate::coordinator::PipelineState;
+        let ni = self.node_index(node);
+        if !self.nodes[ni].alive {
+            self.nodes[ni].alive = true;
+            self.nodes[ni].kv =
+                NodeKv::new(node, self.cfg.serving.kv_capacity_blocks, self.cfg.serving.page_size);
+            self.nodes[ni].current = None;
+            self.nodes[ni].queue.clear();
+            if !self.cp.health().is_dead(node) {
+                // the blip was shorter than the heartbeat timeout — the
+                // coordinator never noticed (the detection retracts). The
+                // pipeline's stalled passes would wait forever on the
+                // wiped node: retry them on a fresh epoch.
+                self.drop_epoch(node.instance);
+                self.pump(node.instance);
+                return;
+            }
+        } else if !self.cp.health().is_dead(node) {
+            return; // replacement already swapped in
+        }
+        self.control(Ctl::NodeRecovered { node });
+        if self.cp.health().is_dead(node)
+            && matches!(self.cp.state(node.instance), PipelineState::Recovering { .. })
+        {
+            self.q.push(self.now + REJOIN_RETRY_S, Event::NodeRejoin { node });
+        }
+    }
+
+    fn slow_start(&mut self, node: NodeId, factor: f64) {
+        let ni = self.node_index(node);
+        self.nodes[ni].slow_factor = factor;
+        // a sustained slowdown trips the monitoring layer's windowed
+        // pass-time signal after `straggler_detect_s`
+        if factor >= STRAGGLER_FACTOR {
+            self.q.push(
+                self.now + self.cfg.timing.straggler_detect_s,
+                Event::StragglerNotice { node },
+            );
+        }
+    }
+
+    fn slow_end(&mut self, node: NodeId) {
+        let ni = self.node_index(node);
+        self.nodes[ni].slow_factor = 1.0;
+    }
+
+    fn straggler_notice(&mut self, node: NodeId) {
+        let ni = self.node_index(node);
+        // only report if the node is still alive and still slow (a kill
+        // or a `SlowEnd` in the detection window retracts the signal)
+        if self.nodes[ni].alive && self.nodes[ni].slow_factor >= STRAGGLER_FACTOR {
+            self.control(Ctl::StragglerDetected { node });
+        }
     }
 
     fn wake(&mut self, wake: Wake) {
@@ -313,7 +397,18 @@ impl ClusterSim {
                     }
                 }
                 Event::FailureInject { node } => self.failure_inject(node),
-                Event::FailureDetect { node } => self.control(Ctl::HeartbeatMissed { node }),
+                Event::FailureDetect { node } => {
+                    // a flap shorter than the heartbeat timeout retracts
+                    // the detection: heartbeats resumed before the miss
+                    // count declared the node dead
+                    if !self.nodes[self.node_index(node)].alive {
+                        self.control(Ctl::HeartbeatMissed { node });
+                    }
+                }
+                Event::NodeRejoin { node } => self.node_rejoin(node),
+                Event::SlowStart { node, factor } => self.slow_start(node, factor),
+                Event::SlowEnd { node } => self.slow_end(node),
+                Event::StragglerNotice { node } => self.straggler_notice(node),
                 Event::Control { wake } => self.wake(wake),
                 Event::Sample => self.sample_util(),
             }

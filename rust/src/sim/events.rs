@@ -29,6 +29,19 @@ pub enum Event {
     FailureInject { node: NodeId },
     /// The membership layer declares the node dead (heartbeat timeout).
     FailureDetect { node: NodeId },
+    /// Fault injection: a flapped node's process comes back up (its KV
+    /// memory is gone); the control plane learns of it via
+    /// [`crate::coordinator::control::Event::NodeRecovered`].
+    NodeRejoin { node: NodeId },
+    /// Fault injection: the node starts servicing passes `factor`× slower
+    /// (fail-slow straggler).
+    SlowStart { node: NodeId, factor: f64 },
+    /// Fault injection: the straggler's slowdown ends.
+    SlowEnd { node: NodeId },
+    /// The monitoring layer's windowed pass-time signal crosses the
+    /// straggler threshold (reported to the control plane, which decides
+    /// whether to quarantine).
+    StragglerNotice { node: NodeId },
     /// A control-plane deadline (recovery phases elapsed, replacement
     /// provisioned, full re-init finished) fires.
     Control { wake: Wake },

@@ -37,6 +37,14 @@
 //! donor → decoupled re-form (~30 s, during which the pipeline is paused)
 //! → degraded serving through the donor + promotion of replicated KV,
 //! with a background replacement after `baseline_mttr_s`.
+//!
+//! Fault injection is scripted through
+//! [`FaultOp`](crate::config::FaultOp) (see [`crate::scenario`] for the
+//! registry of named scenarios): fail-stop kills, transient flaps whose
+//! process rejoins with its KV lost (reported to the facade as
+//! `NodeRecovered`), and fail-slow stragglers that scale a node's stage
+//! service time until the monitoring layer's windowed signal reports a
+//! `StragglerDetected`.
 
 mod cluster;
 mod events;

@@ -78,6 +78,9 @@ pub(crate) struct NodeSim {
     /// (pass index, remaining stage) being serviced, if busy.
     pub(crate) current: Option<usize>,
     pub(crate) queue: VecDeque<usize>,
+    /// Fail-slow multiplier on this node's stage service time (1.0 =
+    /// healthy; a straggler scenario raises it for a window).
+    pub(crate) slow_factor: f64,
 }
 
 impl NodeSim {
@@ -88,6 +91,7 @@ impl NodeSim {
             kv: NodeKv::new(id, capacity_blocks, page_size),
             current: None,
             queue: VecDeque::new(),
+            slow_factor: 1.0,
         }
     }
 }
@@ -151,8 +155,8 @@ impl ClusterSim {
         }
     }
 
-    /// Service time (ms) of `kind` at one stage server.
-    pub(crate) fn service_ms(&mut self, instance: usize, kind: PassKind) -> f64 {
+    /// Service time (ms) of `kind` at stage server `ni`.
+    pub(crate) fn service_ms(&mut self, instance: usize, ni: usize, kind: PassKind) -> f64 {
         let t = &self.cfg.timing;
         let base = match kind {
             PassKind::Decode => t.decode_stage_ms,
@@ -163,7 +167,7 @@ impl ClusterSim {
                 t.prefill_stage_base_ms + t.prefill_stage_per_token_ms * toks
             }
         };
-        let slow = self.instances[instance].slow_level;
+        let slow = self.instances[instance].slow_level * self.nodes[ni].slow_factor;
         base * slow * self.rng.lognormal_jitter(t.jitter_sigma)
     }
 
@@ -271,7 +275,7 @@ impl ClusterSim {
         }
         let kind = p.kind;
         let inst = p.instance;
-        let ms = self.service_ms(inst, kind);
+        let ms = self.service_ms(inst, ni, kind);
         self.nodes[ni].current = Some(item);
         self.q.push(self.now + ms / 1000.0, Event::StageDone { node: ni });
     }

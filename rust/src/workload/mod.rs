@@ -7,7 +7,9 @@
 //! length distributions fitted to published ShareGPT serving statistics
 //! (prompt ≈ 192 tokens mean, output ≈ 390 tokens mean — the latter also
 //! reconciles the paper's RPS=1 latency of ~64 s with its 163 ms TPOT).
-//! See `DESIGN.md` §1.
+//! See `DESIGN.md` §1. Beyond the paper's Poisson arrivals,
+//! [`ArrivalProcess`] adds bursty (on-off) and heavy-tail (Pareto)
+//! variants for the fault-scenario suite (`EXPERIMENTS.md`).
 
 mod rng;
 pub use rng::Pcg32;
@@ -44,11 +46,30 @@ impl LenDist {
     }
 }
 
+/// Arrival-process family of a trace. The paper replays Poisson
+/// arrivals; the bursty/heavy-tail variants extend the scenario zoo to
+/// traffic shapes that stress admission and failover backlogs harder
+/// than memoryless arrivals do.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless: exponential inter-arrival gaps at the target rate.
+    Poisson,
+    /// On-off modulated Poisson: for the first `burst_s` seconds of every
+    /// `period_s` period the rate is `mult × rps`; the off-phase rate is
+    /// scaled down so the long-run average stays at `rps`. Requires
+    /// `mult * burst_s / period_s < 1`.
+    Bursty { mult: f64, burst_s: f64, period_s: f64 },
+    /// Pareto inter-arrival gaps with tail index `alpha` (> 1) and mean
+    /// `1/rps`: occasional long silences followed by dense clumps.
+    HeavyTail { alpha: f64 },
+}
+
 /// Workload description.
 #[derive(Debug, Clone, Copy)]
 pub struct WorkloadSpec {
     pub prompt: LenDist,
     pub output: LenDist,
+    pub arrival: ArrivalProcess,
 }
 
 impl WorkloadSpec {
@@ -62,6 +83,7 @@ impl WorkloadSpec {
         Self {
             prompt: LenDist { mu: 5.2, sigma: 0.35, min: 4, max: 1024 },
             output: LenDist { mu: 5.9, sigma: 0.38, min: 1, max: 1024 },
+            arrival: ArrivalProcess::Poisson,
         }
     }
 
@@ -71,11 +93,48 @@ impl WorkloadSpec {
         Self {
             prompt: LenDist { mu: 3.0, sigma: 0.6, min: 4, max: 96 },
             output: LenDist { mu: 2.8, sigma: 0.6, min: 2, max: 48 },
+            arrival: ArrivalProcess::Poisson,
+        }
+    }
+
+    /// Same length distributions, different arrival process.
+    pub fn with_arrival(mut self, arrival: ArrivalProcess) -> Self {
+        self.arrival = arrival;
+        self
+    }
+}
+
+/// Draw the next inter-arrival gap of `process` at average rate `rps`,
+/// given the current trace time `t` (the bursty phase depends on it).
+fn next_gap(process: ArrivalProcess, rps: f64, t: f64, rng: &mut Pcg32) -> f64 {
+    match process {
+        ArrivalProcess::Poisson => -rng.uniform().ln() / rps,
+        ArrivalProcess::Bursty { mult, burst_s, period_s } => {
+            let duty = burst_s / period_s;
+            debug_assert!(mult * duty < 1.0, "off-phase rate must stay positive");
+            let rate = if t.rem_euclid(period_s) < burst_s {
+                rps * mult
+            } else {
+                rps * (1.0 - mult * duty) / (1.0 - duty)
+            };
+            -rng.uniform().ln() / rate.max(1e-9)
+        }
+        ArrivalProcess::HeavyTail { alpha } => {
+            // Pareto(x_m, alpha) with mean alpha*x_m/(alpha-1) = 1/rps.
+            // Clamp alpha above 1 so x_m stays positive: alpha <= 1 would
+            // make every gap <= 0 and the generation loop would never
+            // reach window_s (Scenario::validate rejects such specs, but
+            // WorkloadSpec is constructible directly).
+            debug_assert!(alpha > 1.0, "heavy-tail mean needs alpha > 1");
+            let alpha = alpha.max(1.0 + 1e-6);
+            let x_m = (alpha - 1.0) / (alpha * rps);
+            x_m * rng.uniform().powf(-1.0 / alpha)
         }
     }
 }
 
-/// Generate a Poisson-arrival trace at `rps` over `window_s` seconds.
+/// Generate a request trace at average rate `rps` over `window_s`
+/// seconds, with gaps drawn from the spec's [`ArrivalProcess`].
 pub fn generate_trace(
     spec: &WorkloadSpec,
     rps: f64,
@@ -87,8 +146,7 @@ pub fn generate_trace(
     let mut out = Vec::new();
     let mut id = 0u64;
     loop {
-        // exponential inter-arrival
-        t += -rng.uniform().ln() / rps;
+        t += next_gap(spec.arrival, rps, t, &mut rng);
         if t > window_s {
             break;
         }
@@ -149,6 +207,42 @@ mod tests {
             assert!(o >= 2 && o <= 48);
             assert!(p + o <= 160, "must fit Smax");
         }
+    }
+
+    #[test]
+    fn bursty_rate_averages_out_and_clumps() {
+        // duty product 3.0 * 30/120 = 0.75 < 1: off-phase rate positive
+        let spec = WorkloadSpec::sharegpt_like().with_arrival(ArrivalProcess::Bursty {
+            mult: 3.0,
+            burst_s: 30.0,
+            period_s: 120.0,
+        });
+        let tr = generate_trace(&spec, 2.0, 4800.0, 5);
+        let rate = tr.len() as f64 / 4800.0;
+        assert!((rate - 2.0).abs() < 0.3, "avg rate {rate}");
+        // in-burst windows are ~9x denser than off-phase windows
+        let count_in = |lo: f64, hi: f64| {
+            tr.iter()
+                .filter(|r| r.arrival_s.rem_euclid(120.0) >= lo && r.arrival_s.rem_euclid(120.0) < hi)
+                .count() as f64
+        };
+        let on = count_in(0.0, 30.0) / 30.0;
+        let off = count_in(30.0, 120.0) / 90.0;
+        assert!(on / off > 2.5, "burst density {on} vs {off}");
+    }
+
+    #[test]
+    fn heavy_tail_rate_and_dispersion() {
+        let spec = WorkloadSpec::sharegpt_like()
+            .with_arrival(ArrivalProcess::HeavyTail { alpha: 1.6 });
+        let tr = generate_trace(&spec, 2.0, 6000.0, 9);
+        let rate = tr.len() as f64 / 6000.0;
+        assert!((rate - 2.0).abs() < 0.5, "avg rate {rate}");
+        // heavier than exponential: gap CV well above 1
+        let gaps: Vec<f64> = tr.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect();
+        let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>() / gaps.len() as f64;
+        assert!(var.sqrt() / m > 1.3, "cv {}", var.sqrt() / m);
     }
 
     #[test]

@@ -7,7 +7,7 @@ use kevlarflow::config::{ClusterConfig, ExperimentConfig, FaultPolicy, NodeId};
 use kevlarflow::sim::ClusterSim;
 
 fn cfg(scene: u8, rps: f64, policy: FaultPolicy) -> ExperimentConfig {
-    let mut c = bench::scenario(scene, rps, policy);
+    let mut c = bench::scenario(scene, rps, policy).unwrap();
     c.arrival_window_s = 600.0;
     c
 }
@@ -109,7 +109,7 @@ fn donor_instance_keeps_serving_while_donating() {
 fn baseline_knee_positions_match_paper() {
     // Fig 3/4: the knee is between RPS 3 and 4 on 8 nodes, 6 and 7 on 16.
     let t = |nodes: usize, rps: f64| {
-        let mut c = bench::healthy(nodes, rps, FaultPolicy::Standard);
+        let mut c = bench::healthy(nodes, rps, FaultPolicy::Standard).unwrap();
         c.arrival_window_s = 500.0;
         ClusterSim::new(c).run().recorder.summary().ttft_avg
     };
@@ -123,7 +123,7 @@ fn baseline_knee_positions_match_paper() {
 fn tpot_flat_across_load_and_policies() {
     // §4.1: TPOT ~163ms avg / ~203ms p99, invariant to RPS
     for rps in [1.0, 3.0] {
-        let mut c = bench::healthy(8, rps, FaultPolicy::KevlarFlow);
+        let mut c = bench::healthy(8, rps, FaultPolicy::KevlarFlow).unwrap();
         c.arrival_window_s = 400.0;
         let s = ClusterSim::new(c).run().recorder.summary();
         assert!((0.15..0.20).contains(&s.tpot_avg), "tpot {} at rps {rps}", s.tpot_avg);

@@ -1,0 +1,212 @@
+//! Properties of the scenario suite: every registered scenario is
+//! deterministic (same seed ⇒ identical control log), its logged event
+//! trace replays into a fresh `ControlPlane` reproducing the identical
+//! action stream, and the transient-fault scenarios (flap, straggler,
+//! rejoin storm) end with every pipeline instance healthy.
+
+use kevlarflow::config::{FaultOp, FaultPolicy, NodeId};
+use kevlarflow::coordinator::control::{Action, ControlPlane, Event};
+use kevlarflow::coordinator::PipelineState;
+use kevlarflow::scenario::{find, registry, Scenario};
+use kevlarflow::sim::{ClusterSim, SimResult};
+
+/// Run `s` with a test-sized arrival window (fault scripts and
+/// background-replacement timers still play out fully during the drain).
+fn run_quick(s: &Scenario, policy: FaultPolicy) -> SimResult {
+    let mut s = s.clone();
+    s.arrival_window_s = s.arrival_window_s.min(200.0);
+    ClusterSim::new(s.to_experiment(s.default_rps, policy)).run()
+}
+
+/// Replay a run's logged event trace into a fresh facade, asserting the
+/// identical action stream; returns the facade in its final state.
+fn replay(s: &Scenario, policy: FaultPolicy, res: &SimResult) -> ControlPlane {
+    let mut quick = s.clone();
+    quick.arrival_window_s = quick.arrival_window_s.min(200.0);
+    let cfg = quick.to_experiment(quick.default_rps, policy);
+    let mut cp = ControlPlane::new(&cfg.cluster, &cfg.serving, &cfg.timing, cfg.seed);
+    for (i, (t, ev, actions)) in res.control_log.iter().enumerate() {
+        let replayed = cp.handle(*t, ev.clone());
+        assert_eq!(
+            &replayed, actions,
+            "{}: exchange {i} diverged at t={t}: {ev:?}",
+            s.name
+        );
+    }
+    cp
+}
+
+fn assert_deterministic(s: &Scenario, policy: FaultPolicy) {
+    let a = run_quick(s, policy);
+    let b = run_quick(s, policy);
+    assert_eq!(
+        a.control_log.len(),
+        b.control_log.len(),
+        "{} ({}) log lengths diverged",
+        s.name,
+        policy.label()
+    );
+    assert!(
+        a.control_log.iter().zip(b.control_log.iter()).all(|(x, y)| x == y),
+        "{} ({}) control logs diverged",
+        s.name,
+        policy.label()
+    );
+    assert_eq!(a.incomplete, 0, "{} ({}) stranded requests", s.name, policy.label());
+    replay(s, policy, &a);
+}
+
+#[test]
+fn every_scenario_is_deterministic_and_replayable() {
+    for s in registry() {
+        assert_deterministic(&s, FaultPolicy::KevlarFlow);
+    }
+}
+
+#[test]
+fn standard_policy_scenarios_deterministic_too() {
+    // a representative subset (every fault-op kind + the storm) — the
+    // full matrix under both policies would double the suite's runtime
+    // for paths the KevlarFlow pass already covers
+    for name in ["paper-1", "flap", "slow-node", "rejoin-storm"] {
+        assert_deterministic(&find(name).unwrap(), FaultPolicy::Standard);
+    }
+}
+
+#[test]
+fn transient_fault_scenarios_end_healthy() {
+    for name in ["flap", "slow-node", "rejoin-storm"] {
+        let s = find(name).unwrap();
+        let res = run_quick(&s, FaultPolicy::KevlarFlow);
+        let cp = replay(&s, FaultPolicy::KevlarFlow, &res);
+        for i in 0..s.n_instances {
+            assert_eq!(
+                cp.state(i),
+                PipelineState::Active,
+                "{name}: instance {i} not healthy at end of run"
+            );
+        }
+        assert!(cp.health().dead.is_empty(), "{name}: dead nodes remain");
+        assert!(cp.health().donations.is_empty(), "{name}: donors still attached");
+    }
+}
+
+#[test]
+fn flap_rejoin_releases_donor_before_replacement() {
+    let s = find("flap").unwrap();
+    let res = run_quick(&s, FaultPolicy::KevlarFlow);
+    let early_release = res.control_log.iter().any(|(_, ev, actions)| {
+        matches!(ev, Event::NodeRecovered { .. })
+            && actions.iter().any(|a| matches!(a, Action::ReleaseDonor { .. }))
+    });
+    assert!(early_release, "rejoin must hand the slot back and release the donor");
+    assert_eq!(res.recovery.completed.len(), 1);
+}
+
+#[test]
+fn mid_recovery_rejoin_lands_via_retry() {
+    // the node comes back while its pipeline is still Recovering: the
+    // report is re-announced until the pipeline reaches Degraded, then
+    // the node swaps in and the donor is released early
+    let mut s = find("flap").unwrap();
+    s.faults = vec![FaultOp::Flap { t_s: 120.0, node: NodeId::new(0, 2), down_s: 20.0 }];
+    s.arrival_window_s = 200.0;
+    let res = ClusterSim::new(s.to_experiment(2.0, FaultPolicy::KevlarFlow)).run();
+    let early_release = res.control_log.iter().any(|(_, ev, actions)| {
+        matches!(ev, Event::NodeRecovered { .. })
+            && actions.iter().any(|a| matches!(a, Action::ReleaseDonor { .. }))
+    });
+    assert!(early_release, "retried rejoin report must land once Degraded");
+    assert_eq!(res.recovery.completed.len(), 1);
+    assert_eq!(res.incomplete, 0);
+}
+
+#[test]
+fn blip_shorter_than_heartbeat_timeout_is_invisible() {
+    // a 2s process blip is below the 4s detection window: no failover,
+    // no recovery — the pipeline just retries its stalled passes
+    let mut s = find("flap").unwrap();
+    s.faults = vec![FaultOp::Flap { t_s: 120.0, node: NodeId::new(0, 2), down_s: 2.0 }];
+    s.arrival_window_s = 150.0;
+    let res = ClusterSim::new(s.to_experiment(2.0, FaultPolicy::KevlarFlow)).run();
+    assert!(
+        !res.control_log.iter().any(|(_, ev, _)| matches!(ev, Event::HeartbeatMissed { .. })),
+        "sub-timeout blip must not reach the control plane as a failure"
+    );
+    assert!(res.recovery.completed.is_empty());
+    assert_eq!(res.incomplete, 0, "stalled passes must be retried after the blip");
+}
+
+#[test]
+fn straggler_is_quarantined_under_kevlarflow_only() {
+    let s = find("slow-node").unwrap();
+    let kev = run_quick(&s, FaultPolicy::KevlarFlow);
+    let spliced = kev.control_log.iter().any(|(_, ev, actions)| {
+        matches!(ev, Event::StragglerDetected { .. })
+            && actions.iter().any(|a| matches!(a, Action::SpliceDonor { .. }))
+    });
+    assert!(spliced, "KevlarFlow must route around the straggler");
+    assert_eq!(kev.recovery.completed.len(), 1);
+
+    let std_res = run_quick(&s, FaultPolicy::Standard);
+    assert!(
+        std_res
+            .control_log
+            .iter()
+            .filter(|(_, ev, _)| matches!(ev, Event::StragglerDetected { .. }))
+            .all(|(_, _, actions)| actions.is_empty()),
+        "the standard policy has no straggler response"
+    );
+    assert!(std_res.recovery.completed.is_empty());
+    // tolerating the straggler costs real latency vs quarantining it
+    let (sk, ss) = (kev.recorder.summary(), std_res.recorder.summary());
+    assert!(
+        ss.latency_p99 > sk.latency_p99,
+        "straggler tolerated ({}) must hurt p99 vs quarantine ({})",
+        ss.latency_p99,
+        sk.latency_p99
+    );
+}
+
+#[test]
+fn rack_double_falls_back_to_full_reinit() {
+    let s = find("rack-double").unwrap();
+    let res = run_quick(&s, FaultPolicy::KevlarFlow);
+    // the second hole exceeds the single-donor model: the instance goes
+    // fully down (Evict-All) and later rejoins fresh
+    let full_evict = res.control_log.iter().any(|(_, _, actions)| {
+        actions.iter().any(|a| {
+            matches!(
+                a,
+                Action::Evict {
+                    instance: 0,
+                    scope: kevlarflow::coordinator::control::EvictScope::All,
+                    ..
+                }
+            )
+        })
+    });
+    assert!(full_evict, "second same-rack hole must force full re-init");
+    let rejoined = res
+        .control_log
+        .iter()
+        .any(|(_, ev, _)| matches!(ev, Event::InstanceRejoined { instance: 0 }));
+    assert!(rejoined, "instance 0 must rejoin after the MTTR");
+}
+
+#[test]
+fn cascade_restarts_recovery_with_fresh_donor() {
+    let s = find("cascade").unwrap();
+    let res = run_quick(&s, FaultPolicy::KevlarFlow);
+    let donors: Vec<_> = res
+        .control_log
+        .iter()
+        .flat_map(|(_, _, actions)| actions.iter())
+        .filter_map(|a| match a {
+            Action::SpliceDonor { instance: 0, donor, .. } => Some(*donor),
+            _ => None,
+        })
+        .collect();
+    assert!(donors.len() >= 2, "donor death mid-recovery must re-splice: {donors:?}");
+    assert!(donors.windows(2).any(|w| w[0] != w[1]), "a fresh donor must be selected");
+}

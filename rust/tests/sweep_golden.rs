@@ -1,0 +1,87 @@
+//! Golden test for the sweep runner's JSON output: the document schema
+//! (keys, suite header, row identity fields) is pinned exactly, and the
+//! bytes are pinned to be deterministic across runs — the float *values*
+//! are simulator outputs and are asserted for sanity, not bit-for-bit
+//! (they are already covered by the calibration tests).
+
+use kevlarflow::bench::sweep;
+use kevlarflow::config::Json;
+
+/// Every key a sweep row must carry, in the writer's (sorted) order.
+const ROW_KEYS: [&str; 16] = [
+    "full_recomputes",
+    "incomplete",
+    "latency_avg_s",
+    "latency_p99_s",
+    "mean_recovery_s",
+    "n",
+    "policy",
+    "preemptions",
+    "recoveries",
+    "retries",
+    "rps",
+    "scenario",
+    "tpot_avg_s",
+    "tpot_p99_s",
+    "ttft_avg_s",
+    "ttft_p99_s",
+];
+
+#[test]
+fn sweep_json_matches_golden_schema() {
+    let names = vec!["paper-1".to_string()];
+    let rows = sweep::run_sweep(&names, false, Some(150.0), true).unwrap();
+    let doc = sweep::sweep_json(&rows);
+    let text = doc.to_string();
+
+    // byte-determinism: an identical sweep serializes identically
+    let rows2 = sweep::run_sweep(&names, false, Some(150.0), true).unwrap();
+    assert_eq!(text, sweep::sweep_json(&rows2).to_string());
+
+    // document header
+    let parsed = Json::parse(&text).unwrap();
+    assert_eq!(parsed.get("suite").unwrap().as_str(), Some("kevlarflow-scenarios"));
+    assert_eq!(parsed.get("version").unwrap().as_f64(), Some(1.0));
+
+    // one row per (policy) at the scenario's default RPS, standard first
+    let out = parsed.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(out.len(), 2);
+    for (row, policy) in out.iter().zip(["standard", "kevlarflow"]) {
+        let obj = row.as_obj().unwrap();
+        let keys: Vec<&str> = obj.keys().map(String::as_str).collect();
+        assert_eq!(keys, ROW_KEYS, "row schema drifted");
+        assert_eq!(row.get("scenario").unwrap().as_str(), Some("paper-1"));
+        assert_eq!(row.get("policy").unwrap().as_str(), Some(policy));
+        assert_eq!(row.get("rps").unwrap().as_f64(), Some(2.0));
+        assert_eq!(row.get("incomplete").unwrap().as_f64(), Some(0.0));
+        assert!(row.get("n").unwrap().as_f64().unwrap() > 100.0, "too few served");
+        for metric in ["latency_avg_s", "latency_p99_s", "ttft_avg_s", "ttft_p99_s"] {
+            let v = row.get(metric).unwrap().as_f64().unwrap();
+            assert!(v.is_finite() && v > 0.0, "{metric} = {v}");
+        }
+    }
+    // the kill at t=120 recovers under KevlarFlow, not under standard
+    assert_eq!(out[0].get("recoveries").unwrap().as_f64(), Some(0.0));
+    assert_eq!(out[0].get("mean_recovery_s"), Some(&Json::Null));
+    assert_eq!(out[1].get("recoveries").unwrap().as_f64(), Some(1.0));
+    let rec = out[1].get("mean_recovery_s").unwrap().as_f64().unwrap();
+    assert!((20.0..60.0).contains(&rec), "recovery {rec}s out of band");
+    // standard loses progress (retries), kevlarflow does not
+    assert!(out[0].get("retries").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(out[1].get("retries").unwrap().as_f64(), Some(0.0));
+}
+
+#[test]
+fn sweep_file_roundtrip() {
+    let names = vec!["paper-1".to_string()];
+    let rows = sweep::run_sweep(&names, false, Some(60.0), true).unwrap();
+    let dir = std::path::PathBuf::from(env!("CARGO_TARGET_TMPDIR"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_scenarios.json");
+    sweep::write_sweep(&path, &rows).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.ends_with('\n'));
+    let parsed = Json::parse(text.trim_end()).unwrap();
+    assert_eq!(parsed, sweep::sweep_json(&rows));
+    std::fs::remove_file(&path).ok();
+}
