@@ -1,12 +1,24 @@
-//! L3 hot-path micro-benchmarks (plain harness — criterion is
-//! intentionally not a dependency; see DESIGN.md §1).
+//! L3 hot-path micro-benchmarks plus end-to-end simulation throughput
+//! (plain harness — criterion is intentionally not a dependency; see
+//! DESIGN.md §1).
 //!
 //! Run: `cargo bench --bench hot_paths`
+//!
+//! Flags (after `--`):
+//! * `--json`       additionally write `BENCH_hot_paths.json`
+//!   (`{"suite","version","mode","rows":[{name, ns_per_iter,
+//!   events_per_sec}]}`; for micro rows `events_per_sec` is
+//!   iterations/s, for the `sim …` rows it is simulator events/s — the
+//!   headline throughput number; `mode` is `"quick"` or `"full"`)
+//! * `--out FILE`   JSON output path (default `BENCH_hot_paths.json`)
+//! * `--quick`      ~20× fewer iterations + shortened sim windows (CI
+//!   schema check, not a stable measurement)
 
+use std::collections::BTreeMap;
 use std::hint::black_box;
 use std::time::Instant;
 
-use kevlarflow::config::{ClusterConfig, ExperimentConfig, FaultPolicy, NodeId};
+use kevlarflow::config::{ClusterConfig, ExperimentConfig, FaultPolicy, Json, NodeId};
 use kevlarflow::coordinator::router::{InstanceView, Router};
 use kevlarflow::coordinator::ReplicationPlanner;
 use kevlarflow::kvcache::NodeKv;
@@ -14,7 +26,13 @@ use kevlarflow::metrics::rolling_series;
 use kevlarflow::sim::{ClusterSim, Event, EventQueue};
 use kevlarflow::workload::{generate_trace, Pcg32, WorkloadSpec};
 
-fn bench<F: FnMut() -> u64>(name: &str, iters: u64, mut f: F) {
+struct BenchRow {
+    name: String,
+    ns_per_iter: f64,
+    events_per_sec: f64,
+}
+
+fn bench<F: FnMut() -> u64>(rows: &mut Vec<BenchRow>, name: &str, iters: u64, mut f: F) {
     // warmup
     for _ in 0..iters.min(3) {
         black_box(f());
@@ -34,9 +52,48 @@ fn bench<F: FnMut() -> u64>(name: &str, iters: u64, mut f: F) {
         format!("{per:.0} ns")
     };
     println!("{name:<44} {unit:>12}/iter   ({iters} iters, total {dt:.2?}, acc {acc})");
+    rows.push(BenchRow {
+        name: name.to_string(),
+        ns_per_iter: per,
+        events_per_sec: 1e9 / per,
+    });
+}
+
+fn row_json(r: &BenchRow) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), Json::Str(r.name.clone()));
+    m.insert("ns_per_iter".into(), Json::Num(r.ns_per_iter));
+    m.insert("events_per_sec".into(), Json::Num(r.events_per_sec));
+    Json::Obj(m)
+}
+
+fn write_json(path: &str, rows: &[BenchRow], quick: bool) {
+    let mut m = BTreeMap::new();
+    m.insert("suite".into(), Json::Str("kevlarflow-hot-paths".into()));
+    m.insert("version".into(), Json::Num(1.0));
+    // a --quick document must never be mistaken for a real baseline
+    m.insert("mode".into(), Json::Str(if quick { "quick" } else { "full" }.into()));
+    m.insert("rows".into(), Json::Arr(rows.iter().map(row_json).collect()));
+    let mut text = Json::Obj(m).to_string();
+    text.push('\n');
+    std::fs::write(path, text).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("\nwrote {} rows to {path}", rows.len());
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json = args.iter().any(|a| a == "--json");
+    let quick = args.iter().any(|a| a == "--quick");
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("BENCH_hot_paths.json")
+        .to_string();
+    let scale: u64 = if quick { 20 } else { 1 };
+    let mut rows: Vec<BenchRow> = Vec::new();
+
     println!("== L3 hot paths ==");
 
     // router decision
@@ -44,14 +101,14 @@ fn main() {
         .map(|id| InstanceView { id, serving: id != 2, load: id * 3 })
         .collect();
     let mut router = Router::new();
-    bench("router::pick (4 instances, 1 down)", 2_000_000, || {
+    bench(&mut rows, "router::pick (4 instances, 1 down)", 2_000_000 / scale, || {
         router.pick(black_box(&views)).unwrap() as u64
     });
 
     // kv block accounting: grow/free cycle
     let mut kv = NodeKv::new(NodeId::new(0, 0), 8192, 16);
     let mut id = 0u64;
-    bench("kvcache grow+free (37 blocks)", 300_000, || {
+    bench(&mut rows, "kvcache grow+free (37 blocks)", 300_000 / scale, || {
         id += 1;
         kv.grow_primary(id, 595).unwrap();
         kv.free_primary(id).unwrap() as u64
@@ -59,7 +116,7 @@ fn main() {
 
     // replica write + drop
     let mut kv2 = NodeKv::new(NodeId::new(0, 0), 8192, 16);
-    bench("kvcache replica write+drop", 300_000, || {
+    bench(&mut rows, "kvcache replica write+drop", 300_000 / scale, || {
         kv2.write_replica(7, NodeId::new(1, 0), 595, 0.0);
         kv2.drop_replica(7).map(|r| r.blocks as u64).unwrap_or(0)
     });
@@ -70,13 +127,13 @@ fn main() {
     let mut health = kevlarflow::coordinator::reroute::InstanceHealth::new(4);
     health.dead.push(NodeId::new(0, 2));
     health.donations.insert(NodeId::new(1, 2), 0);
-    bench("replication replan (16 nodes, degraded)", 100_000, || {
+    bench(&mut rows, "replication replan (16 nodes, degraded)", 100_000 / scale, || {
         planner.replan(&c16, &health, &[]).len() as u64
     });
 
     // event queue throughput
-    bench("event queue push+pop (1k batch)", 5_000, || {
-        let mut q = EventQueue::new();
+    bench(&mut rows, "event queue push+pop (1k batch)", 5_000 / scale, || {
+        let mut q = EventQueue::with_capacity(1000);
         for i in 0..1000 {
             q.push((i % 97) as f64, Event::Sample);
         }
@@ -89,7 +146,7 @@ fn main() {
 
     // workload generation
     let spec = WorkloadSpec::sharegpt_like();
-    bench("trace generation (1200s @ 8 RPS)", 200, || {
+    bench(&mut rows, "trace generation (1200s @ 8 RPS)", 200 / scale.min(10), || {
         generate_trace(&spec, 8.0, 1200.0, 7).len() as u64
     });
 
@@ -97,34 +154,51 @@ fn main() {
     let mut rng = Pcg32::new(1);
     let samples: Vec<(f64, f64)> =
         (0..20_000).map(|i| (i as f64 * 0.1, rng.uniform())).collect();
-    bench("rolling_series (20k samples)", 200, || {
+    bench(&mut rows, "rolling_series (20k samples)", 200 / scale.min(10), || {
         rolling_series(&samples, 30.0, 15.0, 2000.0).len() as u64
     });
 
     println!("\n== end-to-end simulation throughput ==");
-    for (name, cfg) in [
+    for (base, cfg) in [
         (
-            "sim scene1 RPS2 standard (full run)",
+            "sim scene1 RPS2 standard",
             kevlarflow::bench::scenario(1, 2.0, FaultPolicy::Standard).expect("scene 1"),
         ),
         (
-            "sim scene1 RPS2 kevlarflow (full run)",
+            "sim scene1 RPS2 kevlarflow",
             kevlarflow::bench::scenario(1, 2.0, FaultPolicy::KevlarFlow).expect("scene 1"),
         ),
         (
-            "sim 16-node RPS12 healthy (full run)",
+            "sim 16-node RPS12 healthy",
             ExperimentConfig::new(ClusterConfig::paper_16node(), 12.0),
         ),
     ] {
+        // row names carry the mode so a clamped-window quick run can
+        // never masquerade as a full-run measurement
+        let name = format!("{base} ({})", if quick { "quick" } else { "full run" });
+        let mut cfg = cfg;
+        if quick {
+            cfg.arrival_window_s = cfg.arrival_window_s.min(200.0);
+        }
         let t0 = Instant::now();
         let res = ClusterSim::new(cfg).run();
         let dt = t0.elapsed();
+        let events_per_sec = res.events_processed as f64 / dt.as_secs_f64();
         println!(
             "{name:<44} {:>9.2?}   {:>9} events  {:>6.2} Mev/s  ({} reqs)",
             dt,
             res.events_processed,
-            res.events_processed as f64 / dt.as_secs_f64() / 1e6,
+            events_per_sec / 1e6,
             res.recorder.records.len()
         );
+        rows.push(BenchRow {
+            name,
+            ns_per_iter: dt.as_nanos() as f64 / res.events_processed.max(1) as f64,
+            events_per_sec,
+        });
+    }
+
+    if json {
+        write_json(&out, &rows, quick);
     }
 }

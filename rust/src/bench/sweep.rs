@@ -7,10 +7,13 @@
 //! row (schema documented in `EXPERIMENTS.md`). Output is fully
 //! deterministic — scenario seeds are part of the specs and nothing
 //! wall-clock-dependent is recorded — so sweeps diff cleanly across
-//! commits.
+//! commits. The matrix fans out over a scoped worker-thread pool
+//! (`--jobs`); because points are independent simulations reassembled
+//! in matrix order, the emitted bytes do not depend on the thread count.
 
 use std::collections::BTreeMap;
 use std::io::Write as _;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::config::{FaultPolicy, Json};
 use crate::metrics::Summary;
@@ -51,15 +54,30 @@ pub fn run_point(s: &Scenario, rps: f64, policy: FaultPolicy) -> SweepRow {
     }
 }
 
+/// Resolve a `--jobs` request: `0` means the machine's available
+/// parallelism; the result is always within `[1, n_points]`.
+pub fn effective_jobs(requested: usize, n_points: usize) -> usize {
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let jobs = if requested == 0 { auto } else { requested };
+    jobs.clamp(1, n_points.max(1))
+}
+
 /// Execute scenarios × {Standard, KevlarFlow} × RPS. `names` empty runs
 /// the whole registry; `full_grid` sweeps each scenario's `rps_grid`
 /// instead of only its `default_rps`; `window_s` overrides every
 /// scenario's arrival window (CI uses a short one).
+///
+/// The matrix points fan out over `jobs` worker threads (`0` = available
+/// parallelism). Every point is an independent deterministic simulation
+/// and rows are collected back in matrix order, so the output — and the
+/// serialized `BENCH_scenarios.json` — is byte-identical for any thread
+/// count (pinned by `rust/tests/perf_equivalence.rs`).
 pub fn run_sweep(
     names: &[String],
     full_grid: bool,
     window_s: Option<f64>,
     quiet: bool,
+    jobs: usize,
 ) -> Result<Vec<SweepRow>, ScenarioError> {
     let mut scenarios: Vec<Scenario> = if names.is_empty() {
         registry()
@@ -74,16 +92,51 @@ pub fn run_sweep(
             s.arrival_window_s = w;
         }
     }
-    let mut rows = Vec::new();
+    // enumerate the matrix up front, in the (deterministic) output order
+    let mut points: Vec<(&Scenario, f64, FaultPolicy)> = Vec::new();
     for s in &scenarios {
-        let grid: Vec<f64> =
-            if full_grid { s.rps_grid.clone() } else { vec![s.default_rps] };
+        let grid: Vec<f64> = if full_grid { s.rps_grid.clone() } else { vec![s.default_rps] };
         for &rps in &grid {
             for policy in [FaultPolicy::Standard, FaultPolicy::KevlarFlow] {
-                rows.push(run_point(s, rps, policy));
+                points.push((s, rps, policy));
             }
         }
     }
+    let jobs = effective_jobs(jobs, points.len());
+    let mut slots: Vec<Option<SweepRow>> = points.iter().map(|_| None).collect();
+    if jobs <= 1 {
+        for (slot, &(s, rps, policy)) in slots.iter_mut().zip(points.iter()) {
+            *slot = Some(run_point(s, rps, policy));
+        }
+    } else {
+        // work-stealing by atomic cursor: threads pull the next point,
+        // results carry their matrix index back for in-order assembly
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let workers: Vec<_> = (0..jobs)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut done: Vec<(usize, SweepRow)> = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            let Some(&(s, rps, policy)) = points.get(i) else {
+                                break;
+                            };
+                            done.push((i, run_point(s, rps, policy)));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            for worker in workers {
+                for (i, row) in worker.join().expect("sweep worker panicked") {
+                    slots[i] = Some(row);
+                }
+            }
+        });
+    }
+    let rows: Vec<SweepRow> =
+        slots.into_iter().map(|r| r.expect("every sweep point computed")).collect();
     if !quiet {
         print_rows(&rows);
     }
@@ -163,8 +216,16 @@ mod tests {
 
     #[test]
     fn sweep_rejects_unknown_names() {
-        let err = run_sweep(&["nope".to_string()], false, Some(50.0), true).unwrap_err();
+        let err = run_sweep(&["nope".to_string()], false, Some(50.0), true, 1).unwrap_err();
         assert!(matches!(err, ScenarioError::UnknownScenario(_)));
+    }
+
+    #[test]
+    fn effective_jobs_clamps() {
+        assert_eq!(effective_jobs(8, 3), 3);
+        assert_eq!(effective_jobs(2, 100), 2);
+        assert_eq!(effective_jobs(5, 0), 1);
+        assert!(effective_jobs(0, 100) >= 1, "auto must resolve to a worker");
     }
 
     #[test]

@@ -62,8 +62,6 @@
 //!     .any(|a| matches!(a, Action::ReformCommunicator { members, .. } if members.len() == 4)));
 //! ```
 
-use std::collections::HashMap;
-
 use crate::config::{ClusterConfig, FaultPolicy, NodeId, ServingConfig, SimTimingConfig};
 use crate::workload::Pcg32;
 
@@ -206,8 +204,16 @@ struct PendingFailure {
     donor: NodeId,
 }
 
+/// Sentinel in the dense `assigned` table: no outstanding placement.
+const UNASSIGNED: usize = usize::MAX;
+
 /// The coordinator facade: one pure state machine driven by both
 /// substrates. See the module docs for the contract and examples.
+///
+/// Request bookkeeping is dense: request ids are sequential trace
+/// indices (see [`crate::workload::generate_trace`]), so the
+/// `assigned`/`synced` tables are flat vectors indexed by id, not hash
+/// maps — no hashing or rehash churn on the million-request hot loop.
 #[derive(Debug, Clone)]
 pub struct ControlPlane {
     cluster: ClusterConfig,
@@ -219,16 +225,21 @@ pub struct ControlPlane {
     recovery: RecoveryManager,
     /// Recovery-plan jitter stream — the only randomness in the facade.
     rng: Pcg32,
-    /// Outstanding (dispatched, not completed) requests per instance —
-    /// the load signal for least-loaded re-dispatch.
-    load: Vec<usize>,
-    /// Current placement of every outstanding request.
-    assigned: HashMap<u64, usize>,
+    /// Router-visible view of every instance, maintained incrementally
+    /// (serving flips on state changes, load on dispatch/complete) so
+    /// routing never rebuilds it. `views[i].load` is the outstanding
+    /// (dispatched, not completed) request count — the least-loaded
+    /// re-dispatch signal.
+    views: Vec<InstanceView>,
+    /// Current placement of every outstanding request, indexed by id
+    /// (`UNASSIGNED` = none).
+    assigned: Vec<usize>,
     /// Decode iterations per instance (replication cadence).
     iters: Vec<u64>,
     /// Replicated-context watermark per request (from
-    /// [`Event::ReplicaSynced`]) — advisory bookkeeping for drivers.
-    synced: HashMap<u64, u32>,
+    /// [`Event::ReplicaSynced`]), indexed by id — advisory bookkeeping
+    /// for drivers.
+    synced: Vec<u32>,
     /// In-flight recovery per instance.
     pending: Vec<Option<PendingFailure>>,
 }
@@ -250,41 +261,67 @@ impl ControlPlane {
             planner: ReplicationPlanner::new(cluster),
             recovery: RecoveryManager::new(),
             rng: Pcg32::with_stream(seed, 0xc011),
-            load: vec![0; n],
-            assigned: HashMap::new(),
+            views: (0..n).map(|id| InstanceView { id, serving: true, load: 0 }).collect(),
+            assigned: Vec::new(),
             iters: vec![0; n],
-            synced: HashMap::new(),
+            synced: Vec::new(),
             pending: vec![None; n],
         }
     }
 
+    /// Pre-size the dense per-request tables for `n` requests. Drivers
+    /// that know the trace length call this once so the hot loop never
+    /// regrows them; unsized tables still grow on demand.
+    pub fn reserve_requests(&mut self, n: usize) {
+        if self.assigned.len() < n {
+            self.assigned.resize(n, UNASSIGNED);
+        }
+        if self.synced.len() < n {
+            self.synced.resize(n, 0);
+        }
+    }
+
     /// Process one event at time `now_s`, returning the decisions the
-    /// substrate must execute, in order.
+    /// substrate must execute, in order. Thin allocating wrapper around
+    /// [`ControlPlane::handle_into`].
     pub fn handle(&mut self, now_s: f64, event: Event) -> Vec<Action> {
+        let mut out = Vec::new();
+        self.handle_into(now_s, event, &mut out);
+        out
+    }
+
+    /// Allocation-free core of [`ControlPlane::handle`]: appends the
+    /// decided actions to `out` (callers pass a cleared, reused buffer).
+    /// The steady-state events (arrival/completion/pass/sync) allocate
+    /// nothing; only the rare failure choreography builds member lists.
+    pub fn handle_into(&mut self, now_s: f64, event: Event, out: &mut Vec<Action>) {
         match event {
-            Event::RequestArrived { req } => self.route(req, false),
+            Event::RequestArrived { req } => self.route(req, false, out),
             Event::RequestDisplaced { req } => {
-                self.synced.remove(&req);
-                self.route(req, true)
+                self.set_synced(req, 0);
+                self.route(req, true, out)
             }
             Event::RequestCompleted { req } => {
-                if let Some(i) = self.assigned.remove(&req) {
-                    self.load[i] = self.load[i].saturating_sub(1);
+                let idx = self.req_index(req);
+                if let Some(slot) = self.assigned.get_mut(idx) {
+                    let i = *slot;
+                    if i != UNASSIGNED {
+                        *slot = UNASSIGNED;
+                        self.views[i].load = self.views[i].load.saturating_sub(1);
+                    }
                 }
-                self.synced.remove(&req);
-                Vec::new()
+                self.set_synced(req, 0);
             }
-            Event::PassCompleted { instance, decode } => self.pass_completed(instance, decode),
-            Event::ReplicaSynced { req, tokens } => {
-                self.synced.insert(req, tokens);
-                Vec::new()
+            Event::PassCompleted { instance, decode } => {
+                self.pass_completed(instance, decode, out)
             }
-            Event::HeartbeatMissed { node } => self.node_failed(now_s, node),
-            Event::RecoveryElapsed { instance } => self.recovery_elapsed(now_s, instance),
-            Event::NodeProvisioned { instance } => self.node_provisioned(instance),
-            Event::InstanceRejoined { instance } => self.instance_rejoined(instance),
-            Event::NodeRecovered { node } => self.node_recovered(node),
-            Event::StragglerDetected { node } => self.straggler_detected(now_s, node),
+            Event::ReplicaSynced { req, tokens } => self.set_synced(req, tokens),
+            Event::HeartbeatMissed { node } => self.node_failed(now_s, node, out),
+            Event::RecoveryElapsed { instance } => self.recovery_elapsed(now_s, instance, out),
+            Event::NodeProvisioned { instance } => self.node_provisioned(instance, out),
+            Event::InstanceRejoined { instance } => self.instance_rejoined(instance, out),
+            Event::NodeRecovered { node } => self.node_recovered(node, out),
+            Event::StragglerDetected { node } => self.straggler_detected(now_s, node, out),
         }
     }
 
@@ -310,83 +347,117 @@ impl ControlPlane {
         &self.recovery
     }
 
-    /// Where `req` is currently placed, if outstanding.
+    /// Where `req` is currently placed, if outstanding. (Reads convert
+    /// the id checked — an id beyond the address space is simply not
+    /// outstanding, never a truncated alias of another request.)
     pub fn assigned_instance(&self, req: u64) -> Option<usize> {
-        self.assigned.get(&req).copied()
+        match usize::try_from(req).ok().and_then(|idx| self.assigned.get(idx)) {
+            Some(&i) if i != UNASSIGNED => Some(i),
+            _ => None,
+        }
     }
 
     /// Outstanding requests dispatched to `instance`.
     pub fn load(&self, instance: usize) -> usize {
-        self.load[instance]
+        self.views[instance].load
     }
 
     /// Replicated-context watermark of `req` (0 if never synced).
     pub fn synced_tokens(&self, req: u64) -> u32 {
-        self.synced.get(&req).copied().unwrap_or(0)
+        usize::try_from(req)
+            .ok()
+            .and_then(|idx| self.synced.get(idx))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    // ------------------------------------------------------- dense tables
+
+    /// State changes flow through here so the router's incremental view
+    /// stays in lock-step with [`InstanceHealth::states`].
+    fn set_state(&mut self, instance: usize, state: PipelineState) {
+        self.health.states[instance] = state;
+        self.views[instance].serving = state.serving();
+    }
+
+    /// The dense-table index of a request id. The tables rely on ids
+    /// being sequential trace indices (the contract documented on
+    /// [`ControlPlane`]); a wild id — hash- or timestamp-derived — would
+    /// otherwise demand an absurd resize (or silently truncate on
+    /// 32-bit targets), so fail loudly instead.
+    fn req_index(&self, req: u64) -> usize {
+        let idx = usize::try_from(req).expect("request id overflows the address space");
+        debug_assert!(
+            idx <= self.assigned.len().max(self.synced.len()) + (1 << 20),
+            "request id {req} is not a dense trace index"
+        );
+        idx
+    }
+
+    fn set_synced(&mut self, req: u64, tokens: u32) {
+        let idx = self.req_index(req);
+        if idx >= self.synced.len() {
+            if tokens == 0 {
+                return; // clearing an entry that was never written
+            }
+            self.synced.resize(idx + 1, 0);
+        }
+        self.synced[idx] = tokens;
     }
 
     // -------------------------------------------------------------- routing
 
-    fn views(&self) -> Vec<InstanceView> {
-        (0..self.cluster.n_instances)
-            .map(|id| InstanceView {
-                id,
-                serving: self.health.states[id].serving(),
-                load: self.load[id],
-            })
-            .collect()
-    }
-
-    fn route(&mut self, req: u64, least_loaded: bool) -> Vec<Action> {
-        if let Some(prev) = self.assigned.remove(&req) {
-            self.load[prev] = self.load[prev].saturating_sub(1);
+    fn route(&mut self, req: u64, least_loaded: bool, out: &mut Vec<Action>) {
+        let idx = self.req_index(req);
+        if idx >= self.assigned.len() {
+            self.assigned.resize(idx + 1, UNASSIGNED);
         }
-        let views = self.views();
+        let prev = self.assigned[idx];
+        if prev != UNASSIGNED {
+            self.views[prev].load = self.views[prev].load.saturating_sub(1);
+        }
         let pick = if least_loaded {
-            self.router.pick_least_loaded(&views)
+            self.router.pick_least_loaded(&self.views)
         } else {
-            self.router.pick(&views)
+            self.router.pick(&self.views)
         };
         // total outage: park at a deterministic DOWN instance's queue; it
         // serves on rejoin (only reachable when no pipeline serves).
-        let instance = pick.unwrap_or(req as usize % self.cluster.n_instances);
-        self.assigned.insert(req, instance);
-        self.load[instance] += 1;
-        vec![Action::Dispatch { req, instance }]
+        let instance = pick.unwrap_or(idx % self.cluster.n_instances);
+        self.assigned[idx] = instance;
+        self.views[instance].load += 1;
+        out.push(Action::Dispatch { req, instance });
     }
 
     // ---------------------------------------------------------- replication
 
-    fn pass_completed(&mut self, instance: usize, decode: bool) -> Vec<Action> {
+    fn pass_completed(&mut self, instance: usize, decode: bool, out: &mut Vec<Action>) {
         if !decode {
-            return Vec::new();
+            return;
         }
         self.iters[instance] += 1;
         let every = self.serving.replication_interval_iters as u64;
         if self.serving.replication && self.iters[instance] % every == 0 {
-            vec![Action::FlushReplicas { instance }]
-        } else {
-            Vec::new()
+            out.push(Action::FlushReplicas { instance });
         }
     }
 
     // --------------------------------------------------------------- faults
 
-    fn node_failed(&mut self, now_s: f64, node: NodeId) -> Vec<Action> {
+    fn node_failed(&mut self, now_s: f64, node: NodeId, out: &mut Vec<Action>) {
         if self.health.is_dead(node) {
-            return Vec::new();
+            return;
         }
         self.health.dead.push(node);
         // every pipeline whose traffic traverses this node is affected:
         // its own instance, plus a borrower it was donating to
-        let mut affected = vec![node.instance];
+        let mut affected = [node.instance, usize::MAX];
         if let Some(&borrower) = self.health.donations.get(&node) {
-            affected.push(borrower);
+            affected[1] = borrower;
         }
         self.health.donations.remove(&node);
 
-        let mut out = Vec::new();
-        for instance in affected {
+        for instance in affected.into_iter().filter(|&i| i != usize::MAX) {
             if !self.health.states[instance].serving() {
                 continue;
             }
@@ -405,21 +476,22 @@ impl ControlPlane {
             );
             match self.serving.fault_policy {
                 FaultPolicy::KevlarFlow if !second_hole => {
-                    self.kevlar_failover(now_s, instance, local_failed, &mut out)
+                    self.kevlar_failover(now_s, instance, local_failed, out)
                 }
-                _ => self.standard_failover(now_s, instance, &mut out),
+                _ => self.standard_failover(now_s, instance, out),
             }
         }
         self.planner.replan(&self.cluster, &self.health, &[node]);
-        out
     }
 
     /// Standard fault behavior: the pipeline leaves the LB group;
     /// displaced requests retry from scratch on the survivors; a full
     /// re-initialization returns it after `baseline_mttr_s`.
     fn standard_failover(&mut self, now_s: f64, instance: usize, out: &mut Vec<Action>) {
-        self.health.states[instance] =
-            PipelineState::Down { until_s: now_s + self.serving.baseline_mttr_s };
+        self.set_state(
+            instance,
+            PipelineState::Down { until_s: now_s + self.serving.baseline_mttr_s },
+        );
         // release any donor still attached to this pipeline (a KevlarFlow
         // recovery that fell back here must not strand its donor)
         self.health.donations.retain(|_, b| *b != instance);
@@ -482,8 +554,10 @@ impl ControlPlane {
         // detection already happened (we are handling HeartbeatMissed);
         // the remaining service-visible phases run from now.
         let phases_s: f64 = plan.phases.iter().map(|&(_, d)| d).sum();
-        self.health.states[instance] =
-            PipelineState::Recovering { failed_stage: failed.stage, since_s: now_s };
+        self.set_state(
+            instance,
+            PipelineState::Recovering { failed_stage: failed.stage, since_s: now_s },
+        );
         // only requests with in-flight KV must wait for the donor; queued
         // requests reroute to healthy siblings immediately
         out.push(Action::Evict {
@@ -510,14 +584,14 @@ impl ControlPlane {
         });
     }
 
-    fn recovery_elapsed(&mut self, now_s: f64, instance: usize) -> Vec<Action> {
+    fn recovery_elapsed(&mut self, now_s: f64, instance: usize, out: &mut Vec<Action>) {
         // stale wake-up (the engine may complete real re-formation ahead
         // of the modeled phase budget and feed the event early)
         if !matches!(self.health.states[instance], PipelineState::Recovering { .. }) {
-            return Vec::new();
+            return;
         }
         let Some(PendingFailure { injected_s, failed, donor }) = self.pending[instance] else {
-            return Vec::new();
+            return;
         };
         // a second node of this instance died while it was recovering
         // (its failover was skipped — the pipeline was not serving): two
@@ -528,20 +602,15 @@ impl ControlPlane {
             .iter()
             .any(|n| n.instance == instance && n.stage != failed.stage);
         if second_hole {
-            let mut out = Vec::new();
-            self.standard_failover(now_s, instance, &mut out);
-            return out;
+            return self.standard_failover(now_s, instance, out);
         }
         // the planned donor must still be donating to this instance
         if self.health.donations.get(&donor) != Some(&instance) {
             // the donor died while recovery was in flight: restart the
             // recovery with a freshly-selected donor
-            let mut out = Vec::new();
-            self.kevlar_failover(now_s, instance, failed, &mut out);
-            return out;
+            return self.kevlar_failover(now_s, instance, failed, out);
         }
-        self.health.states[instance] =
-            PipelineState::Degraded { failed_stage: failed.stage, donor };
+        self.set_state(instance, PipelineState::Degraded { failed_stage: failed.stage, donor });
         self.recovery.record(RecoveryRecord {
             failed,
             donor,
@@ -551,33 +620,33 @@ impl ControlPlane {
             replacement_s: injected_s + self.serving.baseline_mttr_s,
         });
         self.planner.replan(&self.cluster, &self.health, &[]);
-        vec![Action::PromoteReplicas { instance, donor }]
+        out.push(Action::PromoteReplicas { instance, donor });
     }
 
-    fn node_provisioned(&mut self, instance: usize) -> Vec<Action> {
+    fn node_provisioned(&mut self, instance: usize, out: &mut Vec<Action>) {
         // e.g. the recovery fell back to standard behavior, or a second
         // failure restarted it — the swap only applies to a Degraded
         // pipeline
         let PipelineState::Degraded { failed_stage, donor } = self.health.states[instance] else {
-            return Vec::new();
+            return;
         };
-        self.swap_in(instance, NodeId::new(instance, failed_stage), donor)
+        self.swap_in(instance, NodeId::new(instance, failed_stage), donor, out)
     }
 
     /// A healthy node now fills `instance`'s failed slot: release the
     /// donor, clear the slot from the dead list, return to `Active`.
-    fn swap_in(&mut self, instance: usize, fresh: NodeId, donor: NodeId) -> Vec<Action> {
+    fn swap_in(&mut self, instance: usize, fresh: NodeId, donor: NodeId, out: &mut Vec<Action>) {
         self.health.donations.remove(&donor);
         self.health.dead.retain(|&n| n != fresh);
-        self.health.states[instance] = PipelineState::Active;
+        self.set_state(instance, PipelineState::Active);
         self.pending[instance] = None;
         self.planner.replan(&self.cluster, &self.health, &[]);
-        vec![Action::ReleaseDonor { instance, donor, fresh }]
+        out.push(Action::ReleaseDonor { instance, donor, fresh });
     }
 
-    fn node_recovered(&mut self, node: NodeId) -> Vec<Action> {
+    fn node_recovered(&mut self, node: NodeId, out: &mut Vec<Action>) {
         if !self.health.is_dead(node) {
-            return Vec::new();
+            return;
         }
         // an early swap-in is only safe when the pipeline already serves
         // degraded through a donor for exactly this slot; mid-recovery or
@@ -585,13 +654,13 @@ impl ControlPlane {
         // replacement timer remains the fallback and is idempotent)
         match self.health.states[node.instance] {
             PipelineState::Degraded { failed_stage, donor } if failed_stage == node.stage => {
-                self.swap_in(node.instance, node, donor)
+                self.swap_in(node.instance, node, donor, out)
             }
-            _ => Vec::new(),
+            _ => {}
         }
     }
 
-    fn straggler_detected(&mut self, now_s: f64, node: NodeId) -> Vec<Action> {
+    fn straggler_detected(&mut self, now_s: f64, node: NodeId, out: &mut Vec<Action>) {
         // the standard policy has no partial-availability story — it
         // tolerates the straggler; quarantining a donor would cascade a
         // second recovery, so a slow donor is tolerated too
@@ -600,19 +669,19 @@ impl ControlPlane {
             && !self.health.is_donor(node)
             && self.health.states[node.instance] == PipelineState::Active;
         if !quarantine {
-            return Vec::new();
+            return;
         }
         // route around the slow node exactly like a fail-stop loss: mark
         // it dead, splice a donor, provision a replacement in background
-        self.node_failed(now_s, node)
+        self.node_failed(now_s, node, out)
     }
 
-    fn instance_rejoined(&mut self, instance: usize) -> Vec<Action> {
+    fn instance_rejoined(&mut self, instance: usize, out: &mut Vec<Action>) {
         self.health.dead.retain(|n| n.instance != instance);
-        self.health.states[instance] = PipelineState::Active;
+        self.set_state(instance, PipelineState::Active);
         self.planner.replan(&self.cluster, &self.health, &[]);
         // fresh pipeline, fresh epoch: anything still in flight is stale
-        vec![Action::DropEpoch { instance }]
+        out.push(Action::DropEpoch { instance });
     }
 }
 
@@ -633,6 +702,31 @@ mod tests {
                 _ => None,
             })
             .collect()
+    }
+
+    #[test]
+    fn handle_into_reuses_buffer_and_matches_handle() {
+        // the allocating wrapper and the buffer-reuse core must be the
+        // same machine; pre-sizing the dense tables must not change it
+        let mut a = cp(ClusterConfig::paper_8node(), FaultPolicy::KevlarFlow);
+        let mut b = cp(ClusterConfig::paper_8node(), FaultPolicy::KevlarFlow);
+        b.reserve_requests(64);
+        let mut buf = Vec::new();
+        for req in 0..8u64 {
+            let wrapped = a.handle(req as f64, Event::RequestArrived { req });
+            buf.clear();
+            b.handle_into(req as f64, Event::RequestArrived { req }, &mut buf);
+            assert_eq!(wrapped, buf);
+        }
+        let failed = NodeId::new(0, 2);
+        let wrapped = a.handle(124.0, Event::HeartbeatMissed { node: failed });
+        buf.clear();
+        b.handle_into(124.0, Event::HeartbeatMissed { node: failed }, &mut buf);
+        assert_eq!(wrapped, buf);
+        assert_eq!(a.load(0), b.load(0));
+        assert_eq!(a.load(1), b.load(1));
+        assert_eq!(a.assigned_instance(3), b.assigned_instance(3));
+        assert_eq!(a.synced_tokens(3), b.synced_tokens(3));
     }
 
     #[test]

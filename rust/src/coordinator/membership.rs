@@ -5,7 +5,7 @@
 //! `misses` consecutive intervals is declared failed; declaration time is
 //! what the recovery timeline (Fig 8) starts from.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::config::NodeId;
 
@@ -27,7 +27,9 @@ struct NodeEntry {
 pub struct Membership {
     interval_s: f64,
     misses: u32,
-    nodes: HashMap<NodeId, NodeEntry>,
+    /// Ordered so [`Membership::check`] / [`Membership::alive_nodes`]
+    /// iterate deterministically (part of the no-HashMap-order audit).
+    nodes: BTreeMap<NodeId, NodeEntry>,
 }
 
 impl Membership {

@@ -8,7 +8,7 @@
 //! donor already carries two pipelines' primary KV; adding replica
 //! traffic would eat the headroom rerouting depends on).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::config::{ClusterConfig, NodeId};
 
@@ -18,8 +18,9 @@ use super::reroute::InstanceHealth;
 #[derive(Debug, Clone, Default)]
 pub struct ReplicationPlanner {
     /// node → current replication target (None = replication suspended
-    /// for this node).
-    targets: HashMap<NodeId, Option<NodeId>>,
+    /// for this node). Ordered so [`ReplicationPlanner::edges`] iterates
+    /// deterministically (nothing downstream may depend on map order).
+    targets: BTreeMap<NodeId, Option<NodeId>>,
 }
 
 impl ReplicationPlanner {

@@ -8,7 +8,7 @@
 //! routes instance `i`'s traffic through it — so the LB group loses one
 //! node's worth of capacity, not one pipeline's.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::config::{ClusterConfig, NodeId};
 
@@ -38,8 +38,10 @@ pub struct InstanceHealth {
     pub states: Vec<PipelineState>,
     /// Nodes currently dead (awaiting replacement).
     pub dead: Vec<NodeId>,
-    /// donor node → instance it is donating to.
-    pub donations: HashMap<NodeId, usize>,
+    /// donor node → instance it is donating to. Ordered so that any
+    /// iteration over donations is deterministic (a `HashMap` here let
+    /// iteration order leak into replication replans before PR 2).
+    pub donations: BTreeMap<NodeId, usize>,
 }
 
 impl InstanceHealth {
@@ -47,7 +49,7 @@ impl InstanceHealth {
         Self {
             states: vec![PipelineState::Active; n_instances],
             dead: Vec::new(),
-            donations: HashMap::new(),
+            donations: BTreeMap::new(),
         }
     }
 

@@ -74,7 +74,7 @@ impl ControlDriver {
                 true
             }
         });
-        due.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        due.sort_by(|a, b| a.0.total_cmp(&b.0));
         due.into_iter().map(|(_, w)| w.event()).collect()
     }
 

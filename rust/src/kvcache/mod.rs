@@ -128,8 +128,9 @@ impl NodeKv {
                     .map(|(&k, r)| (k, r.touched_s, r.blocks))
                     .collect();
                 // oldest first; id tiebreak keeps eviction order
-                // deterministic across runs (HashMap iteration is not)
-                victims.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+                // deterministic across runs (HashMap iteration is not);
+                // total_cmp so a rogue NaN timestamp cannot panic here
+                victims.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
                 for (vid, _, vblocks) in victims {
                     if need <= self.free_blocks() {
                         break;

@@ -29,7 +29,11 @@ USAGE:
                           [--window S] [--file SPEC.json]
                                               run one scenario, print summaries
   kevlarflow scenarios sweep [--out FILE] [--only a,b] [--full] [--window S]
-                                              run the matrix, write JSON results
+                             [--jobs N]
+                                              run the matrix on N worker threads
+                                              (0/default = all cores; output is
+                                              byte-identical for any N), write
+                                              JSON results
                                               (default out: BENCH_scenarios.json)
   kevlarflow trace [--scenario NAME | --scene N] [--rps R]
                                               run a failure scenario and print
@@ -156,7 +160,7 @@ fn trace(s: &Scenario, rps: f64) -> Result<()> {
 
     let mut s = s.clone();
     s.arrival_window_s = s.arrival_window_s.min(300.0);
-    let res = s.run(rps, FaultPolicy::KevlarFlow);
+    let res = s.run_logged(rps, FaultPolicy::KevlarFlow);
 
     let mut dispatches = 0usize;
     let mut flushes = 0usize;
@@ -266,8 +270,12 @@ fn scenarios_sweep(args: &[String]) -> Result<()> {
     let window = flag_value(args, "--window")
         .map(|v| v.parse::<f64>())
         .transpose()?;
+    let jobs = flag_value(args, "--jobs")
+        .map(|v| v.parse::<usize>())
+        .transpose()?
+        .unwrap_or(0);
     let out = flag_value(args, "--out").unwrap_or("BENCH_scenarios.json");
-    let rows = bench::sweep::run_sweep(&names, full, window, false)?;
+    let rows = bench::sweep::run_sweep(&names, full, window, false, jobs)?;
     bench::sweep::write_sweep(std::path::Path::new(out), &rows)
         .with_context(|| format!("writing {out}"))?;
     println!("\nwrote {} rows to {out}", rows.len());

@@ -37,16 +37,32 @@ impl RequestRecord {
 }
 
 /// p-th percentile (0..=100) by linear interpolation; `None` on empty.
+///
+/// Selection-based: `select_nth_unstable_by` partitions around the low
+/// order statistic in O(n) instead of sorting the whole slice — the old
+/// full sort made [`rolling_series`] O(N·W log W) across its windows.
+/// The two order statistics interpolated are exactly the ones a full
+/// `total_cmp` sort would index, so results are bit-identical. The slice
+/// is reordered (partitioned) as a side effect, as the `&mut` always
+/// advertised. NaN-safe: `total_cmp` places NaNs at the ends of the
+/// order (negative NaN below −∞, positive above +∞) instead of
+/// panicking, and a selected NaN propagates into the result.
 pub fn percentile(values: &mut [f64], p: f64) -> Option<f64> {
     if values.is_empty() {
         return None;
     }
-    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = (p / 100.0) * (values.len() as f64 - 1.0);
     let lo = rank.floor() as usize;
-    let hi = rank.ceil() as usize;
     let frac = rank - lo as f64;
-    Some(values[lo] * (1.0 - frac) + values[hi.min(values.len() - 1)] * frac)
+    let (_, &mut lo_v, above) = values.select_nth_unstable_by(lo, f64::total_cmp);
+    if frac <= 0.0 || above.is_empty() {
+        return Some(lo_v);
+    }
+    // the (lo+1)-th order statistic is the total_cmp-minimum of the high
+    // partition (NOT f64::min, which would skip a NaN instead of keeping
+    // the same element a full sort would put at index lo+1)
+    let hi_v = above.iter().copied().min_by(f64::total_cmp).unwrap_or(lo_v);
+    Some(lo_v * (1.0 - frac) + hi_v * frac)
 }
 
 fn mean(values: &[f64]) -> f64 {
@@ -58,8 +74,9 @@ fn mean(values: &[f64]) -> f64 {
 }
 
 /// Aggregate summary over a set of completed requests — the columns of
-/// the paper's Table 1.
-#[derive(Debug, Clone, Copy, Default)]
+/// the paper's Table 1. `PartialEq` so equivalence tests (e.g. the
+/// LogMode Off-vs-Full proof) can compare rows exactly.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Summary {
     pub n: usize,
     pub latency_avg: f64,
@@ -106,15 +123,19 @@ pub fn rolling_series(
     step_s: f64,
     t_end: f64,
 ) -> Vec<RollingPoint> {
+    // one sort by time up front; every window is then a contiguous slice
+    // whose percentile comes from O(W) selection, not an O(W log W) sort
     let mut sorted: Vec<(f64, f64)> = samples.to_vec();
-    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
     let mut out = Vec::new();
+    let mut vals: Vec<f64> = Vec::new();
     let mut t = window_s;
     while t <= t_end {
         let lo = sorted.partition_point(|&(ts, _)| ts < t - window_s);
         let hi = sorted.partition_point(|&(ts, _)| ts <= t);
-        let mut vals: Vec<f64> = sorted[lo..hi].iter().map(|&(_, v)| v).collect();
-        if !vals.is_empty() {
+        if hi > lo {
+            vals.clear();
+            vals.extend(sorted[lo..hi].iter().map(|&(_, v)| v));
             out.push(RollingPoint {
                 t,
                 avg: mean(&vals),

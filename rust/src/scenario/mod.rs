@@ -12,8 +12,9 @@
 //! bursty / heavy-tail arrival variants
 //! ([`crate::workload::ArrivalProcess`]). Every scenario runs through the
 //! same [`crate::coordinator::ControlPlane`] facade and is deterministic
-//! and replayable from its logged event trace
-//! (`SimResult::control_log`). `EXPERIMENTS.md` documents the catalog.
+//! and replayable from its logged event trace (`SimResult::control_log`,
+//! recorded by [`Scenario::run_logged`]; plain [`Scenario::run`] skips
+//! the log for sweep throughput). `EXPERIMENTS.md` documents the catalog.
 //!
 //! ```
 //! use kevlarflow::config::FaultPolicy;
@@ -40,7 +41,7 @@ use crate::config::{
     ClusterConfig, ExperimentConfig, FaultPolicy, NodeId, SimTimingConfig,
 };
 use crate::config::Json;
-use crate::sim::{ClusterSim, SimResult};
+use crate::sim::{ClusterSim, LogMode, SimResult};
 use crate::workload::{ArrivalProcess, LenDist, WorkloadSpec};
 
 pub use crate::config::FaultOp;
@@ -122,9 +123,17 @@ impl Scenario {
         cfg
     }
 
-    /// Run the scenario to completion.
+    /// Run the scenario to completion. Control-log recording is off —
+    /// the sweep-throughput path; use [`Scenario::run_logged`] when the
+    /// exchange stream is needed.
     pub fn run(&self, rps: f64, policy: FaultPolicy) -> SimResult {
         ClusterSim::new(self.to_experiment(rps, policy)).run()
+    }
+
+    /// Run with full control-log recording (`SimResult::control_log`
+    /// populated) — the trace CLI and the replay tests.
+    pub fn run_logged(&self, rps: f64, policy: FaultPolicy) -> SimResult {
+        ClusterSim::new(self.to_experiment(rps, policy)).with_log(LogMode::Full).run()
     }
 
     /// Earliest fault time, if the script is non-empty (list display).

@@ -24,6 +24,24 @@ use super::state::{InstanceSim, NodeSim, Pass, ReqState, SAMPLE_INTERVAL_S};
 /// `rust/tests/sim_behavior.rs`).
 pub type ControlRecord = (f64, Ctl, Vec<Action>);
 
+/// Whether the simulator records the control-plane exchange.
+///
+/// Recording clones every event and action list, which dominates the
+/// steady-state loop at scale; it exists for the replay tests and the
+/// `kevlarflow trace` CLI, not for sweeps. `Off` (the default) runs the
+/// exchange through [`ControlPlane::handle_into`] with a reused action
+/// buffer — zero allocation and zero cloning per event — and is proven
+/// observation-identical to `Full` by `rust/tests/perf_equivalence.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LogMode {
+    /// No control log (sweeps, benchmarks): `SimResult::control_log`
+    /// stays empty.
+    #[default]
+    Off,
+    /// Record every exchange into [`SimResult::control_log`].
+    Full,
+}
+
 const PREFILL_PIPELINE_DEPTH: usize = 4;
 
 /// Slow factor at/above which the monitoring layer's windowed pass-time
@@ -53,6 +71,7 @@ pub struct SimResult {
     pub full_recomputes: u64,
     pub incomplete: usize,
     /// Every control-plane exchange, in order (see [`ControlRecord`]).
+    /// Empty unless the sim was built with [`LogMode::Full`].
     pub control_log: Vec<ControlRecord>,
 }
 
@@ -75,7 +94,12 @@ pub struct ClusterSim {
     pub(crate) full_recomputes: u64,
     /// Max concurrent prefill passes per instance (pipeline depth).
     pub(crate) max_prefills: usize,
+    pub(crate) log_mode: LogMode,
     pub(crate) control_log: Vec<ControlRecord>,
+    /// Reusable action buffers for the control exchange (a small pool,
+    /// not one buffer, because executing an `Evict` re-enters
+    /// [`ClusterSim::control`] for each displaced request).
+    scratch: Vec<Vec<Action>>,
 }
 
 impl ClusterSim {
@@ -87,7 +111,9 @@ impl ClusterSim {
 
     pub fn new(cfg: ExperimentConfig) -> Self {
         let trace = generate_trace(&cfg.workload, cfg.rps, cfg.arrival_window_s, cfg.seed);
-        let mut q = EventQueue::new();
+        // the arrivals and fault script are known up front: reserve the
+        // heap once instead of regrowing it across a million pushes
+        let mut q = EventQueue::with_capacity(trace.len() + 2 * cfg.faults.len() + 8);
         for (i, r) in trace.iter().enumerate() {
             q.push(r.arrival_s, Event::Arrival { req: i });
         }
@@ -106,14 +132,15 @@ impl ClusterSim {
         }
         q.push(SAMPLE_INTERVAL_S, Event::Sample);
 
-        let reqs = trace.into_iter().map(ReqState::new).collect();
+        let reqs: Vec<ReqState> = trace.into_iter().map(ReqState::new).collect();
         let nodes = cfg
             .cluster
             .nodes()
             .map(|id| NodeSim::new(id, cfg.serving.kv_capacity_blocks, cfg.serving.page_size))
             .collect();
         let instances = (0..cfg.cluster.n_instances).map(|_| InstanceSim::default()).collect();
-        let cp = ControlPlane::new(&cfg.cluster, &cfg.serving, &cfg.timing, cfg.seed);
+        let mut cp = ControlPlane::new(&cfg.cluster, &cfg.serving, &cfg.timing, cfg.seed);
+        cp.reserve_requests(reqs.len());
         let rng = Pcg32::with_stream(cfg.seed, 0x5e0);
 
         Self {
@@ -132,20 +159,37 @@ impl ClusterSim {
             replica_stalls: 0,
             full_recomputes: 0,
             max_prefills: PREFILL_PIPELINE_DEPTH,
+            log_mode: LogMode::Off,
             control_log: Vec::new(),
+            scratch: Vec::new(),
         }
+    }
+
+    /// Select the control-log mode (builder style; default
+    /// [`LogMode::Off`]). Must be set before [`ClusterSim::run`].
+    pub fn with_log(mut self, mode: LogMode) -> Self {
+        self.log_mode = mode;
+        self
     }
 
     // -------------------------------------------------- control exchange
 
-    /// Report one event to the control plane, log the exchange, and
-    /// execute every returned action.
+    /// Report one event to the control plane, log the exchange when
+    /// [`LogMode::Full`], and execute every returned action. The action
+    /// buffer comes from a scratch pool, so with logging off the
+    /// steady-state exchange performs no allocation and no cloning.
     pub(crate) fn control(&mut self, ev: Ctl) {
-        let actions = self.cp.handle(self.now, ev.clone());
-        self.control_log.push((self.now, ev, actions.clone()));
-        for a in actions {
+        let mut actions = self.scratch.pop().unwrap_or_default();
+        if self.log_mode == LogMode::Full {
+            self.cp.handle_into(self.now, ev.clone(), &mut actions);
+            self.control_log.push((self.now, ev, actions.clone()));
+        } else {
+            self.cp.handle_into(self.now, ev, &mut actions);
+        }
+        for a in actions.drain(..) {
             self.apply(a);
         }
+        self.scratch.push(actions);
     }
 
     fn apply(&mut self, action: Action) {

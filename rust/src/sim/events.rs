@@ -58,7 +58,7 @@ struct Entry {
 
 impl PartialEq for Entry {
     fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
+        self.t.total_cmp(&other.t) == Ordering::Equal && self.seq == other.seq
     }
 }
 impl Eq for Entry {}
@@ -69,12 +69,11 @@ impl PartialOrd for Entry {
 }
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap: earlier time first, then lower seq (FIFO)
-        other
-            .t
-            .partial_cmp(&self.t)
-            .unwrap()
-            .then(other.seq.cmp(&self.seq))
+        // min-heap: earlier time first, then lower seq (FIFO).
+        // `total_cmp` keeps Ord a lawful total order (push() rejects
+        // non-finite timestamps, but the comparator must not be able to
+        // panic or violate transitivity regardless).
+        other.t.total_cmp(&self.t).then(other.seq.cmp(&self.seq))
     }
 }
 
@@ -91,8 +90,16 @@ impl EventQueue {
         Self::default()
     }
 
+    /// Pre-size the backing heap. [`crate::sim::ClusterSim`] reserves the
+    /// whole trace up front so million-event runs never regrow mid-loop.
+    pub fn with_capacity(n: usize) -> Self {
+        Self { heap: BinaryHeap::with_capacity(n), seq: 0, processed: 0 }
+    }
+
     pub fn push(&mut self, t: f64, ev: Event) {
-        debug_assert!(t.is_finite());
+        // a NaN/inf deadline would silently corrupt the heap order (or
+        // park an event at t=∞ forever): refuse it in release builds too
+        assert!(t.is_finite(), "non-finite event timestamp {t}");
         self.heap.push(Entry { t, seq: self.seq, ev });
         self.seq += 1;
     }

@@ -8,9 +8,10 @@
 //! KV accounting via [`crate::kvcache`], replication, rerouting,
 //! recovery). The simulator is a thin timing/event-queue driver of
 //! [`crate::coordinator::ControlPlane`] — the *same* facade the real
-//! engine drives — and logs every event/action exchange
-//! ([`ControlRecord`]) so a run can be replayed against a fresh facade.
-//! Build a run with [`ClusterSim::new`] from an
+//! engine drives — and can log every event/action exchange
+//! ([`ControlRecord`]) so a run replays against a fresh facade; the log
+//! is opt-in ([`LogMode`], off by default) so sweep-scale runs pay zero
+//! per-event cloning. Build a run with [`ClusterSim::new`] from an
 //! [`crate::config::ExperimentConfig`] and execute it with
 //! [`ClusterSim::run`].
 //!
@@ -50,5 +51,5 @@ mod cluster;
 mod events;
 mod state;
 
-pub use cluster::{ClusterSim, ControlRecord, SimResult};
+pub use cluster::{ClusterSim, ControlRecord, LogMode, SimResult};
 pub use events::{Event, EventQueue};

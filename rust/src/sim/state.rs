@@ -28,8 +28,9 @@ pub(crate) enum PassKind {
     Decode,
 }
 
-/// An in-flight pass traversing the stage servers.
-#[derive(Debug, Clone)]
+/// An in-flight pass traversing the stage servers. `Copy`, so the hot
+/// handlers read it by value instead of cloning through the pass table.
+#[derive(Debug, Clone, Copy)]
 pub(crate) struct Pass {
     pub(crate) instance: usize,
     pub(crate) kind: PassKind,
@@ -287,7 +288,7 @@ impl ClusterSim {
         let (pass, stage) = (item / 16, item % 16);
         self.maybe_serve(ni);
 
-        let p = self.passes[pass].clone();
+        let p = self.passes[pass];
         if p.epoch != self.instances[p.instance].epoch {
             return;
         }
@@ -319,7 +320,7 @@ impl ClusterSim {
     }
 
     pub(crate) fn finish_pass(&mut self, pass: usize) {
-        let p = self.passes[pass].clone();
+        let p = self.passes[pass];
         let instance = p.instance;
         match p.kind {
             PassKind::Prefill { req } => {

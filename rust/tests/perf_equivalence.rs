@@ -1,0 +1,81 @@
+//! Equivalence proofs for the PR 4 hot-loop optimizations: turning the
+//! control log off ([`LogMode::Off`], the sweep default) and fanning the
+//! sweep out over worker threads are pure *mechanical* changes — every
+//! observable simulation result must be identical.
+//!
+//! 1. For every registry scenario × both fault policies, a `LogMode::Off`
+//!    run and a `LogMode::Full` run produce the same metrics summary,
+//!    event counts, recovery records, and completion set.
+//! 2. A `--jobs 1` sweep and a `--jobs 8` sweep serialize to
+//!    byte-identical `BENCH_scenarios.json` documents.
+
+use kevlarflow::bench::sweep;
+use kevlarflow::config::FaultPolicy;
+use kevlarflow::scenario::registry;
+use kevlarflow::sim::{ClusterSim, LogMode, SimResult};
+
+fn run(s: &kevlarflow::scenario::Scenario, policy: FaultPolicy, mode: LogMode) -> SimResult {
+    let mut s = s.clone();
+    s.arrival_window_s = s.arrival_window_s.min(150.0);
+    ClusterSim::new(s.to_experiment(s.default_rps, policy)).with_log(mode).run()
+}
+
+#[test]
+fn log_mode_off_and_full_agree_on_every_scenario() {
+    for s in registry() {
+        for policy in [FaultPolicy::Standard, FaultPolicy::KevlarFlow] {
+            let off = run(&s, policy, LogMode::Off);
+            let full = run(&s, policy, LogMode::Full);
+            let tag = format!("{} ({})", s.name, policy.label());
+
+            assert!(off.control_log.is_empty(), "{tag}: Off must not record");
+            assert!(!full.control_log.is_empty(), "{tag}: Full must record");
+
+            assert_eq!(off.recorder.summary(), full.recorder.summary(), "{tag}: summary");
+            assert_eq!(off.events_processed, full.events_processed, "{tag}: event count");
+            assert_eq!(off.sim_time_s, full.sim_time_s, "{tag}: end time");
+            assert_eq!(off.preemptions, full.preemptions, "{tag}: preemptions");
+            assert_eq!(off.replica_stalls, full.replica_stalls, "{tag}: replica stalls");
+            assert_eq!(off.full_recomputes, full.full_recomputes, "{tag}: recomputes");
+            assert_eq!(off.incomplete, full.incomplete, "{tag}: incomplete");
+            assert_eq!(off.util_samples, full.util_samples, "{tag}: util samples");
+            assert_eq!(
+                off.recovery.completed.len(),
+                full.recovery.completed.len(),
+                "{tag}: recovery count"
+            );
+            for (a, b) in off.recovery.completed.iter().zip(full.recovery.completed.iter()) {
+                assert_eq!(a.failed, b.failed, "{tag}: recovered node");
+                assert_eq!(a.donor, b.donor, "{tag}: donor");
+                assert_eq!(a.resumed_s, b.resumed_s, "{tag}: resume time");
+            }
+            // completion-by-completion identity, not just aggregates
+            assert_eq!(
+                off.recorder.records.len(),
+                full.recorder.records.len(),
+                "{tag}: completions"
+            );
+            for (a, b) in off.recorder.records.iter().zip(full.recorder.records.iter()) {
+                assert_eq!(a.id, b.id, "{tag}: completion order");
+                assert_eq!(a.first_token_s, b.first_token_s, "{tag}: ttft of req {}", a.id);
+                assert_eq!(a.completion_s, b.completion_s, "{tag}: finish of req {}", a.id);
+                assert_eq!(a.retries, b.retries, "{tag}: retries of req {}", a.id);
+                assert_eq!(a.instance, b.instance, "{tag}: placement of req {}", a.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn sweep_bytes_identical_across_thread_counts() {
+    // two scenarios × two policies = 4 matrix points; 8 requested workers
+    // also exercises the jobs > points clamp
+    let names = vec!["paper-1".to_string(), "flap".to_string()];
+    let serial = sweep::run_sweep(&names, false, Some(120.0), true, 1).unwrap();
+    let threaded = sweep::run_sweep(&names, false, Some(120.0), true, 8).unwrap();
+    assert_eq!(
+        sweep::sweep_json(&serial).to_string(),
+        sweep::sweep_json(&threaded).to_string(),
+        "sweep output must not depend on the worker-thread count"
+    );
+}

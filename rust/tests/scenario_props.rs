@@ -8,14 +8,15 @@ use kevlarflow::config::{FaultOp, FaultPolicy, NodeId};
 use kevlarflow::coordinator::control::{Action, ControlPlane, Event};
 use kevlarflow::coordinator::PipelineState;
 use kevlarflow::scenario::{find, registry, Scenario};
-use kevlarflow::sim::{ClusterSim, SimResult};
+use kevlarflow::sim::SimResult;
 
 /// Run `s` with a test-sized arrival window (fault scripts and
-/// background-replacement timers still play out fully during the drain).
+/// background-replacement timers still play out fully during the drain),
+/// with the control log on — these properties inspect the exchange.
 fn run_quick(s: &Scenario, policy: FaultPolicy) -> SimResult {
     let mut s = s.clone();
     s.arrival_window_s = s.arrival_window_s.min(200.0);
-    ClusterSim::new(s.to_experiment(s.default_rps, policy)).run()
+    s.run_logged(s.default_rps, policy)
 }
 
 /// Replay a run's logged event trace into a fresh facade, asserting the
@@ -111,7 +112,7 @@ fn mid_recovery_rejoin_lands_via_retry() {
     let mut s = find("flap").unwrap();
     s.faults = vec![FaultOp::Flap { t_s: 120.0, node: NodeId::new(0, 2), down_s: 20.0 }];
     s.arrival_window_s = 200.0;
-    let res = ClusterSim::new(s.to_experiment(2.0, FaultPolicy::KevlarFlow)).run();
+    let res = s.run_logged(2.0, FaultPolicy::KevlarFlow);
     let early_release = res.control_log.iter().any(|(_, ev, actions)| {
         matches!(ev, Event::NodeRecovered { .. })
             && actions.iter().any(|a| matches!(a, Action::ReleaseDonor { .. }))
@@ -128,7 +129,7 @@ fn blip_shorter_than_heartbeat_timeout_is_invisible() {
     let mut s = find("flap").unwrap();
     s.faults = vec![FaultOp::Flap { t_s: 120.0, node: NodeId::new(0, 2), down_s: 2.0 }];
     s.arrival_window_s = 150.0;
-    let res = ClusterSim::new(s.to_experiment(2.0, FaultPolicy::KevlarFlow)).run();
+    let res = s.run_logged(2.0, FaultPolicy::KevlarFlow);
     assert!(
         !res.control_log.iter().any(|(_, ev, _)| matches!(ev, Event::HeartbeatMissed { .. })),
         "sub-timeout blip must not reach the control plane as a failure"

@@ -7,7 +7,7 @@
 
 use kevlarflow::config::{ClusterConfig, ExperimentConfig, FaultPolicy, NodeId};
 use kevlarflow::coordinator::control::{Action, ControlPlane};
-use kevlarflow::sim::ClusterSim;
+use kevlarflow::sim::{ClusterSim, LogMode};
 
 fn quick(cluster: ClusterConfig, rps: f64, window: f64) -> ExperimentConfig {
     let mut e = ExperimentConfig::new(cluster, rps);
@@ -30,8 +30,12 @@ fn healthy_run_completes_all() {
 
 #[test]
 fn deterministic_given_seed() {
-    let a = ClusterSim::new(quick(ClusterConfig::paper_8node(), 2.0, 120.0)).run();
-    let b = ClusterSim::new(quick(ClusterConfig::paper_8node(), 2.0, 120.0)).run();
+    let a = ClusterSim::new(quick(ClusterConfig::paper_8node(), 2.0, 120.0))
+        .with_log(LogMode::Full)
+        .run();
+    let b = ClusterSim::new(quick(ClusterConfig::paper_8node(), 2.0, 120.0))
+        .with_log(LogMode::Full)
+        .run();
     let sa = a.recorder.summary();
     let sb = b.recorder.summary();
     assert_eq!(sa.n, sb.n);
@@ -171,7 +175,7 @@ fn control_plane_replay_reproduces_sim_decisions() {
     ];
     for cfg in cfgs {
         let replay_cfg = cfg.clone();
-        let res = ClusterSim::new(cfg).run();
+        let res = ClusterSim::new(cfg).with_log(LogMode::Full).run();
         assert!(
             res.control_log.iter().any(|(_, _, actions)| actions
                 .iter()

@@ -30,12 +30,12 @@ const ROW_KEYS: [&str; 16] = [
 #[test]
 fn sweep_json_matches_golden_schema() {
     let names = vec!["paper-1".to_string()];
-    let rows = sweep::run_sweep(&names, false, Some(150.0), true).unwrap();
+    let rows = sweep::run_sweep(&names, false, Some(150.0), true, 1).unwrap();
     let doc = sweep::sweep_json(&rows);
     let text = doc.to_string();
 
     // byte-determinism: an identical sweep serializes identically
-    let rows2 = sweep::run_sweep(&names, false, Some(150.0), true).unwrap();
+    let rows2 = sweep::run_sweep(&names, false, Some(150.0), true, 1).unwrap();
     assert_eq!(text, sweep::sweep_json(&rows2).to_string());
 
     // document header
@@ -74,7 +74,7 @@ fn sweep_json_matches_golden_schema() {
 #[test]
 fn sweep_file_roundtrip() {
     let names = vec!["paper-1".to_string()];
-    let rows = sweep::run_sweep(&names, false, Some(60.0), true).unwrap();
+    let rows = sweep::run_sweep(&names, false, Some(60.0), true, 1).unwrap();
     let dir = std::path::PathBuf::from(env!("CARGO_TARGET_TMPDIR"));
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("BENCH_scenarios.json");
