@@ -8,7 +8,7 @@
 //! ```
 
 use kevlarflow::bench;
-use kevlarflow::config::FaultPolicy;
+use kevlarflow::config::PolicySpec;
 use kevlarflow::sim::ClusterSim;
 
 fn main() {
@@ -21,9 +21,9 @@ fn main() {
 
     // full runs for the summary comparison
     let base =
-        ClusterSim::new(bench::scenario(1, rps, FaultPolicy::Standard).expect("scene 1")).run();
+        ClusterSim::new(bench::scenario(1, rps, PolicySpec::standard()).expect("scene 1")).run();
     let kev =
-        ClusterSim::new(bench::scenario(1, rps, FaultPolicy::KevlarFlow).expect("scene 1")).run();
+        ClusterSim::new(bench::scenario(1, rps, PolicySpec::kevlarflow()).expect("scene 1")).run();
     let (sb, sk) = (base.recorder.summary(), kev.recorder.summary());
 
     println!("\n== summary over {} / {} completed requests", sb.n, sk.n);

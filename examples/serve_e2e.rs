@@ -30,7 +30,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use kevlarflow::comm::{Communicator, Fabric, Store};
-use kevlarflow::config::{ClusterConfig, Manifest, NodeId, ServingConfig, SimTimingConfig};
+use kevlarflow::config::{
+    ClusterConfig, Manifest, NodeId, PolicySpec, ReplicationPolicy, ServingConfig,
+    SimTimingConfig,
+};
 use kevlarflow::coordinator::control::{Action as CpAction, Event as CpEvent};
 use kevlarflow::engine::{
     greedy, pack_kv_batch, unpack_kv_batch, ByteTokenizer, ControlDriver, KvBuf,
@@ -321,7 +324,7 @@ fn node_main(cfg: NodeCfg, manifest: Arc<Manifest>) -> Result<()> {
                     }
                     iters += 1;
                     // node-side mirror of the control plane's
-                    // FlushReplicas cadence (replication_interval_iters)
+                    // FlushReplicas cadence (the ring-replication interval)
                     if iters % FLUSH_EVERY == 0 {
                         for (i, r) in reqs.iter().enumerate() {
                             flush_replica(repl_target, &repl, &kv, *r, seq_lens[i] as u32 + 1);
@@ -387,9 +390,12 @@ fn run_cluster(
 
     // the one coordinator: the same pure facade the simulator drives,
     // adapted to the wall clock by the engine's failover hooks. The
-    // node-side flush cadence mirrors replication_interval_iters.
+    // node-side flush cadence mirrors the ring-replication interval.
     let serving = ServingConfig {
-        replication_interval_iters: FLUSH_EVERY as u32,
+        policy: PolicySpec {
+            replication: ReplicationPolicy::Ring { interval_iters: FLUSH_EVERY as u32 },
+            ..PolicySpec::default()
+        },
         ..ServingConfig::default()
     };
     let mut ctl = ControlDriver::new(&cluster, &serving, &SimTimingConfig::default(), 42);

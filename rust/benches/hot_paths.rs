@@ -18,7 +18,7 @@ use std::collections::BTreeMap;
 use std::hint::black_box;
 use std::time::Instant;
 
-use kevlarflow::config::{ClusterConfig, ExperimentConfig, FaultPolicy, Json, NodeId};
+use kevlarflow::config::{ClusterConfig, ExperimentConfig, Json, NodeId, PolicySpec, RoutePolicy};
 use kevlarflow::coordinator::router::{InstanceView, Router};
 use kevlarflow::coordinator::ReplicationPlanner;
 use kevlarflow::kvcache::NodeKv;
@@ -100,7 +100,7 @@ fn main() {
     let views: Vec<InstanceView> = (0..4)
         .map(|id| InstanceView { id, serving: id != 2, load: id * 3 })
         .collect();
-    let mut router = Router::new();
+    let mut router = Router::new(RoutePolicy::RoundRobin, 42);
     bench(&mut rows, "router::pick (4 instances, 1 down)", 2_000_000 / scale, || {
         router.pick(black_box(&views)).unwrap() as u64
     });
@@ -162,11 +162,11 @@ fn main() {
     for (base, cfg) in [
         (
             "sim scene1 RPS2 standard",
-            kevlarflow::bench::scenario(1, 2.0, FaultPolicy::Standard).expect("scene 1"),
+            kevlarflow::bench::scenario(1, 2.0, PolicySpec::standard()).expect("scene 1"),
         ),
         (
             "sim scene1 RPS2 kevlarflow",
-            kevlarflow::bench::scenario(1, 2.0, FaultPolicy::KevlarFlow).expect("scene 1"),
+            kevlarflow::bench::scenario(1, 2.0, PolicySpec::kevlarflow()).expect("scene 1"),
         ),
         (
             "sim 16-node RPS12 healthy",

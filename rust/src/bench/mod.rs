@@ -12,17 +12,17 @@
 //!
 //! ```
 //! use kevlarflow::bench;
-//! use kevlarflow::config::FaultPolicy;
+//! use kevlarflow::config::PolicySpec;
 //!
-//! let cfg = bench::scenario(1, 2.0, FaultPolicy::KevlarFlow).unwrap();
+//! let cfg = bench::scenario(1, 2.0, PolicySpec::kevlarflow()).unwrap();
 //! assert_eq!(cfg.cluster.n_nodes(), 8);
-//! assert!(bench::scenario(9, 2.0, FaultPolicy::KevlarFlow).is_err());
-//! assert!(bench::healthy(12, 2.0, FaultPolicy::Standard).is_err());
+//! assert!(bench::scenario(9, 2.0, PolicySpec::kevlarflow()).is_err());
+//! assert!(bench::healthy(12, 2.0, PolicySpec::standard()).is_err());
 //! ```
 
 pub mod sweep;
 
-use crate::config::{ClusterConfig, ExperimentConfig, FaultPolicy};
+use crate::config::{ClusterConfig, ExperimentConfig, PolicySpec};
 use crate::metrics::{rolling_series, RollingPoint, Summary};
 use crate::scenario::{paper_scene, ScenarioError};
 use crate::sim::{ClusterSim, SimResult};
@@ -39,7 +39,7 @@ pub const FAILURE_T: f64 = crate::scenario::FAULT_T;
 pub fn scenario(
     scene: u8,
     rps: f64,
-    policy: FaultPolicy,
+    policy: PolicySpec,
 ) -> Result<ExperimentConfig, ScenarioError> {
     Ok(paper_scene(scene)?.to_experiment(rps, policy))
 }
@@ -48,7 +48,7 @@ pub fn scenario(
 pub fn healthy(
     nodes: usize,
     rps: f64,
-    policy: FaultPolicy,
+    policy: PolicySpec,
 ) -> Result<ExperimentConfig, ScenarioError> {
     let cluster = match nodes {
         8 => ClusterConfig::paper_8node(),
@@ -102,7 +102,7 @@ pub fn run_baseline_curves(quiet: bool) -> Vec<(usize, f64, Summary)> {
     for &nodes in &[8usize, 16] {
         let grid = if nodes == 8 { rps_grid(1) } else { rps_grid(2) };
         for rps in grid {
-            let res = run(healthy(nodes, rps, FaultPolicy::Standard).expect("preset"));
+            let res = run(healthy(nodes, rps, PolicySpec::standard()).expect("preset"));
             rows.push((nodes, rps, res.recorder.summary()));
         }
     }
@@ -132,8 +132,8 @@ pub fn run_table1(scenes: &[u8], quiet: bool) -> Result<Vec<CompareRow>, Scenari
     let mut rows = Vec::new();
     for &scene in scenes {
         for rps in rps_grid(scene) {
-            let base = run(scenario(scene, rps, FaultPolicy::Standard)?);
-            let ours = run(scenario(scene, rps, FaultPolicy::KevlarFlow)?);
+            let base = run(scenario(scene, rps, PolicySpec::standard())?);
+            let ours = run(scenario(scene, rps, PolicySpec::kevlarflow())?);
             rows.push(CompareRow {
                 scene,
                 rps,
@@ -183,8 +183,8 @@ pub fn run_rolling_ttft(
 ) -> Result<(Vec<RollingPoint>, Vec<RollingPoint>), ScenarioError> {
     let window = 30.0;
     let step = 15.0;
-    let base = run(scenario(scene, rps, FaultPolicy::Standard)?);
-    let ours = run(scenario(scene, rps, FaultPolicy::KevlarFlow)?);
+    let base = run(scenario(scene, rps, PolicySpec::standard())?);
+    let ours = run(scenario(scene, rps, PolicySpec::kevlarflow())?);
     let t_end = base.sim_time_s.max(ours.sim_time_s);
     let sb = rolling_series(&base.recorder.ttft_samples(), window, step, t_end);
     let so = rolling_series(&ours.recorder.ttft_samples(), window, step, t_end);
@@ -220,8 +220,8 @@ pub fn run_rolling_latency(
 ) -> Result<(Vec<RollingPoint>, Vec<RollingPoint>), ScenarioError> {
     let window = 60.0;
     let step = 30.0;
-    let base = run(scenario(scene, rps, FaultPolicy::Standard)?);
-    let ours = run(scenario(scene, rps, FaultPolicy::KevlarFlow)?);
+    let base = run(scenario(scene, rps, PolicySpec::standard())?);
+    let ours = run(scenario(scene, rps, PolicySpec::kevlarflow())?);
     let t_end = base.sim_time_s.max(ours.sim_time_s);
     let sb = rolling_series(&base.recorder.latency_samples(), window, step, t_end);
     let so = rolling_series(&ours.recorder.latency_samples(), window, step, t_end);
@@ -243,7 +243,7 @@ pub fn run_recovery_times(quiet: bool) -> Vec<(u8, f64, f64)> {
     let mut rows = Vec::new();
     for scene in 1..=3u8 {
         for rps in rps_grid(scene) {
-            let res = run(scenario(scene, rps, FaultPolicy::KevlarFlow).expect("paper scene"));
+            let res = run(scenario(scene, rps, PolicySpec::kevlarflow()).expect("paper scene"));
             if let Some(mean) = res.recovery.mean_recovery_s() {
                 rows.push((scene, rps, mean));
             }
@@ -291,8 +291,8 @@ pub fn run_overhead(quiet: bool) -> Vec<(usize, f64, f64, f64)> {
             if rps > cap {
                 continue;
             }
-            let off = run(healthy(nodes, rps, FaultPolicy::Standard).expect("preset"));
-            let on = run(healthy(nodes, rps, FaultPolicy::KevlarFlow).expect("preset"));
+            let off = run(healthy(nodes, rps, PolicySpec::standard()).expect("preset"));
+            let on = run(healthy(nodes, rps, PolicySpec::kevlarflow()).expect("preset"));
             let so = off.recorder.summary();
             let sn = on.recorder.summary();
             let avg_ovh = sn.latency_avg / so.latency_avg - 1.0;
@@ -329,10 +329,10 @@ mod tests {
 
     #[test]
     fn scenario_builders() {
-        let s1 = scenario(1, 2.0, FaultPolicy::Standard).unwrap();
+        let s1 = scenario(1, 2.0, PolicySpec::standard()).unwrap();
         assert_eq!(s1.cluster.n_nodes(), 8);
         assert_eq!(s1.faults.len(), 1);
-        let s3 = scenario(3, 7.0, FaultPolicy::KevlarFlow).unwrap();
+        let s3 = scenario(3, 7.0, PolicySpec::kevlarflow()).unwrap();
         assert_eq!(s3.cluster.n_nodes(), 16);
         assert_eq!(s3.faults.len(), 2);
         assert_ne!(s3.faults[0].node().instance, s3.faults[1].node().instance);
@@ -341,11 +341,11 @@ mod tests {
     #[test]
     fn unknown_scene_and_preset_are_typed_errors() {
         assert!(matches!(
-            scenario(0, 2.0, FaultPolicy::Standard),
+            scenario(0, 2.0, PolicySpec::standard()),
             Err(ScenarioError::UnknownScene(0))
         ));
         assert!(matches!(
-            healthy(12, 2.0, FaultPolicy::Standard),
+            healthy(12, 2.0, PolicySpec::standard()),
             Err(ScenarioError::UnsupportedNodeCount(12))
         ));
     }

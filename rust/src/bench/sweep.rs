@@ -1,6 +1,13 @@
-//! Scenario sweep runner: execute a named scenario matrix across both
-//! fault policies and emit machine-readable JSON results
+//! Scenario sweep runner: execute a named scenario matrix across a
+//! policy axis and emit machine-readable JSON results
 //! (`BENCH_scenarios.json`) alongside the paper tables.
+//!
+//! The policy axis is a list of [`PolicySpec`]s — by default the two
+//! presets `[standard, kevlarflow]`, overridable per call (the CLI's
+//! `scenarios sweep --policies kevlarflow,standard,rr+spare-pool+ring`)
+//! or per scenario spec (`Scenario::policies`), so the matrix explores
+//! scenario × route × recovery × replication, not just the historical
+//! two-point comparison.
 //!
 //! One [`SweepRow`] is one `(scenario, policy, rps)` simulation; the JSON
 //! document is `{"suite", "version", "rows": [...]}` with one object per
@@ -15,7 +22,7 @@ use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::config::{FaultPolicy, Json};
+use crate::config::{Json, PolicySpec};
 use crate::metrics::Summary;
 use crate::scenario::{registry, Scenario, ScenarioError};
 
@@ -23,21 +30,23 @@ use crate::scenario::{registry, Scenario, ScenarioError};
 #[derive(Debug, Clone)]
 pub struct SweepRow {
     pub scenario: String,
-    pub policy: FaultPolicy,
+    pub policy: PolicySpec,
     pub rps: f64,
     pub summary: Summary,
-    /// Completed donor recoveries (0 under the standard policy).
+    /// Completed fast recoveries — donor splices, spare swaps,
+    /// checkpoint restores (always 0 under `full-reinit`).
     pub recoveries: usize,
     pub mean_recovery_s: Option<f64>,
     pub preemptions: u64,
     pub full_recomputes: u64,
     pub incomplete: usize,
-    /// Total request restarts (standard-policy progress loss).
+    /// Total request restarts (progress loss under full re-init and
+    /// spare swaps).
     pub retries: u64,
 }
 
 /// Run one point of the matrix.
-pub fn run_point(s: &Scenario, rps: f64, policy: FaultPolicy) -> SweepRow {
+pub fn run_point(s: &Scenario, rps: f64, policy: PolicySpec) -> SweepRow {
     let res = s.run(rps, policy);
     let retries = res.recorder.records.iter().map(|r| r.retries as u64).sum();
     SweepRow {
@@ -62,10 +71,14 @@ pub fn effective_jobs(requested: usize, n_points: usize) -> usize {
     jobs.clamp(1, n_points.max(1))
 }
 
-/// Execute scenarios × {Standard, KevlarFlow} × RPS. `names` empty runs
-/// the whole registry; `full_grid` sweeps each scenario's `rps_grid`
-/// instead of only its `default_rps`; `window_s` overrides every
-/// scenario's arrival window (CI uses a short one).
+/// Execute scenarios × policies × RPS. `names` empty runs the whole
+/// registry; `full_grid` sweeps each scenario's `rps_grid` instead of
+/// only its `default_rps`; `window_s` overrides every scenario's
+/// arrival window (CI uses a short one); `policies` empty uses each
+/// scenario's own policy axis (`Scenario::sweep_policies`, i.e. the two
+/// presets unless the spec overrides them), so the default matrix shape
+/// and row order are exactly the historical standard-then-kevlarflow
+/// comparison.
 ///
 /// The matrix points fan out over `jobs` worker threads (`0` = available
 /// parallelism). Every point is an independent deterministic simulation
@@ -78,6 +91,7 @@ pub fn run_sweep(
     window_s: Option<f64>,
     quiet: bool,
     jobs: usize,
+    policies: &[PolicySpec],
 ) -> Result<Vec<SweepRow>, ScenarioError> {
     let mut scenarios: Vec<Scenario> = if names.is_empty() {
         registry()
@@ -93,11 +107,13 @@ pub fn run_sweep(
         }
     }
     // enumerate the matrix up front, in the (deterministic) output order
-    let mut points: Vec<(&Scenario, f64, FaultPolicy)> = Vec::new();
+    let mut points: Vec<(&Scenario, f64, PolicySpec)> = Vec::new();
     for s in &scenarios {
         let grid: Vec<f64> = if full_grid { s.rps_grid.clone() } else { vec![s.default_rps] };
+        let axis: Vec<PolicySpec> =
+            if policies.is_empty() { s.sweep_policies() } else { policies.to_vec() };
         for &rps in &grid {
-            for policy in [FaultPolicy::Standard, FaultPolicy::KevlarFlow] {
+            for &policy in &axis {
                 points.push((s, rps, policy));
             }
         }
@@ -145,7 +161,7 @@ pub fn run_sweep(
 
 /// Markdown comparison table (one line per matrix point).
 pub fn print_rows(rows: &[SweepRow]) {
-    println!("\n## scenario sweep — standard vs KevlarFlow\n");
+    println!("\n## scenario sweep — policy comparison\n");
     println!(
         "| scenario | policy | RPS | n | lat avg (s) | lat p99 (s) | TTFT avg (s) | \
          TTFT p99 (s) | recoveries | retries | incomplete |"
@@ -172,7 +188,7 @@ pub fn print_rows(rows: &[SweepRow]) {
 fn row_json(r: &SweepRow) -> Json {
     let mut m = BTreeMap::new();
     m.insert("scenario".into(), Json::Str(r.scenario.clone()));
-    m.insert("policy".into(), Json::Str(r.policy.label().into()));
+    m.insert("policy".into(), Json::Str(r.policy.label()));
     m.insert("rps".into(), Json::Num(r.rps));
     m.insert("n".into(), Json::Num(r.summary.n as f64));
     m.insert("latency_avg_s".into(), Json::Num(r.summary.latency_avg));
@@ -216,7 +232,7 @@ mod tests {
 
     #[test]
     fn sweep_rejects_unknown_names() {
-        let err = run_sweep(&["nope".to_string()], false, Some(50.0), true, 1).unwrap_err();
+        let err = run_sweep(&["nope".to_string()], false, Some(50.0), true, 1, &[]).unwrap_err();
         assert!(matches!(err, ScenarioError::UnknownScenario(_)));
     }
 
@@ -232,7 +248,7 @@ mod tests {
     fn json_document_shape() {
         let row = SweepRow {
             scenario: "paper-1".into(),
-            policy: FaultPolicy::KevlarFlow,
+            policy: PolicySpec::kevlarflow(),
             rps: 2.0,
             summary: Summary::default(),
             recoveries: 1,

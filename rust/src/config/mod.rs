@@ -11,8 +11,10 @@
 
 pub mod json;
 mod manifest;
+pub mod policy;
 pub use json::Json;
 pub use manifest::{ArtifactEntry, Goldens, Manifest, ManifestConfig, ParamSpec};
+pub use policy::{PolicySpec, RecoveryPolicy, ReplicationPolicy, RoutePolicy};
 
 use crate::workload::WorkloadSpec;
 
@@ -70,39 +72,6 @@ impl FaultOp {
             FaultOp::Kill { node, .. }
             | FaultOp::Flap { node, .. }
             | FaultOp::Slow { node, .. } => node,
-        }
-    }
-}
-
-/// Which failure semantics the coordinator applies (§4.2).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum FaultPolicy {
-    /// "Standard fault behavior": one node failure takes the whole
-    /// pipeline out of the LB group; in-flight requests restart from
-    /// scratch on survivors; the instance returns only after a full
-    /// re-initialization + weight reload (`baseline_mttr_s`).
-    Standard,
-    /// The paper's system: detect → locate donor → decoupled communicator
-    /// re-formation → resume from replicated KV; traffic reroutes through
-    /// the donor node while a replacement provisions in the background.
-    KevlarFlow,
-}
-
-impl FaultPolicy {
-    /// Stable lowercase label used in JSON results and the CLI.
-    pub fn label(&self) -> &'static str {
-        match self {
-            FaultPolicy::Standard => "standard",
-            FaultPolicy::KevlarFlow => "kevlarflow",
-        }
-    }
-
-    /// Inverse of [`FaultPolicy::label`] (accepts "kevlar" as shorthand).
-    pub fn parse(s: &str) -> Option<FaultPolicy> {
-        match s {
-            "standard" => Some(FaultPolicy::Standard),
-            "kevlarflow" | "kevlar" => Some(FaultPolicy::KevlarFlow),
-            _ => None,
         }
     }
 }
@@ -198,12 +167,12 @@ pub struct ServingConfig {
     /// node dead.
     pub heartbeat_interval_s: f64,
     pub heartbeat_misses: u32,
-    /// Background KV replication on/off (Fig 9 measures its overhead).
-    pub replication: bool,
-    /// How many decode iterations between replication flushes of a
-    /// request's newest blocks (replication lag ⇒ recompute on failover).
-    pub replication_interval_iters: u32,
-    pub fault_policy: FaultPolicy,
+    /// The composable fault-handling policy: routing × recovery ×
+    /// replication, each axis independently pluggable (see
+    /// [`crate::config::policy`]). Replaces the old two-variant
+    /// `FaultPolicy` enum plus the `replication`/
+    /// `replication_interval_iters` flags.
+    pub policy: PolicySpec,
     /// Full node re-provision + weight reload time (s) — the 10-minute
     /// MTTR of current systems (§1, Jaiswal et al. 2025b).
     pub baseline_mttr_s: f64,
@@ -217,9 +186,7 @@ impl Default for ServingConfig {
             page_size: 16,
             heartbeat_interval_s: 1.0,
             heartbeat_misses: 3,
-            replication: true,
-            replication_interval_iters: 8,
-            fault_policy: FaultPolicy::KevlarFlow,
+            policy: PolicySpec::kevlarflow(),
             baseline_mttr_s: 600.0,
         }
     }
@@ -228,8 +195,7 @@ impl Default for ServingConfig {
 impl ServingConfig {
     pub fn standard() -> Self {
         Self {
-            fault_policy: FaultPolicy::Standard,
-            replication: false,
+            policy: PolicySpec::standard(),
             ..Self::default()
         }
     }
@@ -346,9 +312,8 @@ impl ExperimentConfig {
         }
     }
 
-    pub fn with_policy(mut self, policy: FaultPolicy) -> Self {
-        self.serving.fault_policy = policy;
-        self.serving.replication = policy == FaultPolicy::KevlarFlow;
+    pub fn with_policy(mut self, policy: PolicySpec) -> Self {
+        self.serving.policy = policy;
         self
     }
 
@@ -403,10 +368,10 @@ mod tests {
     #[test]
     fn policy_builder() {
         let e = ExperimentConfig::new(ClusterConfig::paper_8node(), 2.0)
-            .with_policy(FaultPolicy::Standard)
+            .with_policy(PolicySpec::standard())
             .with_failure(120.0, NodeId::new(0, 2));
-        assert_eq!(e.serving.fault_policy, FaultPolicy::Standard);
-        assert!(!e.serving.replication);
+        assert_eq!(e.serving.policy, PolicySpec::standard());
+        assert!(!e.serving.policy.replication.is_on());
         assert_eq!(e.faults.len(), 1);
         assert_eq!(
             e.faults[0],
@@ -426,12 +391,11 @@ mod tests {
     }
 
     #[test]
-    fn fault_op_accessors_and_policy_labels() {
+    fn fault_op_accessors_and_serving_presets() {
         let op = FaultOp::Flap { t_s: 9.0, node: NodeId::new(1, 3), down_s: 60.0 };
         assert_eq!(op.start_s(), 9.0);
         assert_eq!(op.node(), NodeId::new(1, 3));
-        assert_eq!(FaultPolicy::parse("kevlar"), Some(FaultPolicy::KevlarFlow));
-        assert_eq!(FaultPolicy::parse(FaultPolicy::Standard.label()), Some(FaultPolicy::Standard));
-        assert_eq!(FaultPolicy::parse("nope"), None);
+        assert_eq!(ServingConfig::default().policy, PolicySpec::kevlarflow());
+        assert_eq!(ServingConfig::standard().policy, PolicySpec::standard());
     }
 }

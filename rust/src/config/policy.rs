@@ -1,0 +1,427 @@
+//! The composable policy surface: what was a two-variant `FaultPolicy`
+//! enum is now a [`PolicySpec`] of three independently pluggable axes —
+//! how traffic is routed ([`RoutePolicy`]), how a node failure is
+//! recovered ([`RecoveryPolicy`]), and whether/how KV context is
+//! replicated in the background ([`ReplicationPolicy`]).
+//!
+//! The paper frames KevlarFlow as three separable mechanisms (decoupled
+//! initialization, dynamic rerouting, background KV replication); this
+//! module makes the separation a type. The two historical policies are
+//! ordinary presets:
+//!
+//! * `"standard"`  = `rr + full-reinit + off`
+//! * `"kevlarflow"` = `rr + donor-splice + ring:8`
+//!
+//! and related systems' recovery designs are first-class policies
+//! instead of forks: [`RecoveryPolicy::SparePool`] models
+//! FailSafe-style hot standbys (Xu et al.), and
+//! [`RecoveryPolicy::CheckpointRestore`] models GhostServe-style
+//! shadow-checkpoint restore (Jayakody et al.).
+//!
+//! Specs parse from and print to a stable textual grammar used by the
+//! CLI (`scenarios sweep --policies ...`), scenario JSON and sweep
+//! result rows: a preset name, or a `route+recovery+replication` triple
+//! where parameterized axes take an optional `:value` suffix:
+//!
+//! ```text
+//! kevlarflow
+//! standard
+//! rr+spare-pool+ring              (defaults: spares=2, interval=8)
+//! p2c+checkpoint-restore:45+off
+//! ll+donor-splice+ring:4
+//! ```
+//!
+//! [`PolicySpec::label`] canonicalizes: a triple equal to a preset
+//! prints as the preset name, so existing result files and golden rows
+//! are byte-for-byte unchanged.
+//!
+//! ```
+//! use kevlarflow::config::{PolicySpec, RecoveryPolicy};
+//!
+//! let spec = PolicySpec::parse("rr+spare-pool:4+ring").unwrap();
+//! assert_eq!(spec.recovery, RecoveryPolicy::SparePool { spares: 4 });
+//! assert_eq!(spec.label(), "rr+spare-pool:4+ring:8");
+//! // an explicit triple naming a preset canonicalizes to the preset
+//! assert_eq!(PolicySpec::parse("rr+donor-splice+ring:8").unwrap().label(), "kevlarflow");
+//! ```
+
+use super::json::Json;
+
+/// Spare-pool size when `spare-pool` is given without a `:N` suffix.
+pub const DEFAULT_SPARES: u32 = 2;
+/// Checkpoint interval (s) when `checkpoint-restore` has no `:S` suffix.
+pub const DEFAULT_CHECKPOINT_INTERVAL_S: f64 = 60.0;
+/// Ring flush cadence (decode iterations) when `ring` has no `:N`
+/// suffix — the historical `replication_interval_iters` default.
+pub const DEFAULT_RING_INTERVAL_ITERS: u32 = 8;
+
+/// How the front door places new requests over the serving LB group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Even distribution over serving instances (the paper's testbed LB,
+    /// §4). Label `rr`.
+    RoundRobin,
+    /// Always the serving instance with the fewest outstanding requests
+    /// (ties rotate from the round-robin cursor). Label `ll`.
+    LeastLoaded,
+    /// Power-of-two-choices: draw two distinct serving instances from a
+    /// seeded PRNG, take the less loaded (ties keep the first draw) —
+    /// deterministic given the spec seed. Label `p2c`.
+    PowerOfTwo,
+}
+
+impl RoutePolicy {
+    /// Stable grammar token.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "rr",
+            RoutePolicy::LeastLoaded => "ll",
+            RoutePolicy::PowerOfTwo => "p2c",
+        }
+    }
+
+    /// Inverse of [`RoutePolicy::label`] (long names accepted).
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "rr" | "round-robin" => Some(RoutePolicy::RoundRobin),
+            "ll" | "least-loaded" => Some(RoutePolicy::LeastLoaded),
+            "p2c" | "power-of-two" => Some(RoutePolicy::PowerOfTwo),
+            _ => None,
+        }
+    }
+}
+
+/// How the coordinator recovers a pipeline after a node failure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RecoveryPolicy {
+    /// Standard fault behavior: the whole pipeline leaves the LB group,
+    /// displaced requests restart from scratch on survivors, and the
+    /// instance returns only after a full re-provision + weight reload
+    /// (`baseline_mttr_s`). Label `full-reinit`.
+    FullReinit,
+    /// The paper's system: locate a same-stage donor in a sibling
+    /// instance, decoupled communicator re-formation, degraded serving
+    /// through the donor, replicated-KV promotion, background
+    /// replacement. Label `donor-splice`.
+    DonorSplice,
+    /// FailSafe-style hot standbys: a pool of `spares` pre-provisioned
+    /// nodes (weights loaded) swap straight into the failed slot after a
+    /// locate + re-form — no donor borrowed, no degraded mode, but
+    /// in-flight requests restart (a cold spare carries no KV). A
+    /// consumed spare re-provisions in the background; an empty pool
+    /// falls back to [`RecoveryPolicy::FullReinit`]. Label
+    /// `spare-pool[:N]`.
+    SparePool { spares: u32 },
+    /// GhostServe-style shadow-checkpoint restore: instance state is
+    /// checkpointed every `interval_s`, so a failed instance returns
+    /// after an `interval_s`-bounded recompute instead of a full
+    /// re-init. Displaced requests keep their emitted tokens and
+    /// recompute their context on survivors. Label
+    /// `checkpoint-restore[:S]`.
+    CheckpointRestore { interval_s: f64 },
+}
+
+impl RecoveryPolicy {
+    /// Stable grammar token (parameters always explicit).
+    pub fn label(&self) -> String {
+        match self {
+            RecoveryPolicy::FullReinit => "full-reinit".into(),
+            RecoveryPolicy::DonorSplice => "donor-splice".into(),
+            RecoveryPolicy::SparePool { spares } => format!("spare-pool:{spares}"),
+            RecoveryPolicy::CheckpointRestore { interval_s } => {
+                format!("checkpoint-restore:{interval_s}")
+            }
+        }
+    }
+
+    /// Inverse of [`RecoveryPolicy::label`]; parameterized names accept
+    /// an optional `:value` suffix.
+    pub fn parse(s: &str) -> Option<RecoveryPolicy> {
+        let (name, param) = split_param(s);
+        match name {
+            "full-reinit" | "reinit" if param.is_none() => Some(RecoveryPolicy::FullReinit),
+            "donor-splice" | "splice" if param.is_none() => Some(RecoveryPolicy::DonorSplice),
+            "spare-pool" => {
+                let spares = match param {
+                    None => DEFAULT_SPARES,
+                    Some(p) => p.parse::<u32>().ok().filter(|&n| n > 0)?,
+                };
+                Some(RecoveryPolicy::SparePool { spares })
+            }
+            "checkpoint-restore" | "ckpt" => {
+                let interval_s = match param {
+                    None => DEFAULT_CHECKPOINT_INTERVAL_S,
+                    Some(p) => p.parse::<f64>().ok().filter(|s| s.is_finite() && *s > 0.0)?,
+                };
+                Some(RecoveryPolicy::CheckpointRestore { interval_s })
+            }
+            _ => None,
+        }
+    }
+
+    /// Does this policy route around fail-slow stragglers? Quarantining
+    /// means treating the slow node as failed, which is only worth it
+    /// when the recovery path is much cheaper than the straggler
+    /// (everything except a 600 s full re-init).
+    pub fn quarantines_stragglers(&self) -> bool {
+        !matches!(self, RecoveryPolicy::FullReinit)
+    }
+
+    /// Initial hot-standby pool size (0 for every non-pool policy).
+    pub fn initial_spares(&self) -> u32 {
+        match self {
+            RecoveryPolicy::SparePool { spares } => *spares,
+            _ => 0,
+        }
+    }
+}
+
+/// Whether and how KV context replicates in the background.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicationPolicy {
+    /// No background replication (failovers recompute). Label `off`.
+    Off,
+    /// Ring replication across the LB group (paper §3.2): node `(i, s)`
+    /// streams its newest blocks to `((i+1) mod n, s)` every
+    /// `interval_iters` decode iterations. Label `ring[:N]`.
+    Ring { interval_iters: u32 },
+}
+
+impl ReplicationPolicy {
+    /// Stable grammar token (parameter always explicit).
+    pub fn label(&self) -> String {
+        match self {
+            ReplicationPolicy::Off => "off".into(),
+            ReplicationPolicy::Ring { interval_iters } => format!("ring:{interval_iters}"),
+        }
+    }
+
+    /// Inverse of [`ReplicationPolicy::label`].
+    pub fn parse(s: &str) -> Option<ReplicationPolicy> {
+        let (name, param) = split_param(s);
+        match name {
+            "off" | "none" if param.is_none() => Some(ReplicationPolicy::Off),
+            "ring" => {
+                let interval_iters = match param {
+                    None => DEFAULT_RING_INTERVAL_ITERS,
+                    Some(p) => p.parse::<u32>().ok().filter(|&n| n > 0)?,
+                };
+                Some(ReplicationPolicy::Ring { interval_iters })
+            }
+            _ => None,
+        }
+    }
+
+    /// Is background replication active at all?
+    pub fn is_on(&self) -> bool {
+        matches!(self, ReplicationPolicy::Ring { .. })
+    }
+}
+
+fn split_param(s: &str) -> (&str, Option<&str>) {
+    match s.split_once(':') {
+        Some((name, param)) => (name, Some(param)),
+        None => (s, None),
+    }
+}
+
+/// One point in the policy space: a routing strategy, a recovery
+/// strategy and a replication strategy, chosen independently. Carried by
+/// [`crate::config::ServingConfig`] and dispatched by
+/// [`crate::coordinator::ControlPlane`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PolicySpec {
+    pub route: RoutePolicy,
+    pub recovery: RecoveryPolicy,
+    pub replication: ReplicationPolicy,
+}
+
+impl Default for PolicySpec {
+    /// The paper's system ([`PolicySpec::kevlarflow`]) — the historical
+    /// `ServingConfig` default.
+    fn default() -> Self {
+        Self::kevlarflow()
+    }
+}
+
+impl PolicySpec {
+    /// Preset: standard fault behavior (`rr+full-reinit+off`).
+    pub fn standard() -> Self {
+        Self {
+            route: RoutePolicy::RoundRobin,
+            recovery: RecoveryPolicy::FullReinit,
+            replication: ReplicationPolicy::Off,
+        }
+    }
+
+    /// Preset: the paper's system (`rr+donor-splice+ring:8`).
+    pub fn kevlarflow() -> Self {
+        Self {
+            route: RoutePolicy::RoundRobin,
+            recovery: RecoveryPolicy::DonorSplice,
+            replication: ReplicationPolicy::Ring {
+                interval_iters: DEFAULT_RING_INTERVAL_ITERS,
+            },
+        }
+    }
+
+    /// The two presets every comparison defaults to, standard first —
+    /// the historical `[Standard, KevlarFlow]` sweep order.
+    pub fn presets() -> [PolicySpec; 2] {
+        [Self::standard(), Self::kevlarflow()]
+    }
+
+    /// Stable label for CLI/JSON rows: the preset name when the spec IS
+    /// a preset, otherwise the canonical `route+recovery+replication`
+    /// triple with parameters explicit.
+    pub fn label(&self) -> String {
+        if *self == Self::standard() {
+            return "standard".into();
+        }
+        if *self == Self::kevlarflow() {
+            return "kevlarflow".into();
+        }
+        format!(
+            "{}+{}+{}",
+            self.route.label(),
+            self.recovery.label(),
+            self.replication.label()
+        )
+    }
+
+    /// Parse a preset name (`standard`, `kevlarflow`/`kevlar`) or a
+    /// `route+recovery+replication` triple. Inverse of
+    /// [`PolicySpec::label`].
+    pub fn parse(s: &str) -> Option<PolicySpec> {
+        match s {
+            "standard" => return Some(Self::standard()),
+            "kevlarflow" | "kevlar" => return Some(Self::kevlarflow()),
+            _ => {}
+        }
+        let mut parts = s.split('+');
+        let (route, recovery, replication) = (parts.next()?, parts.next()?, parts.next()?);
+        if parts.next().is_some() {
+            return None;
+        }
+        Some(PolicySpec {
+            route: RoutePolicy::parse(route)?,
+            recovery: RecoveryPolicy::parse(recovery)?,
+            replication: ReplicationPolicy::parse(replication)?,
+        })
+    }
+
+    /// Parse a comma-separated policy list (the CLI `--policies` value).
+    /// Errs with the offending token.
+    pub fn parse_list(s: &str) -> Result<Vec<PolicySpec>, String> {
+        s.split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| PolicySpec::parse(t).ok_or_else(|| t.to_string()))
+            .collect()
+    }
+
+    /// JSON form: the label string (scenario specs store policy lists as
+    /// `["kevlarflow", "rr+spare-pool:2+ring:8", ...]`).
+    pub fn to_json(&self) -> Json {
+        Json::Str(self.label())
+    }
+
+    /// Inverse of [`PolicySpec::to_json`].
+    pub fn from_json(v: &Json) -> Option<PolicySpec> {
+        v.as_str().and_then(PolicySpec::parse)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse_and_canonicalize() {
+        assert_eq!(PolicySpec::parse("standard"), Some(PolicySpec::standard()));
+        assert_eq!(PolicySpec::parse("kevlarflow"), Some(PolicySpec::kevlarflow()));
+        assert_eq!(PolicySpec::parse("kevlar"), Some(PolicySpec::kevlarflow()));
+        assert_eq!(PolicySpec::standard().label(), "standard");
+        assert_eq!(PolicySpec::kevlarflow().label(), "kevlarflow");
+        // explicit triples naming a preset canonicalize to the preset
+        assert_eq!(PolicySpec::parse("rr+donor-splice+ring:8").unwrap().label(), "kevlarflow");
+        assert_eq!(PolicySpec::parse("rr+full-reinit+off").unwrap().label(), "standard");
+        assert_eq!(PolicySpec::default(), PolicySpec::kevlarflow());
+        assert_eq!(PolicySpec::presets()[0], PolicySpec::standard());
+    }
+
+    #[test]
+    fn triples_roundtrip_with_params_and_defaults() {
+        let spec = PolicySpec::parse("rr+spare-pool+ring").unwrap();
+        assert_eq!(spec.recovery, RecoveryPolicy::SparePool { spares: DEFAULT_SPARES });
+        assert_eq!(
+            spec.replication,
+            ReplicationPolicy::Ring { interval_iters: DEFAULT_RING_INTERVAL_ITERS }
+        );
+        assert_eq!(spec.label(), "rr+spare-pool:2+ring:8");
+
+        for label in [
+            "ll+donor-splice+ring:4",
+            "p2c+checkpoint-restore:45+off",
+            "rr+spare-pool:3+off",
+            "p2c+full-reinit+ring:16",
+            "ll+checkpoint-restore:12.5+ring:8",
+        ] {
+            let spec = PolicySpec::parse(label).unwrap_or_else(|| panic!("parse {label}"));
+            assert_eq!(spec.label(), label, "label must be a parse fixed point");
+            assert_eq!(PolicySpec::parse(&spec.label()), Some(spec));
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "rr",
+            "rr+donor-splice",
+            "rr+donor-splice+ring+extra",
+            "warp+donor-splice+ring",
+            "rr+melt+ring",
+            "rr+donor-splice+tape",
+            "rr+spare-pool:0+ring",
+            "rr+checkpoint-restore:-5+off",
+            "rr+checkpoint-restore:nan+off",
+            "rr+donor-splice:7+ring",
+            "rr+full-reinit+ring:0",
+            "rr+full-reinit:1+off",
+            "rr+full-reinit+off:1",
+        ] {
+            assert_eq!(PolicySpec::parse(bad), None, "must reject '{bad}'");
+        }
+    }
+
+    #[test]
+    fn parse_list_collects_and_reports() {
+        let list = PolicySpec::parse_list("kevlarflow, standard,rr+spare-pool+ring").unwrap();
+        assert_eq!(list.len(), 3);
+        assert_eq!(list[0], PolicySpec::kevlarflow());
+        assert_eq!(list[2].recovery, RecoveryPolicy::SparePool { spares: DEFAULT_SPARES });
+        assert_eq!(PolicySpec::parse_list("kevlarflow,bogus"), Err("bogus".to_string()));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for label in ["standard", "kevlarflow", "p2c+spare-pool:4+ring:2"] {
+            let spec = PolicySpec::parse(label).unwrap();
+            let back = PolicySpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec);
+        }
+        assert_eq!(PolicySpec::from_json(&Json::Num(1.0)), None);
+    }
+
+    #[test]
+    fn capability_predicates() {
+        assert!(!RecoveryPolicy::FullReinit.quarantines_stragglers());
+        assert!(RecoveryPolicy::DonorSplice.quarantines_stragglers());
+        assert!(RecoveryPolicy::SparePool { spares: 1 }.quarantines_stragglers());
+        assert_eq!(RecoveryPolicy::SparePool { spares: 3 }.initial_spares(), 3);
+        assert_eq!(RecoveryPolicy::DonorSplice.initial_spares(), 0);
+        assert!(ReplicationPolicy::Ring { interval_iters: 8 }.is_on());
+        assert!(!ReplicationPolicy::Off.is_on());
+    }
+}

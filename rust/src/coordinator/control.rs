@@ -7,11 +7,25 @@
 //! [`ControlPlane::handle`], and execute the returned [`Action`]s with
 //! whatever mechanism they own (virtual timers and abstract KV accounting
 //! in the sim; real communicator epochs, node threads and KV buffers in
-//! the engine). Every policy decision the paper describes — round-robin
-//! routing, donor selection, decoupled re-formation sequencing, ring
-//! replication cadence, replica promotion, replacement swap-in — is made
-//! *here and only here*, so a new failure mode is a new `Event` variant,
-//! not a second implementation.
+//! the engine). Every policy decision — routing, donor selection,
+//! decoupled re-formation sequencing, replication cadence, replica
+//! promotion, replacement swap-in — is made *here and only here*, so a
+//! new failure mode is a new `Event` variant, not a second
+//! implementation.
+//!
+//! Which decisions get made is configured per axis by the
+//! [`crate::config::PolicySpec`] on [`ServingConfig`]: the
+//! [`crate::config::RoutePolicy`] is dispatched by [`super::router`],
+//! the [`crate::config::RecoveryPolicy`] arms live in [`super::policy`],
+//! and the [`crate::config::ReplicationPolicy`] drives the flush cadence
+//! below. The historical `standard`/`kevlarflow` behaviors are presets
+//! of that spec and are reproduced exchange-for-exchange (pinned by the
+//! tests in this file and `rust/tests/policy_props.rs`), with one
+//! deliberate exception: the least-loaded re-dispatch tiebreak now
+//! rotates from the round-robin cursor instead of dogpiling the lowest
+//! instance id (see [`super::router::Router::pick_least_loaded`]), so a
+//! displaced backlog with tied survivor loads lands differently than it
+//! did before the redesign.
 //!
 //! Purity contract: `handle(now, event)` reads nothing but its own state
 //! and arguments (its only randomness is an internal PRNG seeded at
@@ -34,13 +48,13 @@
 //! // a request reaches the front door: the control plane places it
 //! let actions = cp.handle(0.0, Event::RequestArrived { req: 0 });
 //! assert_eq!(actions, vec![Action::Dispatch { req: 0, instance: 0 }]);
-//! // round-robin over serving instances
+//! // round-robin over serving instances (the default route policy)
 //! let actions = cp.handle(0.1, Event::RequestArrived { req: 1 });
 //! assert_eq!(actions, vec![Action::Dispatch { req: 1, instance: 1 }]);
 //! ```
 //!
-//! A node failure turns into the full KevlarFlow recovery choreography in
-//! one exchange:
+//! A node failure turns into the full donor-splice recovery choreography
+//! in one exchange (under the default `kevlarflow` preset):
 //!
 //! ```
 //! use kevlarflow::config::{ClusterConfig, NodeId, ServingConfig, SimTimingConfig};
@@ -62,12 +76,13 @@
 //!     .any(|a| matches!(a, Action::ReformCommunicator { members, .. } if members.len() == 4)));
 //! ```
 
-use crate::config::{ClusterConfig, FaultPolicy, NodeId, ServingConfig, SimTimingConfig};
+use crate::config::{ClusterConfig, NodeId, ReplicationPolicy, ServingConfig, SimTimingConfig};
 use crate::workload::Pcg32;
 
-use super::recovery::{RecoveryManager, RecoveryPlan, RecoveryRecord};
+use super::policy::PendingFailure;
+use super::recovery::RecoveryManager;
 use super::replication::ReplicationPlanner;
-use super::reroute::{select_donor, InstanceHealth, PipelineState};
+use super::reroute::{InstanceHealth, PipelineState};
 use super::router::{InstanceView, Router};
 
 /// Something that happened on the substrate, reported to the control
@@ -97,7 +112,8 @@ pub enum Event {
     /// The background replacement node for `instance`'s failed slot is
     /// provisioned and ready to swap in.
     NodeProvisioned { instance: usize },
-    /// A fully re-initialized pipeline (standard fault behavior) is back.
+    /// A fully re-initialized / spare-swapped / checkpoint-restored
+    /// pipeline is back at full strength.
     InstanceRejoined { instance: usize },
     /// A previously-failed node's own process is back (transient flap:
     /// partition healed / process restarted), with its KV memory lost.
@@ -107,20 +123,23 @@ pub enum Event {
     /// replacement path remains the fallback).
     NodeRecovered { node: NodeId },
     /// The monitoring layer flagged `node` as a fail-slow straggler
-    /// (sustained pass times far above its siblings). KevlarFlow
-    /// quarantines it exactly like a fail-stop loss — donor splice,
-    /// degraded serving, background replacement; the standard policy has
-    /// no answer to slowness and ignores the signal.
+    /// (sustained pass times far above its siblings). Every recovery
+    /// policy except full re-init quarantines it exactly like a
+    /// fail-stop loss; full re-init has no answer to slowness and
+    /// ignores the signal.
     StragglerDetected { node: NodeId },
+    /// A consumed hot standby finished re-provisioning (spare-pool
+    /// recovery): the pool refills by one.
+    SpareReady,
 }
 
 /// Which of an instance's requests an [`Action::Evict`] displaces.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EvictScope {
-    /// Running + queued (standard fault behavior: the pipeline is gone).
+    /// Running + queued (the pipeline is gone).
     All,
-    /// Queued only (KevlarFlow: in-flight requests wait for the donor,
-    /// queued ones reroute to healthy siblings immediately).
+    /// Queued only (donor splicing: in-flight requests wait for the
+    /// donor, queued ones reroute to healthy siblings immediately).
     Queued,
 }
 
@@ -132,6 +151,11 @@ pub enum ResetMode {
     Restart,
     /// Progress is kept; only the placement changes.
     KeepProgress,
+    /// Progress is kept (tokens already emitted stand), but the new
+    /// placement must recompute the full context before decoding resumes
+    /// — checkpoint-restore displacement, where the context lives in the
+    /// failed instance's checkpoint, not on the survivors.
+    Recompute,
 }
 
 /// A deadline the substrate must schedule; when it fires, feed
@@ -142,9 +166,11 @@ pub enum Wake {
     RecoveryElapsed { instance: usize },
     /// The background replacement node for `instance` is provisioned.
     NodeProvisioned { instance: usize },
-    /// The full re-initialization of `instance` (standard fault behavior)
-    /// is done.
+    /// The full re-initialization, spare swap-in, or checkpoint restore
+    /// of `instance` is done.
     InstanceRejoined { instance: usize },
+    /// A consumed hot standby finished its background re-provision.
+    SpareReady,
 }
 
 impl Wake {
@@ -154,6 +180,7 @@ impl Wake {
             Wake::RecoveryElapsed { instance } => Event::RecoveryElapsed { instance },
             Wake::NodeProvisioned { instance } => Event::NodeProvisioned { instance },
             Wake::InstanceRejoined { instance } => Event::InstanceRejoined { instance },
+            Wake::SpareReady => Event::SpareReady,
         }
     }
 }
@@ -191,19 +218,6 @@ pub enum Action {
     StartTimer { after_s: f64, wake: Wake },
 }
 
-/// A failure being recovered on one instance.
-#[derive(Debug, Clone, Copy)]
-struct PendingFailure {
-    /// When the node actually died (detection time minus the heartbeat
-    /// timeout) — the paper's recovery clock starts here.
-    injected_s: f64,
-    /// The failed slot from this instance's perspective.
-    failed: NodeId,
-    /// The donor selected for this recovery (its death before
-    /// `RecoveryElapsed` forces a restart with a fresh donor).
-    donor: NodeId,
-}
-
 /// Sentinel in the dense `assigned` table: no outstanding placement.
 const UNASSIGNED: usize = usize::MAX;
 
@@ -216,15 +230,16 @@ const UNASSIGNED: usize = usize::MAX;
 /// maps — no hashing or rehash churn on the million-request hot loop.
 #[derive(Debug, Clone)]
 pub struct ControlPlane {
-    cluster: ClusterConfig,
-    serving: ServingConfig,
-    timing: SimTimingConfig,
+    pub(crate) cluster: ClusterConfig,
+    pub(crate) serving: ServingConfig,
+    pub(crate) timing: SimTimingConfig,
     router: Router,
-    health: InstanceHealth,
-    planner: ReplicationPlanner,
-    recovery: RecoveryManager,
-    /// Recovery-plan jitter stream — the only randomness in the facade.
-    rng: Pcg32,
+    pub(crate) health: InstanceHealth,
+    pub(crate) planner: ReplicationPlanner,
+    pub(crate) recovery: RecoveryManager,
+    /// Recovery-plan jitter stream — the only randomness outside the
+    /// router's two-choice sampler.
+    pub(crate) rng: Pcg32,
     /// Router-visible view of every instance, maintained incrementally
     /// (serving flips on state changes, load on dispatch/complete) so
     /// routing never rebuilds it. `views[i].load` is the outstanding
@@ -241,7 +256,10 @@ pub struct ControlPlane {
     /// for drivers.
     synced: Vec<u32>,
     /// In-flight recovery per instance.
-    pending: Vec<Option<PendingFailure>>,
+    pub(crate) pending: Vec<Option<PendingFailure>>,
+    /// Hot standbys currently available (spare-pool recovery; 0 under
+    /// every other policy).
+    pub(crate) spares: u32,
 }
 
 impl ControlPlane {
@@ -256,7 +274,7 @@ impl ControlPlane {
             cluster: cluster.clone(),
             serving: serving.clone(),
             timing: timing.clone(),
-            router: Router::new(),
+            router: Router::new(serving.policy.route, seed),
             health: InstanceHealth::new(n),
             planner: ReplicationPlanner::new(cluster),
             recovery: RecoveryManager::new(),
@@ -266,6 +284,7 @@ impl ControlPlane {
             iters: vec![0; n],
             synced: Vec::new(),
             pending: vec![None; n],
+            spares: serving.policy.recovery.initial_spares(),
         }
     }
 
@@ -319,9 +338,12 @@ impl ControlPlane {
             Event::HeartbeatMissed { node } => self.node_failed(now_s, node, out),
             Event::RecoveryElapsed { instance } => self.recovery_elapsed(now_s, instance, out),
             Event::NodeProvisioned { instance } => self.node_provisioned(instance, out),
-            Event::InstanceRejoined { instance } => self.instance_rejoined(instance, out),
+            Event::InstanceRejoined { instance } => {
+                self.instance_rejoined(now_s, instance, out)
+            }
             Event::NodeRecovered { node } => self.node_recovered(node, out),
             Event::StragglerDetected { node } => self.straggler_detected(now_s, node, out),
+            Event::SpareReady => self.spare_ready(),
         }
     }
 
@@ -345,6 +367,11 @@ impl ControlPlane {
     /// Completed recoveries (Fig 8 reporting).
     pub fn recovery(&self) -> &RecoveryManager {
         &self.recovery
+    }
+
+    /// Hot standbys currently available (spare-pool policy only).
+    pub fn spares_available(&self) -> u32 {
+        self.spares
     }
 
     /// Where `req` is currently placed, if outstanding. (Reads convert
@@ -375,7 +402,7 @@ impl ControlPlane {
 
     /// State changes flow through here so the router's incremental view
     /// stays in lock-step with [`InstanceHealth::states`].
-    fn set_state(&mut self, instance: usize, state: PipelineState) {
+    pub(crate) fn set_state(&mut self, instance: usize, state: PipelineState) {
         self.health.states[instance] = state;
         self.views[instance].serving = state.serving();
     }
@@ -416,6 +443,8 @@ impl ControlPlane {
         if prev != UNASSIGNED {
             self.views[prev].load = self.views[prev].load.saturating_sub(1);
         }
+        // arrivals follow the configured route policy; a displaced
+        // backlog always re-dispatches least-loaded so it cannot dogpile
         let pick = if least_loaded {
             self.router.pick_least_loaded(&self.views)
         } else {
@@ -436,261 +465,21 @@ impl ControlPlane {
             return;
         }
         self.iters[instance] += 1;
-        let every = self.serving.replication_interval_iters as u64;
-        if self.serving.replication && self.iters[instance] % every == 0 {
-            out.push(Action::FlushReplicas { instance });
-        }
-    }
-
-    // --------------------------------------------------------------- faults
-
-    fn node_failed(&mut self, now_s: f64, node: NodeId, out: &mut Vec<Action>) {
-        if self.health.is_dead(node) {
-            return;
-        }
-        self.health.dead.push(node);
-        // every pipeline whose traffic traverses this node is affected:
-        // its own instance, plus a borrower it was donating to
-        let mut affected = [node.instance, usize::MAX];
-        if let Some(&borrower) = self.health.donations.get(&node) {
-            affected[1] = borrower;
-        }
-        self.health.donations.remove(&node);
-
-        for instance in affected.into_iter().filter(|&i| i != usize::MAX) {
-            if !self.health.states[instance].serving() {
-                continue;
-            }
-            out.push(Action::DropEpoch { instance });
-            // from this instance's perspective the hole is at its OWN
-            // slot for the failed stage (for a borrower whose donor died,
-            // that slot was already dead)
-            let local_failed = NodeId::new(instance, node.stage);
-            // a hole at a SECOND stage of an already-degraded pipeline
-            // exceeds the single-donor model: a re-splice would leave the
-            // original hole routed at a dead node forever. Full re-init
-            // guarantees progress.
-            let second_hole = matches!(
-                self.health.states[instance],
-                PipelineState::Degraded { failed_stage, .. } if failed_stage != node.stage
-            );
-            match self.serving.fault_policy {
-                FaultPolicy::KevlarFlow if !second_hole => {
-                    self.kevlar_failover(now_s, instance, local_failed, out)
-                }
-                _ => self.standard_failover(now_s, instance, out),
+        if let ReplicationPolicy::Ring { interval_iters } = self.serving.policy.replication {
+            if self.iters[instance] % interval_iters as u64 == 0 {
+                out.push(Action::FlushReplicas { instance });
             }
         }
-        self.planner.replan(&self.cluster, &self.health, &[node]);
-    }
-
-    /// Standard fault behavior: the pipeline leaves the LB group;
-    /// displaced requests retry from scratch on the survivors; a full
-    /// re-initialization returns it after `baseline_mttr_s`.
-    fn standard_failover(&mut self, now_s: f64, instance: usize, out: &mut Vec<Action>) {
-        self.set_state(
-            instance,
-            PipelineState::Down { until_s: now_s + self.serving.baseline_mttr_s },
-        );
-        // release any donor still attached to this pipeline (a KevlarFlow
-        // recovery that fell back here must not strand its donor)
-        self.health.donations.retain(|_, b| *b != instance);
-        self.pending[instance] = None;
-        out.push(Action::Evict {
-            instance,
-            scope: EvictScope::All,
-            reset: ResetMode::Restart,
-        });
-        out.push(Action::StartTimer {
-            after_s: self.serving.baseline_mttr_s,
-            wake: Wake::InstanceRejoined { instance },
-        });
-    }
-
-    /// KevlarFlow: pause, locate donor, decoupled re-form; resume through
-    /// the donor with replicated KV. Falls back to standard behavior when
-    /// no donor exists (e.g. every sibling already degraded).
-    fn kevlar_failover(
-        &mut self,
-        now_s: f64,
-        instance: usize,
-        failed: NodeId,
-        out: &mut Vec<Action>,
-    ) {
-        let n_candidates = (0..self.cluster.n_instances)
-            .filter(|&j| {
-                j != instance
-                    && self.health.states[j] == PipelineState::Active
-                    && !self.health.is_dead(NodeId::new(j, failed.stage))
-                    && !self.health.is_donor(NodeId::new(j, failed.stage))
-            })
-            .count();
-        // resume where the replicas actually live: the failed node has
-        // been streaming its KV to its ring target, so splicing THAT node
-        // (when eligible) lets PromoteReplicas find the blocks. Fall back
-        // to the latency-closest candidate otherwise (paper §3.2).
-        let eligible = |t: NodeId| {
-            t.instance != instance
-                && self.health.states[t.instance] == PipelineState::Active
-                && !self.health.is_dead(t)
-                && !self.health.is_donor(t)
-        };
-        let donor = self
-            .planner
-            .target(failed)
-            .filter(|&t| eligible(t))
-            .or_else(|| select_donor(&self.cluster, &self.health, failed));
-        let Some(donor) = donor else {
-            return self.standard_failover(now_s, instance, out);
-        };
-        let plan = RecoveryPlan::build(
-            &self.cluster,
-            &self.timing,
-            failed,
-            donor,
-            n_candidates,
-            &mut self.rng,
-        );
-        // detection already happened (we are handling HeartbeatMissed);
-        // the remaining service-visible phases run from now.
-        let phases_s: f64 = plan.phases.iter().map(|&(_, d)| d).sum();
-        self.set_state(
-            instance,
-            PipelineState::Recovering { failed_stage: failed.stage, since_s: now_s },
-        );
-        // only requests with in-flight KV must wait for the donor; queued
-        // requests reroute to healthy siblings immediately
-        out.push(Action::Evict {
-            instance,
-            scope: EvictScope::Queued,
-            reset: ResetMode::KeepProgress,
-        });
-        self.pending[instance] =
-            Some(PendingFailure { injected_s: now_s - plan.detect_s, failed, donor });
-        self.health.donations.insert(donor, instance);
-        let members: Vec<NodeId> = (0..self.cluster.n_stages)
-            .map(|s| if s == failed.stage { donor } else { NodeId::new(instance, s) })
-            .collect();
-        out.push(Action::SpliceDonor { instance, failed, donor });
-        out.push(Action::ReformCommunicator { instance, members });
-        out.push(Action::StartTimer {
-            after_s: phases_s,
-            wake: Wake::RecoveryElapsed { instance },
-        });
-        // the replacement provisions from the moment the node died
-        out.push(Action::StartTimer {
-            after_s: self.serving.baseline_mttr_s - plan.detect_s,
-            wake: Wake::NodeProvisioned { instance },
-        });
-    }
-
-    fn recovery_elapsed(&mut self, now_s: f64, instance: usize, out: &mut Vec<Action>) {
-        // stale wake-up (the engine may complete real re-formation ahead
-        // of the modeled phase budget and feed the event early)
-        if !matches!(self.health.states[instance], PipelineState::Recovering { .. }) {
-            return;
-        }
-        let Some(PendingFailure { injected_s, failed, donor }) = self.pending[instance] else {
-            return;
-        };
-        // a second node of this instance died while it was recovering
-        // (its failover was skipped — the pipeline was not serving): two
-        // holes exceed the single-donor model, so full re-init instead
-        let second_hole = self
-            .health
-            .dead
-            .iter()
-            .any(|n| n.instance == instance && n.stage != failed.stage);
-        if second_hole {
-            return self.standard_failover(now_s, instance, out);
-        }
-        // the planned donor must still be donating to this instance
-        if self.health.donations.get(&donor) != Some(&instance) {
-            // the donor died while recovery was in flight: restart the
-            // recovery with a freshly-selected donor
-            return self.kevlar_failover(now_s, instance, failed, out);
-        }
-        self.set_state(instance, PipelineState::Degraded { failed_stage: failed.stage, donor });
-        self.recovery.record(RecoveryRecord {
-            failed,
-            donor,
-            injected_s,
-            detected_s: injected_s + self.timing.detect_s,
-            resumed_s: now_s,
-            replacement_s: injected_s + self.serving.baseline_mttr_s,
-        });
-        self.planner.replan(&self.cluster, &self.health, &[]);
-        out.push(Action::PromoteReplicas { instance, donor });
-    }
-
-    fn node_provisioned(&mut self, instance: usize, out: &mut Vec<Action>) {
-        // e.g. the recovery fell back to standard behavior, or a second
-        // failure restarted it — the swap only applies to a Degraded
-        // pipeline
-        let PipelineState::Degraded { failed_stage, donor } = self.health.states[instance] else {
-            return;
-        };
-        self.swap_in(instance, NodeId::new(instance, failed_stage), donor, out)
-    }
-
-    /// A healthy node now fills `instance`'s failed slot: release the
-    /// donor, clear the slot from the dead list, return to `Active`.
-    fn swap_in(&mut self, instance: usize, fresh: NodeId, donor: NodeId, out: &mut Vec<Action>) {
-        self.health.donations.remove(&donor);
-        self.health.dead.retain(|&n| n != fresh);
-        self.set_state(instance, PipelineState::Active);
-        self.pending[instance] = None;
-        self.planner.replan(&self.cluster, &self.health, &[]);
-        out.push(Action::ReleaseDonor { instance, donor, fresh });
-    }
-
-    fn node_recovered(&mut self, node: NodeId, out: &mut Vec<Action>) {
-        if !self.health.is_dead(node) {
-            return;
-        }
-        // an early swap-in is only safe when the pipeline already serves
-        // degraded through a donor for exactly this slot; mid-recovery or
-        // Down pipelines keep their scheduled path (the background
-        // replacement timer remains the fallback and is idempotent)
-        match self.health.states[node.instance] {
-            PipelineState::Degraded { failed_stage, donor } if failed_stage == node.stage => {
-                self.swap_in(node.instance, node, donor, out)
-            }
-            _ => {}
-        }
-    }
-
-    fn straggler_detected(&mut self, now_s: f64, node: NodeId, out: &mut Vec<Action>) {
-        // the standard policy has no partial-availability story — it
-        // tolerates the straggler; quarantining a donor would cascade a
-        // second recovery, so a slow donor is tolerated too
-        let quarantine = self.serving.fault_policy == FaultPolicy::KevlarFlow
-            && !self.health.is_dead(node)
-            && !self.health.is_donor(node)
-            && self.health.states[node.instance] == PipelineState::Active;
-        if !quarantine {
-            return;
-        }
-        // route around the slow node exactly like a fail-stop loss: mark
-        // it dead, splice a donor, provision a replacement in background
-        self.node_failed(now_s, node, out)
-    }
-
-    fn instance_rejoined(&mut self, instance: usize, out: &mut Vec<Action>) {
-        self.health.dead.retain(|n| n.instance != instance);
-        self.set_state(instance, PipelineState::Active);
-        self.planner.replan(&self.cluster, &self.health, &[]);
-        // fresh pipeline, fresh epoch: anything still in flight is stale
-        out.push(Action::DropEpoch { instance });
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::PolicySpec;
 
-    fn cp(cluster: ClusterConfig, policy: FaultPolicy) -> ControlPlane {
-        let serving = ServingConfig { fault_policy: policy, ..ServingConfig::default() };
+    fn cp(cluster: ClusterConfig, policy: PolicySpec) -> ControlPlane {
+        let serving = ServingConfig { policy, ..ServingConfig::default() };
         ControlPlane::new(&cluster, &serving, &SimTimingConfig::default(), 42)
     }
 
@@ -708,8 +497,8 @@ mod tests {
     fn handle_into_reuses_buffer_and_matches_handle() {
         // the allocating wrapper and the buffer-reuse core must be the
         // same machine; pre-sizing the dense tables must not change it
-        let mut a = cp(ClusterConfig::paper_8node(), FaultPolicy::KevlarFlow);
-        let mut b = cp(ClusterConfig::paper_8node(), FaultPolicy::KevlarFlow);
+        let mut a = cp(ClusterConfig::paper_8node(), PolicySpec::kevlarflow());
+        let mut b = cp(ClusterConfig::paper_8node(), PolicySpec::kevlarflow());
         b.reserve_requests(64);
         let mut buf = Vec::new();
         for req in 0..8u64 {
@@ -731,7 +520,7 @@ mod tests {
 
     #[test]
     fn routes_round_robin_and_tracks_load() {
-        let mut cp = cp(ClusterConfig::paper_8node(), FaultPolicy::KevlarFlow);
+        let mut cp = cp(ClusterConfig::paper_8node(), PolicySpec::kevlarflow());
         for req in 0..4u64 {
             let a = cp.handle(0.0, Event::RequestArrived { req });
             assert_eq!(a, vec![Action::Dispatch { req, instance: (req % 2) as usize }]);
@@ -745,9 +534,35 @@ mod tests {
     }
 
     #[test]
+    fn route_policies_change_arrival_placement() {
+        use crate::config::RoutePolicy;
+        // least-loaded arrivals follow the load signal, not the cursor
+        let mut ll = cp(
+            ClusterConfig::paper_16node(),
+            PolicySpec { route: RoutePolicy::LeastLoaded, ..PolicySpec::kevlarflow() },
+        );
+        for req in 0..3u64 {
+            ll.handle(0.0, Event::RequestArrived { req });
+        }
+        ll.handle(1.0, Event::RequestCompleted { req: 1 });
+        let a = ll.handle(2.0, Event::RequestArrived { req: 3 });
+        assert_eq!(a, vec![Action::Dispatch { req: 3, instance: 1 }], "emptied slot refills");
+
+        // two-choice arrivals are deterministic given the seed
+        let p2c = PolicySpec { route: RoutePolicy::PowerOfTwo, ..PolicySpec::kevlarflow() };
+        let run = || {
+            let mut c = cp(ClusterConfig::paper_16node(), p2c);
+            (0..32u64)
+                .flat_map(|req| c.handle(0.0, Event::RequestArrived { req }))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
     fn replication_cadence_fires_on_interval() {
-        let mut cp = cp(ClusterConfig::paper_8node(), FaultPolicy::KevlarFlow);
-        let every = ServingConfig::default().replication_interval_iters as u64;
+        let mut cp = cp(ClusterConfig::paper_8node(), PolicySpec::kevlarflow());
+        let every = crate::config::policy::DEFAULT_RING_INTERVAL_ITERS as u64;
         let mut flushes = 0;
         for _ in 0..(2 * every) {
             let a = cp.handle(0.0, Event::PassCompleted { instance: 0, decode: true });
@@ -760,8 +575,16 @@ mod tests {
     }
 
     #[test]
+    fn replication_off_never_flushes() {
+        let mut cp = cp(ClusterConfig::paper_8node(), PolicySpec::standard());
+        for _ in 0..64 {
+            assert!(cp.handle(0.0, Event::PassCompleted { instance: 0, decode: true }).is_empty());
+        }
+    }
+
+    #[test]
     fn kevlar_failover_full_choreography() {
-        let mut cp = cp(ClusterConfig::paper_16node(), FaultPolicy::KevlarFlow);
+        let mut cp = cp(ClusterConfig::paper_16node(), PolicySpec::kevlarflow());
         let failed = NodeId::new(0, 2);
         let a = cp.handle(124.0, Event::HeartbeatMissed { node: failed });
         assert_eq!(a[0], Action::DropEpoch { instance: 0 });
@@ -815,7 +638,7 @@ mod tests {
 
     #[test]
     fn standard_failover_evicts_all_and_rejoins() {
-        let mut cp = cp(ClusterConfig::paper_8node(), FaultPolicy::Standard);
+        let mut cp = cp(ClusterConfig::paper_8node(), PolicySpec::standard());
         let a = cp.handle(100.0, Event::HeartbeatMissed { node: NodeId::new(0, 1) });
         assert_eq!(a[0], Action::DropEpoch { instance: 0 });
         assert_eq!(
@@ -832,13 +655,15 @@ mod tests {
         assert_eq!(a, vec![Action::DropEpoch { instance: 0 }]);
         assert_eq!(cp.state(0), PipelineState::Active);
         assert!(!cp.health().is_dead(NodeId::new(0, 1)));
+        // a full re-init is not a recovered outage — nothing recorded
+        assert!(cp.recovery().completed.is_empty());
     }
 
     #[test]
     fn kevlar_falls_back_to_standard_without_donor() {
         // 8-node cluster: kill the same stage in both instances — the
         // second failure finds no Active sibling and degrades to standard
-        let mut cp = cp(ClusterConfig::paper_8node(), FaultPolicy::KevlarFlow);
+        let mut cp = cp(ClusterConfig::paper_8node(), PolicySpec::kevlarflow());
         cp.handle(50.0, Event::HeartbeatMissed { node: NodeId::new(0, 1) });
         let a = cp.handle(51.0, Event::HeartbeatMissed { node: NodeId::new(1, 1) });
         assert!(
@@ -854,7 +679,7 @@ mod tests {
 
     #[test]
     fn donor_death_mid_recovery_restarts_with_new_donor() {
-        let mut cp = cp(ClusterConfig::paper_16node(), FaultPolicy::KevlarFlow);
+        let mut cp = cp(ClusterConfig::paper_16node(), PolicySpec::kevlarflow());
         let a = cp.handle(124.0, Event::HeartbeatMissed { node: NodeId::new(0, 2) });
         let donor1 = match a.iter().find(|x| matches!(x, Action::SpliceDonor { .. })) {
             Some(Action::SpliceDonor { donor, .. }) => *donor,
@@ -879,7 +704,7 @@ mod tests {
 
     #[test]
     fn flap_rejoin_releases_donor_early() {
-        let mut cp = cp(ClusterConfig::paper_16node(), FaultPolicy::KevlarFlow);
+        let mut cp = cp(ClusterConfig::paper_16node(), PolicySpec::kevlarflow());
         let failed = NodeId::new(0, 2);
         cp.handle(124.0, Event::HeartbeatMissed { node: failed });
         // rejoin mid-recovery is advisory only
@@ -904,11 +729,11 @@ mod tests {
     #[test]
     fn straggler_quarantined_only_under_kevlarflow() {
         let slow = NodeId::new(0, 1);
-        let mut std_cp = cp(ClusterConfig::paper_16node(), FaultPolicy::Standard);
+        let mut std_cp = cp(ClusterConfig::paper_16node(), PolicySpec::standard());
         assert!(std_cp.handle(140.0, Event::StragglerDetected { node: slow }).is_empty());
         assert_eq!(std_cp.state(0), PipelineState::Active);
 
-        let mut cp = cp(ClusterConfig::paper_16node(), FaultPolicy::KevlarFlow);
+        let mut cp = cp(ClusterConfig::paper_16node(), PolicySpec::kevlarflow());
         let a = cp.handle(140.0, Event::StragglerDetected { node: slow });
         assert!(
             a.iter()
@@ -922,7 +747,7 @@ mod tests {
 
     #[test]
     fn straggling_donor_is_tolerated() {
-        let mut cp = cp(ClusterConfig::paper_16node(), FaultPolicy::KevlarFlow);
+        let mut cp = cp(ClusterConfig::paper_16node(), PolicySpec::kevlarflow());
         let a = cp.handle(124.0, Event::HeartbeatMissed { node: NodeId::new(0, 2) });
         let donor = match a.iter().find(|x| matches!(x, Action::SpliceDonor { .. })) {
             Some(Action::SpliceDonor { donor, .. }) => *donor,
@@ -934,7 +759,7 @@ mod tests {
 
     #[test]
     fn total_outage_parks_deterministically() {
-        let mut cp = cp(ClusterConfig::paper_8node(), FaultPolicy::Standard);
+        let mut cp = cp(ClusterConfig::paper_8node(), PolicySpec::standard());
         cp.handle(10.0, Event::HeartbeatMissed { node: NodeId::new(0, 0) });
         cp.handle(10.0, Event::HeartbeatMissed { node: NodeId::new(1, 0) });
         let a = cp.handle(11.0, Event::RequestArrived { req: 5 });
@@ -944,7 +769,7 @@ mod tests {
     #[test]
     fn identical_event_streams_produce_identical_actions() {
         let run = || {
-            let mut cp = cp(ClusterConfig::paper_16node(), FaultPolicy::KevlarFlow);
+            let mut cp = cp(ClusterConfig::paper_16node(), PolicySpec::kevlarflow());
             let mut log = Vec::new();
             for req in 0..20u64 {
                 log.extend(cp.handle(req as f64, Event::RequestArrived { req }));

@@ -15,12 +15,13 @@
 //! | Paper mechanism | Module |
 //! |---|---|
 //! | One coordinator, every substrate (event/action facade) | [`control`] |
-//! | Load-balancing group, even distribution | [`router`] |
+//! | Load-balancing group (round-robin / least-loaded / two-choice) | [`router`] |
 //! | Heartbeat failure detection | [`membership`] |
 //! | Dynamic traffic rerouting / partial availability | [`reroute`] |
 //! | Background block-wise KV replication (ring) | [`replication`] |
 //! | Decoupled-init recovery (donor splice, 30 s MTTR) | [`recovery`] |
-//! | Standard-vs-KevlarFlow fault semantics | [`crate::config::FaultPolicy`] |
+//! | Recovery strategy arms (full-reinit / donor-splice / spare-pool / checkpoint-restore) | [`policy`] |
+//! | Policy configuration (route × recovery × replication axes) | [`crate::config::PolicySpec`] |
 //!
 //! The submodules below [`control`] are the facade's internals; they stay
 //! public for property tests and benchmarks, but substrates should only
@@ -28,6 +29,7 @@
 
 pub mod control;
 pub mod membership;
+pub mod policy;
 pub mod recovery;
 pub mod replication;
 pub mod reroute;

@@ -1,0 +1,573 @@
+//! Recovery strategy dispatch: the fault-handling arms of the control
+//! plane, one per [`RecoveryPolicy`] variant (extracted from
+//! `control.rs` when the two-variant `FaultPolicy` enum became the
+//! composable [`crate::config::PolicySpec`]).
+//!
+//! Every handler here is an `impl ControlPlane` method (the same split
+//! `sim/state.rs` uses for `ClusterSim`): the facade owns the state, and
+//! this file owns the policy arms that mutate it when nodes fail,
+//! recover, rejoin or straggle. `control.rs` routes events in; nothing
+//! here is reachable except through [`ControlPlane::handle`].
+//!
+//! The four strategies:
+//!
+//! * [`RecoveryPolicy::FullReinit`] — standard fault behavior: the
+//!   pipeline leaves the LB group, displaced requests restart from
+//!   scratch, and a full re-provision returns it after
+//!   `baseline_mttr_s`.
+//! * [`RecoveryPolicy::DonorSplice`] — the paper's choreography: pause,
+//!   locate a same-stage donor, decoupled re-formation, degraded serving
+//!   with replicated-KV promotion, background replacement. Falls back to
+//!   full re-init when no donor exists or a second hole opens.
+//! * [`RecoveryPolicy::SparePool`] — FailSafe-style hot standbys: a
+//!   pre-provisioned spare (weights loaded) swaps into the failed slot
+//!   after locate + re-form; no donor is borrowed and the pipeline
+//!   returns to FULL capacity, but the cold spare carries no KV, so
+//!   in-flight requests restart. The consumed standby re-provisions in
+//!   the background ([`Wake::SpareReady`]); an empty pool falls back to
+//!   full re-init. A multi-hole re-init consumes a single pool slot (the
+//!   pool models instance-level standby capacity, not per-node spares).
+//! * [`RecoveryPolicy::CheckpointRestore`] — GhostServe-style shadow
+//!   checkpoints: the failed instance restores from its last checkpoint
+//!   and returns after an `interval_s`-bounded recompute instead of a
+//!   full re-init. Displaced requests keep their emitted tokens and
+//!   recompute their context on survivors ([`ResetMode::Recompute`]).
+
+use crate::config::{NodeId, RecoveryPolicy};
+use crate::coordinator::recovery::{RecoveryPlan, RecoveryRecord};
+use crate::coordinator::reroute::{select_donor, PipelineState};
+
+use super::control::{Action, ControlPlane, EvictScope, ResetMode, Wake};
+
+/// A failure being recovered on one instance.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PendingFailure {
+    /// When the node actually died (detection time minus the heartbeat
+    /// timeout) — the paper's recovery clock starts here.
+    pub(crate) injected_s: f64,
+    /// The failed slot from this instance's perspective.
+    pub(crate) failed: NodeId,
+    /// Donor splicing: the selected donor (its death before
+    /// `RecoveryElapsed` forces a restart with a fresh donor). The
+    /// spare/checkpoint strategies have no donor and store the failed
+    /// slot itself.
+    pub(crate) donor: NodeId,
+}
+
+impl ControlPlane {
+    // ------------------------------------------------------------ failures
+
+    pub(crate) fn node_failed(&mut self, now_s: f64, node: NodeId, out: &mut Vec<Action>) {
+        if self.health.is_dead(node) {
+            return;
+        }
+        self.health.dead.push(node);
+        // every pipeline whose traffic traverses this node is affected:
+        // its own instance, plus a borrower it was donating to
+        let mut affected = [node.instance, usize::MAX];
+        if let Some(&borrower) = self.health.donations.get(&node) {
+            affected[1] = borrower;
+        }
+        self.health.donations.remove(&node);
+
+        for instance in affected.into_iter().filter(|&i| i != usize::MAX) {
+            if !self.health.states[instance].serving() {
+                continue;
+            }
+            out.push(Action::DropEpoch { instance });
+            // from this instance's perspective the hole is at its OWN
+            // slot for the failed stage (for a borrower whose donor died,
+            // that slot was already dead)
+            let local_failed = NodeId::new(instance, node.stage);
+            // a hole at a SECOND stage of an already-degraded pipeline
+            // exceeds the single-donor model: a re-splice would leave the
+            // original hole routed at a dead node forever. Full re-init
+            // guarantees progress.
+            let second_hole = matches!(
+                self.health.states[instance],
+                PipelineState::Degraded { failed_stage, .. } if failed_stage != node.stage
+            );
+            match self.serving.policy.recovery {
+                RecoveryPolicy::DonorSplice if !second_hole => {
+                    self.donor_splice_failover(now_s, instance, local_failed, out)
+                }
+                RecoveryPolicy::DonorSplice | RecoveryPolicy::FullReinit => {
+                    self.full_reinit_failover(now_s, instance, out)
+                }
+                RecoveryPolicy::SparePool { .. } => {
+                    self.spare_pool_failover(now_s, instance, local_failed, out)
+                }
+                RecoveryPolicy::CheckpointRestore { interval_s } => {
+                    self.checkpoint_failover(now_s, instance, local_failed, interval_s, out)
+                }
+            }
+        }
+        self.planner.replan(&self.cluster, &self.health, &[node]);
+    }
+
+    /// Full re-initialization: the pipeline leaves the LB group;
+    /// displaced requests retry from scratch on the survivors; a full
+    /// re-provision + weight reload returns it after `baseline_mttr_s`.
+    /// Also the universal fallback (no donor, second hole, empty pool).
+    pub(crate) fn full_reinit_failover(
+        &mut self,
+        now_s: f64,
+        instance: usize,
+        out: &mut Vec<Action>,
+    ) {
+        self.set_state(
+            instance,
+            PipelineState::Down { until_s: now_s + self.serving.baseline_mttr_s },
+        );
+        // release any donor still attached to this pipeline (a donor
+        // recovery that fell back here must not strand its donor)
+        self.health.donations.retain(|_, b| *b != instance);
+        self.pending[instance] = None;
+        out.push(Action::Evict {
+            instance,
+            scope: EvictScope::All,
+            reset: ResetMode::Restart,
+        });
+        out.push(Action::StartTimer {
+            after_s: self.serving.baseline_mttr_s,
+            wake: Wake::InstanceRejoined { instance },
+        });
+    }
+
+    /// Donor splicing (the paper's system): pause, locate donor,
+    /// decoupled re-form; resume through the donor with replicated KV.
+    /// Falls back to full re-init when no donor exists (e.g. every
+    /// sibling already degraded).
+    pub(crate) fn donor_splice_failover(
+        &mut self,
+        now_s: f64,
+        instance: usize,
+        failed: NodeId,
+        out: &mut Vec<Action>,
+    ) {
+        let n_candidates = (0..self.cluster.n_instances)
+            .filter(|&j| {
+                j != instance
+                    && self.health.states[j] == PipelineState::Active
+                    && !self.health.is_dead(NodeId::new(j, failed.stage))
+                    && !self.health.is_donor(NodeId::new(j, failed.stage))
+            })
+            .count();
+        // resume where the replicas actually live: the failed node has
+        // been streaming its KV to its ring target, so splicing THAT node
+        // (when eligible) lets PromoteReplicas find the blocks. Fall back
+        // to the latency-closest candidate otherwise (paper §3.2).
+        let eligible = |t: NodeId| {
+            t.instance != instance
+                && self.health.states[t.instance] == PipelineState::Active
+                && !self.health.is_dead(t)
+                && !self.health.is_donor(t)
+        };
+        let donor = self
+            .planner
+            .target(failed)
+            .filter(|&t| eligible(t))
+            .or_else(|| select_donor(&self.cluster, &self.health, failed));
+        let Some(donor) = donor else {
+            return self.full_reinit_failover(now_s, instance, out);
+        };
+        let plan = RecoveryPlan::build(
+            &self.cluster,
+            &self.timing,
+            failed,
+            donor,
+            n_candidates,
+            &mut self.rng,
+        );
+        // detection already happened (we are handling HeartbeatMissed);
+        // the remaining service-visible phases run from now.
+        let phases_s: f64 = plan.phases.iter().map(|&(_, d)| d).sum();
+        self.set_state(
+            instance,
+            PipelineState::Recovering { failed_stage: failed.stage, since_s: now_s },
+        );
+        // only requests with in-flight KV must wait for the donor; queued
+        // requests reroute to healthy siblings immediately
+        out.push(Action::Evict {
+            instance,
+            scope: EvictScope::Queued,
+            reset: ResetMode::KeepProgress,
+        });
+        self.pending[instance] =
+            Some(PendingFailure { injected_s: now_s - plan.detect_s, failed, donor });
+        self.health.donations.insert(donor, instance);
+        let members: Vec<NodeId> = (0..self.cluster.n_stages)
+            .map(|s| if s == failed.stage { donor } else { NodeId::new(instance, s) })
+            .collect();
+        out.push(Action::SpliceDonor { instance, failed, donor });
+        out.push(Action::ReformCommunicator { instance, members });
+        out.push(Action::StartTimer {
+            after_s: phases_s,
+            wake: Wake::RecoveryElapsed { instance },
+        });
+        // the replacement provisions from the moment the node died
+        out.push(Action::StartTimer {
+            after_s: self.serving.baseline_mttr_s - plan.detect_s,
+            wake: Wake::NodeProvisioned { instance },
+        });
+    }
+
+    /// Hot-standby swap (FailSafe-style): a pre-provisioned spare takes
+    /// the failed slot after locate + re-form. The pipeline pauses for
+    /// the swap (no degraded mode — it returns at FULL capacity), but
+    /// the cold spare carries no KV, so in-flight requests restart on
+    /// the survivors. An exhausted pool falls back to full re-init.
+    pub(crate) fn spare_pool_failover(
+        &mut self,
+        now_s: f64,
+        instance: usize,
+        failed: NodeId,
+        out: &mut Vec<Action>,
+    ) {
+        if self.spares == 0 {
+            return self.full_reinit_failover(now_s, instance, out);
+        }
+        self.spares -= 1;
+        // the spare is located through the LB-group store like a donor,
+        // but sits in the failed instance's own rack (intra-DC): the swap
+        // is locate + decoupled re-form + restore, with the weights
+        // already resident. A pool is ≥1 standby ⇒ parallel locate.
+        let plan =
+            RecoveryPlan::build(&self.cluster, &self.timing, failed, failed, 2, &mut self.rng);
+        let swap_s: f64 = plan.phases.iter().map(|&(_, d)| d).sum();
+        self.set_state(instance, PipelineState::Down { until_s: now_s + swap_s });
+        self.health.donations.retain(|_, b| *b != instance);
+        self.pending[instance] =
+            Some(PendingFailure { injected_s: now_s - plan.detect_s, failed, donor: failed });
+        out.push(Action::Evict {
+            instance,
+            scope: EvictScope::All,
+            reset: ResetMode::Restart,
+        });
+        out.push(Action::StartTimer {
+            after_s: swap_s,
+            wake: Wake::InstanceRejoined { instance },
+        });
+        // the consumed standby re-provisions in the background,
+        // refilling the pool one full MTTR later
+        out.push(Action::StartTimer {
+            after_s: self.serving.baseline_mttr_s,
+            wake: Wake::SpareReady,
+        });
+    }
+
+    /// Shadow-checkpoint restore (GhostServe-style): the instance
+    /// replays from its last checkpoint and returns after an
+    /// `interval_s`-bounded recompute. Displaced requests keep their
+    /// emitted tokens and recompute their context on the survivors.
+    pub(crate) fn checkpoint_failover(
+        &mut self,
+        now_s: f64,
+        instance: usize,
+        failed: NodeId,
+        interval_s: f64,
+        out: &mut Vec<Action>,
+    ) {
+        // reload + replay: the communicator re-forms around the restored
+        // process, then at most one checkpoint interval of lost compute
+        // replays (half on average)
+        let restore_s =
+            (self.timing.comm_reform_s + 0.5 * interval_s) * self.rng.lognormal_jitter(0.08);
+        self.set_state(instance, PipelineState::Down { until_s: now_s + restore_s });
+        self.health.donations.retain(|_, b| *b != instance);
+        self.pending[instance] = Some(PendingFailure {
+            injected_s: now_s - self.timing.detect_s,
+            failed,
+            donor: failed,
+        });
+        out.push(Action::Evict {
+            instance,
+            scope: EvictScope::All,
+            reset: ResetMode::Recompute,
+        });
+        out.push(Action::StartTimer {
+            after_s: restore_s,
+            wake: Wake::InstanceRejoined { instance },
+        });
+    }
+
+    // ----------------------------------------------------- recovery wakes
+
+    pub(crate) fn recovery_elapsed(&mut self, now_s: f64, instance: usize, out: &mut Vec<Action>) {
+        // stale wake-up (the engine may complete real re-formation ahead
+        // of the modeled phase budget and feed the event early)
+        if !matches!(self.health.states[instance], PipelineState::Recovering { .. }) {
+            return;
+        }
+        let Some(PendingFailure { injected_s, failed, donor }) = self.pending[instance] else {
+            return;
+        };
+        // a second node of this instance died while it was recovering
+        // (its failover was skipped — the pipeline was not serving): two
+        // holes exceed the single-donor model, so full re-init instead
+        let second_hole = self
+            .health
+            .dead
+            .iter()
+            .any(|n| n.instance == instance && n.stage != failed.stage);
+        if second_hole {
+            return self.full_reinit_failover(now_s, instance, out);
+        }
+        // the planned donor must still be donating to this instance
+        if self.health.donations.get(&donor) != Some(&instance) {
+            // the donor died while recovery was in flight: restart the
+            // recovery with a freshly-selected donor
+            return self.donor_splice_failover(now_s, instance, failed, out);
+        }
+        self.set_state(instance, PipelineState::Degraded { failed_stage: failed.stage, donor });
+        self.recovery.record(RecoveryRecord {
+            failed,
+            donor,
+            injected_s,
+            detected_s: injected_s + self.timing.detect_s,
+            resumed_s: now_s,
+            replacement_s: injected_s + self.serving.baseline_mttr_s,
+        });
+        self.planner.replan(&self.cluster, &self.health, &[]);
+        out.push(Action::PromoteReplicas { instance, donor });
+    }
+
+    pub(crate) fn node_provisioned(&mut self, instance: usize, out: &mut Vec<Action>) {
+        // e.g. the recovery fell back to full re-init, or a second
+        // failure restarted it — the swap only applies to a Degraded
+        // pipeline
+        let PipelineState::Degraded { failed_stage, donor } = self.health.states[instance] else {
+            return;
+        };
+        self.swap_in(instance, NodeId::new(instance, failed_stage), donor, out)
+    }
+
+    /// A healthy node now fills `instance`'s failed slot: release the
+    /// donor, clear the slot from the dead list, return to `Active`.
+    pub(crate) fn swap_in(
+        &mut self,
+        instance: usize,
+        fresh: NodeId,
+        donor: NodeId,
+        out: &mut Vec<Action>,
+    ) {
+        self.health.donations.remove(&donor);
+        self.health.dead.retain(|&n| n != fresh);
+        self.set_state(instance, PipelineState::Active);
+        self.pending[instance] = None;
+        self.planner.replan(&self.cluster, &self.health, &[]);
+        out.push(Action::ReleaseDonor { instance, donor, fresh });
+    }
+
+    pub(crate) fn node_recovered(&mut self, node: NodeId, out: &mut Vec<Action>) {
+        if !self.health.is_dead(node) {
+            return;
+        }
+        // an early swap-in is only safe when the pipeline already serves
+        // degraded through a donor for exactly this slot; mid-recovery or
+        // Down pipelines keep their scheduled path (the background
+        // replacement timer remains the fallback and is idempotent)
+        match self.health.states[node.instance] {
+            PipelineState::Degraded { failed_stage, donor } if failed_stage == node.stage => {
+                self.swap_in(node.instance, node, donor, out)
+            }
+            _ => {}
+        }
+    }
+
+    pub(crate) fn straggler_detected(&mut self, now_s: f64, node: NodeId, out: &mut Vec<Action>) {
+        // full re-init has no partial-availability story — it tolerates
+        // the straggler (quarantining would cost a 600 s outage); and
+        // quarantining a donor would cascade a second recovery, so a slow
+        // donor is tolerated under every policy
+        let quarantine = self.serving.policy.recovery.quarantines_stragglers()
+            && !self.health.is_dead(node)
+            && !self.health.is_donor(node)
+            && self.health.states[node.instance] == PipelineState::Active;
+        if !quarantine {
+            return;
+        }
+        // route around the slow node exactly like a fail-stop loss: mark
+        // it dead and run the configured recovery strategy
+        self.node_failed(now_s, node, out)
+    }
+
+    pub(crate) fn instance_rejoined(&mut self, now_s: f64, instance: usize, out: &mut Vec<Action>) {
+        self.health.dead.retain(|n| n.instance != instance);
+        self.set_state(instance, PipelineState::Active);
+        // spare-pool/checkpoint rejoins are completed recoveries (an
+        // outage bounded by the swap/restore time, not the 600 s
+        // re-provision) — record them for MTTR reporting. Full re-init
+        // and the donor-splice fallback leave `pending` empty.
+        if let Some(PendingFailure { injected_s, failed, donor }) = self.pending[instance].take()
+        {
+            self.recovery.record(RecoveryRecord {
+                failed,
+                donor,
+                injected_s,
+                detected_s: injected_s + self.timing.detect_s,
+                resumed_s: now_s,
+                replacement_s: now_s,
+            });
+        }
+        self.planner.replan(&self.cluster, &self.health, &[]);
+        // fresh pipeline, fresh epoch: anything still in flight is stale
+        out.push(Action::DropEpoch { instance });
+    }
+
+    /// A consumed hot standby finished re-provisioning: the pool refills.
+    pub(crate) fn spare_ready(&mut self) {
+        self.spares += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, PolicySpec, ServingConfig, SimTimingConfig};
+    use crate::coordinator::control::Event;
+
+    fn cp(cluster: ClusterConfig, policy: &str) -> ControlPlane {
+        let serving = ServingConfig {
+            policy: PolicySpec::parse(policy).expect("policy spec"),
+            ..ServingConfig::default()
+        };
+        ControlPlane::new(&cluster, &serving, &SimTimingConfig::default(), 42)
+    }
+
+    fn timer_after(actions: &[Action], wake: Wake) -> Option<f64> {
+        actions.iter().find_map(|a| match a {
+            Action::StartTimer { after_s, wake: w } if *w == wake => Some(*after_s),
+            _ => None,
+        })
+    }
+
+    #[test]
+    fn spare_pool_swaps_in_without_donor() {
+        let mut cp = cp(ClusterConfig::paper_16node(), "rr+spare-pool:1+ring:8");
+        let failed = NodeId::new(0, 2);
+        let a = cp.handle(124.0, Event::HeartbeatMissed { node: failed });
+        // no donor is borrowed: the spare fills the slot directly
+        assert!(!a.iter().any(|x| matches!(x, Action::SpliceDonor { .. })));
+        assert!(a.contains(&Action::Evict {
+            instance: 0,
+            scope: EvictScope::All,
+            reset: ResetMode::Restart,
+        }));
+        let swap = timer_after(&a, Wake::InstanceRejoined { instance: 0 })
+            .expect("spare swap timer");
+        assert!(
+            (10.0..60.0).contains(&swap),
+            "spare activation {swap}s must be minutes below the 600 s re-provision"
+        );
+        // the consumed standby re-provisions in the background
+        assert_eq!(timer_after(&a, Wake::SpareReady), Some(600.0));
+        assert!(matches!(cp.state(0), PipelineState::Down { .. }));
+
+        // the swap completes: instance Active, recovery recorded
+        let a = cp.handle(124.0 + swap, Event::InstanceRejoined { instance: 0 });
+        assert_eq!(a, vec![Action::DropEpoch { instance: 0 }]);
+        assert_eq!(cp.state(0), PipelineState::Active);
+        assert!(!cp.health().is_dead(failed));
+        let rec = &cp.recovery().completed[0];
+        assert_eq!(rec.failed, failed);
+        assert!((rec.injected_s - 120.0).abs() < 1e-9);
+        assert!((rec.resumed_s - (124.0 + swap)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spare_pool_exhaustion_falls_back_to_full_reinit() {
+        let mut cp = cp(ClusterConfig::paper_16node(), "rr+spare-pool:1+ring:8");
+        cp.handle(124.0, Event::HeartbeatMissed { node: NodeId::new(0, 2) });
+        // the single spare is consumed: the next failure pays full MTTR
+        let a = cp.handle(130.0, Event::HeartbeatMissed { node: NodeId::new(1, 1) });
+        assert_eq!(
+            timer_after(&a, Wake::InstanceRejoined { instance: 1 }),
+            Some(600.0),
+            "empty pool must fall back to the 600 s re-provision"
+        );
+        assert!(!a.iter().any(|x| matches!(x, Action::StartTimer { wake: Wake::SpareReady, .. })));
+        // the full re-init fallback is NOT a recorded recovery
+        cp.handle(730.0, Event::InstanceRejoined { instance: 1 });
+        assert!(cp.recovery().completed.is_empty());
+        // once the background re-provision refills the pool, spares flow
+        cp.handle(724.0, Event::SpareReady);
+        let a = cp.handle(800.0, Event::HeartbeatMissed { node: NodeId::new(2, 3) });
+        let swap = timer_after(&a, Wake::InstanceRejoined { instance: 2 }).unwrap();
+        assert!(swap < 60.0, "refilled pool must swap fast again, got {swap}");
+    }
+
+    #[test]
+    fn checkpoint_restore_bounded_outage_keeps_progress() {
+        let mut cp = cp(ClusterConfig::paper_16node(), "rr+checkpoint-restore:60+off");
+        let failed = NodeId::new(0, 2);
+        let a = cp.handle(124.0, Event::HeartbeatMissed { node: failed });
+        // displaced requests keep emitted tokens, recompute context
+        assert!(a.contains(&Action::Evict {
+            instance: 0,
+            scope: EvictScope::All,
+            reset: ResetMode::Recompute,
+        }));
+        let restore = timer_after(&a, Wake::InstanceRejoined { instance: 0 })
+            .expect("restore timer");
+        // comm_reform (24 s) + interval/2 (30 s), jittered
+        assert!(
+            (35.0..85.0).contains(&restore),
+            "restore {restore}s must be bounded by the checkpoint interval"
+        );
+        assert!(matches!(cp.state(0), PipelineState::Down { .. }));
+        cp.handle(124.0 + restore, Event::InstanceRejoined { instance: 0 });
+        assert_eq!(cp.state(0), PipelineState::Active);
+        assert_eq!(cp.recovery().completed.len(), 1);
+    }
+
+    #[test]
+    fn checkpoint_interval_scales_the_outage() {
+        let restore_for = |interval: &str| {
+            let mut cp = cp(ClusterConfig::paper_16node(), interval);
+            let a = cp.handle(124.0, Event::HeartbeatMissed { node: NodeId::new(0, 2) });
+            timer_after(&a, Wake::InstanceRejoined { instance: 0 }).unwrap()
+        };
+        let short = restore_for("rr+checkpoint-restore:10+off");
+        let long = restore_for("rr+checkpoint-restore:300+off");
+        assert!(long > short + 60.0, "interval must bound the replay: {short} vs {long}");
+    }
+
+    #[test]
+    fn stragglers_quarantined_by_every_policy_except_full_reinit() {
+        let slow = NodeId::new(0, 1);
+        for (policy, expect_quarantine) in [
+            ("standard", false),
+            ("kevlarflow", true),
+            ("rr+spare-pool:2+ring:8", true),
+            ("rr+checkpoint-restore:60+off", true),
+        ] {
+            let mut cp = cp(ClusterConfig::paper_16node(), policy);
+            let a = cp.handle(140.0, Event::StragglerDetected { node: slow });
+            assert_eq!(
+                !a.is_empty(),
+                expect_quarantine,
+                "{policy}: straggler response mismatch: {a:?}"
+            );
+            assert_eq!(cp.state(0).serving(), !expect_quarantine, "{policy}");
+        }
+    }
+
+    #[test]
+    fn new_policies_are_deterministic() {
+        for policy in ["rr+spare-pool:1+ring:4", "p2c+checkpoint-restore:45+off"] {
+            let run = || {
+                let mut cp = cp(ClusterConfig::paper_16node(), policy);
+                let mut log = Vec::new();
+                for req in 0..24u64 {
+                    log.extend(cp.handle(req as f64, Event::RequestArrived { req }));
+                }
+                log.extend(cp.handle(124.0, Event::HeartbeatMissed { node: NodeId::new(0, 2) }));
+                log.extend(cp.handle(160.0, Event::InstanceRejoined { instance: 0 }));
+                log.extend(cp.handle(161.0, Event::RequestArrived { req: 99 }));
+                log
+            };
+            assert_eq!(run(), run(), "{policy} must be deterministic");
+        }
+    }
+}

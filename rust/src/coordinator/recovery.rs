@@ -13,7 +13,7 @@
 //!    holds the stage-`s` shard. This phase dominates recovery time.
 //! 3. **RestoreState** — promote the replicated KV blocks on the donor
 //!    to primaries; in-flight requests roll back only their replication
-//!    lag (≤ `replication_interval_iters` tokens).
+//!    lag (≤ one ring-replication interval of tokens).
 //! 4. **Resume** — traffic rerouting activates; the pipeline re-enters
 //!    the LB group in `Degraded` mode.
 //! 5. **Background** — a replacement node provisions for

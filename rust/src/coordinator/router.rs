@@ -1,11 +1,24 @@
 //! Front-end request router over the load-balancing group.
 //!
-//! The paper's testbed "distributes requests evenly across all instances
-//! in the load balancing group" (§4); the router is therefore round-robin
-//! over *serving-capable* instances. What changes between fault policies
-//! is the eligibility set: under standard fault behavior a degraded
-//! pipeline leaves the group entirely, under KevlarFlow it stays
-//! eligible the moment rerouting restores it.
+//! The routing strategy is a pluggable [`RoutePolicy`] axis of the
+//! serving [`crate::config::PolicySpec`]:
+//!
+//! * [`RoutePolicy::RoundRobin`] — the paper's testbed, which
+//!   "distributes requests evenly across all instances in the load
+//!   balancing group" (§4).
+//! * [`RoutePolicy::LeastLoaded`] — always the serving instance with the
+//!   fewest outstanding requests.
+//! * [`RoutePolicy::PowerOfTwo`] — two-choice sampling from a seeded
+//!   PRNG (deterministic per spec seed), taking the less loaded draw.
+//!
+//! What changes between fault policies is the *eligibility set*: under
+//! full re-init a degraded pipeline leaves the group entirely, under
+//! donor splicing it stays eligible the moment rerouting restores it.
+//! Displaced-backlog re-dispatch always goes least-loaded regardless of
+//! the arrival strategy, so a failure backlog cannot dogpile one node.
+
+use crate::config::RoutePolicy;
+use crate::workload::Pcg32;
 
 /// Router-visible instance state.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -13,27 +26,47 @@ pub struct InstanceView {
     pub id: usize,
     /// Accepting new requests right now.
     pub serving: bool,
-    /// Outstanding work (running + queued requests) — used by the
-    /// least-loaded tiebreak when draining a backlog after recovery.
+    /// Outstanding work (running + queued requests) — the signal for the
+    /// least-loaded and two-choice strategies, and for the least-loaded
+    /// re-dispatch of a failure backlog.
     pub load: usize,
 }
 
-/// Round-robin router with failure-aware eligibility.
-#[derive(Debug, Clone, Default)]
+/// Failure-aware front-door router dispatching one [`RoutePolicy`].
+#[derive(Debug, Clone)]
 pub struct Router {
+    policy: RoutePolicy,
+    /// Round-robin position; also the rotation origin of the
+    /// least-loaded tiebreak.
     cursor: usize,
+    /// Two-choice sampling stream (seeded; untouched by the other
+    /// strategies so presets draw nothing here).
+    rng: Pcg32,
     pub routed: u64,
 }
 
 impl Router {
-    pub fn new() -> Self {
-        Self::default()
+    pub fn new(policy: RoutePolicy, seed: u64) -> Self {
+        Self {
+            policy,
+            cursor: 0,
+            rng: Pcg32::with_stream(seed, 0x2070),
+            routed: 0,
+        }
     }
 
-    /// Pick the next instance for a request, round-robin over serving
-    /// instances. Returns `None` when nothing can serve (total outage) —
+    /// Pick the next instance for an arriving request per the configured
+    /// strategy. Returns `None` when nothing can serve (total outage) —
     /// the caller queues at the front door.
     pub fn pick(&mut self, instances: &[InstanceView]) -> Option<usize> {
+        match self.policy {
+            RoutePolicy::RoundRobin => self.pick_round_robin(instances),
+            RoutePolicy::LeastLoaded => self.pick_least_loaded(instances),
+            RoutePolicy::PowerOfTwo => self.pick_power_of_two(instances),
+        }
+    }
+
+    fn pick_round_robin(&mut self, instances: &[InstanceView]) -> Option<usize> {
         if instances.is_empty() {
             return None;
         }
@@ -49,15 +82,59 @@ impl Router {
         None
     }
 
-    /// Least-loaded pick — used when re-dispatching a retried/migrated
-    /// backlog so it does not dogpile one instance.
+    /// Least-loaded pick — the arrival strategy of
+    /// [`RoutePolicy::LeastLoaded`], and the re-dispatch strategy for a
+    /// retried/migrated backlog under EVERY strategy. Ties break by
+    /// rotating from the round-robin cursor (a plain `min_by_key` always
+    /// resolved ties to the lowest instance id, so a re-dispatched
+    /// backlog landed on one node); the cursor itself is not advanced,
+    /// so the round-robin arrival sequence is unaffected.
     pub fn pick_least_loaded(&mut self, instances: &[InstanceView]) -> Option<usize> {
-        let best = instances
-            .iter()
-            .filter(|i| i.serving)
-            .min_by_key(|i| i.load)?;
+        let n = instances.len();
+        let mut best: Option<(usize, usize)> = None; // (load, slice index)
+        for off in 0..n {
+            let idx = (self.cursor + off) % n;
+            let v = &instances[idx];
+            if !v.serving {
+                continue;
+            }
+            let better = match best {
+                Some((load, _)) => v.load < load,
+                None => true,
+            };
+            if better {
+                best = Some((v.load, idx));
+            }
+        }
+        let (_, idx) = best?;
         self.routed += 1;
-        Some(best.id)
+        Some(instances[idx].id)
+    }
+
+    /// Two-choice sampling: draw two distinct serving instances, keep
+    /// the less loaded (a tie keeps the first draw, so the result is a
+    /// pure function of the PRNG state and the views).
+    fn pick_power_of_two(&mut self, instances: &[InstanceView]) -> Option<usize> {
+        let n_serving = instances.iter().filter(|v| v.serving).count();
+        let nth = |k: usize| instances.iter().filter(|v| v.serving).nth(k).unwrap();
+        match n_serving {
+            0 => None,
+            1 => {
+                self.routed += 1;
+                Some(nth(0).id)
+            }
+            n => {
+                let a = self.rng.below(n);
+                let mut b = self.rng.below(n - 1);
+                if b >= a {
+                    b += 1;
+                }
+                let (va, vb) = (nth(a), nth(b));
+                let pick = if vb.load < va.load { vb } else { va };
+                self.routed += 1;
+                Some(pick.id)
+            }
+        }
     }
 }
 
@@ -73,9 +150,13 @@ mod tests {
             .collect()
     }
 
+    fn rr() -> Router {
+        Router::new(RoutePolicy::RoundRobin, 42)
+    }
+
     #[test]
     fn round_robin_even_distribution() {
-        let mut r = Router::new();
+        let mut r = rr();
         let v = views(&[true, true, true, true]);
         let mut counts = [0usize; 4];
         for _ in 0..400 {
@@ -86,7 +167,7 @@ mod tests {
 
     #[test]
     fn skips_failed_instances() {
-        let mut r = Router::new();
+        let mut r = rr();
         let v = views(&[true, false, true, false]);
         let mut counts = [0usize; 4];
         for _ in 0..100 {
@@ -99,19 +180,23 @@ mod tests {
 
     #[test]
     fn none_when_total_outage() {
-        let mut r = Router::new();
-        assert_eq!(r.pick(&views(&[false, false])), None);
-        assert_eq!(r.pick(&[]), None);
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::PowerOfTwo]
+        {
+            let mut r = Router::new(policy, 1);
+            assert_eq!(r.pick(&views(&[false, false])), None);
+            assert_eq!(r.pick(&[]), None);
+            assert_eq!(r.pick_least_loaded(&views(&[false])), None);
+        }
     }
 
     #[test]
     fn eligibility_restored_mid_stream() {
-        let mut r = Router::new();
+        let mut r = rr();
         let mut v = views(&[true, false]);
         for _ in 0..3 {
             assert_eq!(r.pick(&v), Some(0));
         }
-        v[1].serving = true; // KevlarFlow rerouting brings it back
+        v[1].serving = true; // rerouting brings it back
         let picks: Vec<_> = (0..4).map(|_| r.pick(&v).unwrap()).collect();
         assert!(picks.contains(&1));
         assert_eq!(picks.iter().filter(|&&p| p == 1).count(), 2);
@@ -119,12 +204,74 @@ mod tests {
 
     #[test]
     fn least_loaded_pick() {
-        let mut r = Router::new();
+        let mut r = rr();
         let v = vec![
             InstanceView { id: 0, serving: true, load: 10 },
             InstanceView { id: 1, serving: false, load: 0 },
             InstanceView { id: 2, serving: true, load: 3 },
         ];
         assert_eq!(r.pick_least_loaded(&v), Some(2));
+    }
+
+    #[test]
+    fn least_loaded_ties_rotate_from_cursor() {
+        // regression: with equal loads, min_by_key always returned
+        // instance 0 — a re-dispatched backlog dogpiled the lowest id.
+        // The tiebreak must instead start at the round-robin cursor.
+        let mut r = rr();
+        let v = views(&[true, true, true, true]);
+        r.pick(&v); // cursor -> 1
+        r.pick(&v); // cursor -> 2
+        assert_eq!(r.pick_least_loaded(&v), Some(2), "tie must land at the cursor");
+        // and the tiebreak must not advance the round-robin sequence
+        assert_eq!(r.pick(&v), Some(2));
+
+        // as re-dispatches load an instance up, subsequent ties spread
+        let mut v = views(&[true, true, true]);
+        let mut r = rr();
+        let first = r.pick_least_loaded(&v).unwrap();
+        assert_eq!(first, 0, "cursor starts at 0");
+        v[first].load += 1;
+        let second = r.pick_least_loaded(&v).unwrap();
+        assert_eq!(second, 1, "loaded instance no longer minimal");
+        v[second].load += 1;
+        assert_eq!(r.pick_least_loaded(&v), Some(2));
+    }
+
+    #[test]
+    fn least_loaded_policy_routes_arrivals_by_load() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 7);
+        let v = vec![
+            InstanceView { id: 0, serving: true, load: 5 },
+            InstanceView { id: 1, serving: true, load: 1 },
+            InstanceView { id: 2, serving: true, load: 9 },
+        ];
+        assert_eq!(r.pick(&v), Some(1));
+        assert_eq!(r.routed, 1);
+    }
+
+    #[test]
+    fn power_of_two_is_deterministic_and_load_sensitive() {
+        let run = |seed| {
+            let mut r = Router::new(RoutePolicy::PowerOfTwo, seed);
+            let v = vec![
+                InstanceView { id: 0, serving: true, load: 0 },
+                InstanceView { id: 1, serving: true, load: 100 },
+                InstanceView { id: 2, serving: true, load: 0 },
+                InstanceView { id: 3, serving: false, load: 0 },
+            ];
+            (0..200).map(|_| r.pick(&v).unwrap()).collect::<Vec<_>>()
+        };
+        let picks = run(9);
+        assert_eq!(picks, run(9), "seeded two-choice must be deterministic");
+        assert!(picks.iter().all(|&p| p != 3), "never routes to a dead instance");
+        // the overloaded instance only wins when drawn against itself —
+        // impossible with distinct draws, so it is never picked
+        assert!(picks.iter().all(|&p| p != 1), "two-choice must avoid the overloaded node");
+        assert!(picks.contains(&0) && picks.contains(&2));
+        // a single serving instance needs no draws
+        let mut r = Router::new(RoutePolicy::PowerOfTwo, 9);
+        let v = views(&[false, true]);
+        assert_eq!(r.pick(&v), Some(1));
     }
 }

@@ -11,10 +11,16 @@
 //! moment the re-formed communicator actually reports in, which may be
 //! well ahead of the modeled budget. The facade ignores the stale
 //! wake-up when it later fires, so drivers never need to cancel timers.
+//!
+//! The driver is policy-agnostic: the [`crate::config::PolicySpec`] on
+//! the [`ServingConfig`] decides which recovery choreography the facade
+//! emits (donor splice, spare swap, checkpoint restore, full re-init),
+//! and the engine just executes the resulting actions — the same way the
+//! simulator does.
 
 use std::time::Instant;
 
-use crate::config::{ClusterConfig, ServingConfig, SimTimingConfig};
+use crate::config::{ClusterConfig, PolicySpec, ServingConfig, SimTimingConfig};
 use crate::coordinator::control::{Action, ControlPlane, Event, Wake};
 
 /// Wall-clock adapter around [`ControlPlane`] for engine-side drivers.
@@ -82,5 +88,10 @@ impl ControlDriver {
     /// recovery records).
     pub fn control_plane(&self) -> &ControlPlane {
         &self.cp
+    }
+
+    /// The policy spec this driver was configured with.
+    pub fn policy(&self) -> PolicySpec {
+        self.cp.serving.policy
     }
 }

@@ -36,7 +36,7 @@ pub struct ReplicaKv {
     /// Node that owns the primary copy.
     pub owner: NodeId,
     /// Tokens whose blocks have fully arrived (monotone; lags the primary
-    /// by up to `replication_interval_iters` decode steps).
+    /// by up to the ring-replication interval in decode steps).
     pub synced_tokens: u32,
     pub blocks: usize,
     /// Last touch (sim time) — drop victims are chosen oldest-first.

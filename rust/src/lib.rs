@@ -65,5 +65,8 @@ pub mod workload;
 
 pub mod bench;
 
-pub use config::{ClusterConfig, FaultPolicy, ServingConfig, SimTimingConfig};
+pub use config::{
+    ClusterConfig, PolicySpec, RecoveryPolicy, ReplicationPolicy, RoutePolicy, ServingConfig,
+    SimTimingConfig,
+};
 pub use coordinator::ControlPlane;

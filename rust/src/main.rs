@@ -15,7 +15,7 @@
 use anyhow::{bail, Context, Result};
 
 use kevlarflow::bench;
-use kevlarflow::config::FaultPolicy;
+use kevlarflow::config::PolicySpec;
 use kevlarflow::scenario::{self, Scenario};
 
 const USAGE: &str = "\
@@ -25,22 +25,27 @@ USAGE:
   kevlarflow bench <EXPERIMENT> [--scene N]   regenerate a paper experiment
       EXPERIMENT: fig3 fig4 fig6 fig7 fig8 fig9 table1 tpot all
   kevlarflow scenarios list                   show the fault-scenario registry
-  kevlarflow scenarios run <NAME> [--rps R] [--policy standard|kevlarflow|both]
+  kevlarflow scenarios run <NAME> [--rps R] [--policy SPEC|both]
                           [--window S] [--file SPEC.json]
                                               run one scenario, print summaries
   kevlarflow scenarios sweep [--out FILE] [--only a,b] [--full] [--window S]
-                             [--jobs N]
+                             [--jobs N] [--policies SPEC,SPEC,...]
                                               run the matrix on N worker threads
                                               (0/default = all cores; output is
                                               byte-identical for any N), write
                                               JSON results
                                               (default out: BENCH_scenarios.json)
-  kevlarflow trace [--scenario NAME | --scene N] [--rps R]
+  kevlarflow trace [--scenario NAME | --scene N] [--rps R] [--policy SPEC]
                                               run a failure scenario and print
                                               the coordinator ControlPlane's
                                               event → action exchanges
   kevlarflow generate [PROMPT] [--n TOKENS]   greedy-generate with the AOT model
   kevlarflow inspect-artifacts                print the artifact manifest
+
+Policy SPECs are preset names (standard, kevlarflow) or
+route+recovery+replication triples: route rr|ll|p2c, recovery
+full-reinit|donor-splice|spare-pool[:N]|checkpoint-restore[:S],
+replication off|ring[:N] — e.g. rr+spare-pool:2+ring:8.
 
 `generate` and `inspect-artifacts` need a binary built with
 `--features pjrt` plus the artifacts produced by python/compile/aot.py.
@@ -77,7 +82,8 @@ fn main() -> Result<()> {
                     .unwrap_or(1);
                 scenario::paper_scene(scene)?
             };
-            trace(&s, rps)
+            let policy = parse_policy(flag_value(&args, "--policy").unwrap_or("kevlarflow"))?;
+            trace(&s, rps, policy)
         }
         Some("generate") => {
             let prompt = args
@@ -152,20 +158,34 @@ fn run_bench(which: &str, scene: Option<u8>) -> Result<()> {
     Ok(())
 }
 
+/// Parse a CLI policy spec, with a CLI-grade error message.
+fn parse_policy(spec: &str) -> Result<PolicySpec> {
+    PolicySpec::parse(spec).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown policy '{spec}' (preset standard|kevlarflow, or a \
+             route+recovery+replication triple like rr+spare-pool:2+ring:8)"
+        )
+    })
+}
+
 /// Run one failure scenario and print the control plane's decision
 /// stream — the coordinator-level view of a recovery, straight from the
 /// `SimResult::control_log` the replay tests consume.
-fn trace(s: &Scenario, rps: f64) -> Result<()> {
+fn trace(s: &Scenario, rps: f64, policy: PolicySpec) -> Result<()> {
     use kevlarflow::coordinator::control::{Action, Event};
 
     let mut s = s.clone();
     s.arrival_window_s = s.arrival_window_s.min(300.0);
-    let res = s.run_logged(rps, FaultPolicy::KevlarFlow);
+    let res = s.run_logged(rps, policy);
 
     let mut dispatches = 0usize;
     let mut flushes = 0usize;
     let mut syncs = 0usize;
-    println!("## control-plane trace — scenario {}, RPS {rps:.1} (KevlarFlow)\n", s.name);
+    println!(
+        "## control-plane trace — scenario {}, RPS {rps:.1} ({})\n",
+        s.name,
+        policy.label()
+    );
     for (t, ev, actions) in &res.control_log {
         match ev {
             Event::RequestArrived { .. } | Event::RequestDisplaced { .. } => {
@@ -248,12 +268,11 @@ fn scenarios_run(args: &[String]) -> Result<()> {
         .map(|v| v.parse::<f64>())
         .transpose()?
         .unwrap_or(s.default_rps);
-    let policies: Vec<FaultPolicy> = match flag_value(args, "--policy") {
-        None | Some("both") => vec![FaultPolicy::Standard, FaultPolicy::KevlarFlow],
-        Some(p) => {
-            vec![FaultPolicy::parse(p)
-                .ok_or_else(|| anyhow::anyhow!("unknown policy '{p}'"))?]
-        }
+    // no flag (or "both") runs the spec's own policy axis — a --file
+    // spec's `policies` list, the two presets otherwise
+    let policies: Vec<PolicySpec> = match flag_value(args, "--policy") {
+        None | Some("both") => s.sweep_policies(),
+        Some(p) => vec![parse_policy(p)?],
     };
     println!("## scenario {} — {} (RPS {rps:.1})", s.name, s.summary);
     println!("   stresses: {}\n", s.stresses);
@@ -274,8 +293,15 @@ fn scenarios_sweep(args: &[String]) -> Result<()> {
         .map(|v| v.parse::<usize>())
         .transpose()?
         .unwrap_or(0);
+    let policies: Vec<PolicySpec> = match flag_value(args, "--policies") {
+        None => Vec::new(),
+        Some(list) => PolicySpec::parse_list(list)
+            .map_err(|bad| anyhow::anyhow!(
+                "unknown policy '{bad}' in --policies (see usage for the spec grammar)"
+            ))?,
+    };
     let out = flag_value(args, "--out").unwrap_or("BENCH_scenarios.json");
-    let rows = bench::sweep::run_sweep(&names, full, window, false, jobs)?;
+    let rows = bench::sweep::run_sweep(&names, full, window, false, jobs, &policies)?;
     bench::sweep::write_sweep(std::path::Path::new(out), &rows)
         .with_context(|| format!("writing {out}"))?;
     println!("\nwrote {} rows to {out}", rows.len());

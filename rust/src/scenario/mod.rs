@@ -17,12 +17,12 @@
 //! the log for sweep throughput). `EXPERIMENTS.md` documents the catalog.
 //!
 //! ```
-//! use kevlarflow::config::FaultPolicy;
+//! use kevlarflow::config::PolicySpec;
 //! use kevlarflow::scenario;
 //!
 //! // the three paper scenes are ordinary registry entries
 //! let s = scenario::find("paper-1").unwrap();
-//! let cfg = s.to_experiment(2.0, FaultPolicy::KevlarFlow);
+//! let cfg = s.to_experiment(2.0, PolicySpec::kevlarflow());
 //! assert_eq!(cfg.cluster.n_nodes(), 8);
 //! assert_eq!(cfg.faults.len(), 1);
 //!
@@ -38,7 +38,7 @@
 //! ```
 
 use crate::config::{
-    ClusterConfig, ExperimentConfig, FaultPolicy, NodeId, SimTimingConfig,
+    ClusterConfig, ExperimentConfig, NodeId, PolicySpec, SimTimingConfig,
 };
 use crate::config::Json;
 use crate::sim::{ClusterSim, LogMode, SimResult};
@@ -104,6 +104,11 @@ pub struct Scenario {
     /// Scripted fault injections, in any order.
     pub faults: Vec<FaultOp>,
     pub seed: u64,
+    /// Policy specs a sweep runs for this scenario when no `--policies`
+    /// override is given; empty means the two presets
+    /// (`[standard, kevlarflow]`). Serialized only when non-empty, so
+    /// preset-only specs are byte-for-byte unchanged.
+    pub policies: Vec<PolicySpec>,
 }
 
 impl Scenario {
@@ -114,7 +119,7 @@ impl Scenario {
 
     /// Lower the spec into a runnable [`ExperimentConfig`] at `rps` —
     /// lossless: the workload (incl. arrival process) rides along.
-    pub fn to_experiment(&self, rps: f64, policy: FaultPolicy) -> ExperimentConfig {
+    pub fn to_experiment(&self, rps: f64, policy: PolicySpec) -> ExperimentConfig {
         let mut cfg = ExperimentConfig::new(self.cluster(), rps).with_policy(policy);
         cfg.workload = self.workload;
         cfg.arrival_window_s = self.arrival_window_s;
@@ -126,14 +131,24 @@ impl Scenario {
     /// Run the scenario to completion. Control-log recording is off —
     /// the sweep-throughput path; use [`Scenario::run_logged`] when the
     /// exchange stream is needed.
-    pub fn run(&self, rps: f64, policy: FaultPolicy) -> SimResult {
+    pub fn run(&self, rps: f64, policy: PolicySpec) -> SimResult {
         ClusterSim::new(self.to_experiment(rps, policy)).run()
     }
 
     /// Run with full control-log recording (`SimResult::control_log`
     /// populated) — the trace CLI and the replay tests.
-    pub fn run_logged(&self, rps: f64, policy: FaultPolicy) -> SimResult {
+    pub fn run_logged(&self, rps: f64, policy: PolicySpec) -> SimResult {
         ClusterSim::new(self.to_experiment(rps, policy)).with_log(LogMode::Full).run()
+    }
+
+    /// The policy axis a sweep runs for this scenario: its own
+    /// `policies` list, defaulting to the two presets.
+    pub fn sweep_policies(&self) -> Vec<PolicySpec> {
+        if self.policies.is_empty() {
+            PolicySpec::presets().to_vec()
+        } else {
+            self.policies.clone()
+        }
     }
 
     /// Earliest fault time, if the script is non-empty (list display).
@@ -224,6 +239,14 @@ impl Scenario {
             "faults".into(),
             Json::Arr(self.faults.iter().map(fault_json).collect()),
         );
+        // omitted when empty: preset-only specs (the whole registry)
+        // serialize byte-for-byte as before the policy axis existed
+        if !self.policies.is_empty() {
+            m.insert(
+                "policies".into(),
+                Json::Arr(self.policies.iter().map(PolicySpec::to_json).collect()),
+            );
+        }
         Json::Obj(m)
     }
 
@@ -256,6 +279,21 @@ impl Scenario {
                 .iter()
                 .map(fault_from_json)
                 .collect::<Result<Vec<FaultOp>, _>>()?,
+            policies: match v.get("policies") {
+                None => Vec::new(),
+                Some(p) => p
+                    .as_arr()
+                    .ok_or_else(|| {
+                        ScenarioError::Parse("'policies' must be an array of spec labels".into())
+                    })?
+                    .iter()
+                    .map(|x| {
+                        PolicySpec::from_json(x).ok_or_else(|| {
+                            ScenarioError::Parse(format!("bad policy spec {}", x.to_string()))
+                        })
+                    })
+                    .collect::<Result<Vec<PolicySpec>, _>>()?,
+            },
         };
         s.validate()?;
         Ok(s)
@@ -424,6 +462,7 @@ fn base(
         rps_grid: vec![1.0, 2.0, 4.0, 6.0],
         faults,
         seed: 42,
+        policies: Vec::new(),
     }
 }
 
@@ -615,7 +654,7 @@ mod tests {
 
     #[test]
     fn paper_scenes_match_original_shapes() {
-        let s1 = paper_scene(1).unwrap().to_experiment(2.0, FaultPolicy::Standard);
+        let s1 = paper_scene(1).unwrap().to_experiment(2.0, PolicySpec::standard());
         assert_eq!(s1.cluster.n_nodes(), 8);
         assert_eq!(s1.arrival_window_s, 1000.0);
         assert_eq!(s1.seed, 42);
@@ -641,9 +680,35 @@ mod tests {
             assert_eq!(back.rps_grid, s.rps_grid);
             assert_eq!(back.workload.arrival, s.workload.arrival);
             assert_eq!(back.seed, s.seed);
+            assert!(back.policies.is_empty(), "registry entries carry no policy override");
+            assert!(
+                !text.contains("policies"),
+                "preset-only specs must serialize byte-for-byte as before the policy axis"
+            );
             // full fixed point: serialize again, byte-identical
             assert_eq!(back.to_json().to_string(), text);
         }
+    }
+
+    #[test]
+    fn policy_override_roundtrips_through_json() {
+        let mut s = find("paper-1").unwrap();
+        s.policies = vec![
+            PolicySpec::kevlarflow(),
+            PolicySpec::parse("rr+spare-pool:2+ring:8").unwrap(),
+            PolicySpec::parse("p2c+checkpoint-restore:45+off").unwrap(),
+        ];
+        let text = s.to_json().to_string();
+        assert!(text.contains("rr+spare-pool:2+ring:8"));
+        let back = Scenario::from_json_str(&text).unwrap();
+        assert_eq!(back.policies, s.policies);
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(back.sweep_policies(), s.policies);
+        // no override ⇒ the two presets, standard first
+        assert_eq!(find("paper-1").unwrap().sweep_policies(), PolicySpec::presets().to_vec());
+        // a malformed spec label is a typed parse error
+        let bad = text.replace("rr+spare-pool:2+ring:8", "rr+melt+ring");
+        assert!(matches!(Scenario::from_json_str(&bad), Err(ScenarioError::Parse(_))));
     }
 
     #[test]

@@ -247,11 +247,20 @@ impl ClusterSim {
                 let ni = self.node_index(NodeId::new(instance, s));
                 let _ = self.nodes[ni].kv.free_primary(id);
             }
-            if reset == ResetMode::Restart {
-                let r = &mut self.reqs[req];
-                r.retries += 1;
-                r.tokens_out = 0;
-                r.resume_ctx = 0;
+            match reset {
+                ResetMode::Restart => {
+                    let r = &mut self.reqs[req];
+                    r.retries += 1;
+                    r.tokens_out = 0;
+                    r.resume_ctx = 0;
+                }
+                // checkpoint displacement: emitted tokens stand, but the
+                // new placement must recompute the whole context
+                ResetMode::Recompute => {
+                    let r = &mut self.reqs[req];
+                    r.resume_ctx = r.context_tokens();
+                }
+                ResetMode::KeepProgress => {}
             }
         }
         for req in displaced {

@@ -31,13 +31,25 @@
 //!
 //! ## Failure semantics
 //!
-//! [`FaultPolicy::Standard`](crate::config::FaultPolicy::Standard) — a
-//! node failure takes its whole pipeline out; in-flight requests retry
-//! from scratch elsewhere; the pipeline returns after `baseline_mttr_s`
-//! (600 s). [`FaultPolicy::KevlarFlow`](crate::config::FaultPolicy::KevlarFlow) — detect →
-//! donor → decoupled re-form (~30 s, during which the pipeline is paused)
-//! → degraded serving through the donor + promotion of replicated KV,
-//! with a background replacement after `baseline_mttr_s`.
+//! What a failure costs is decided by the
+//! [`RecoveryPolicy`](crate::config::RecoveryPolicy) axis of the serving
+//! [`PolicySpec`](crate::config::PolicySpec) (the sim only executes the
+//! facade's decisions):
+//!
+//! * `FullReinit` (the `standard` preset) — a node failure takes its
+//!   whole pipeline out; in-flight requests retry from scratch
+//!   elsewhere; the pipeline returns after `baseline_mttr_s` (600 s).
+//! * `DonorSplice` (the `kevlarflow` preset) — detect → donor →
+//!   decoupled re-form (~30 s, during which the pipeline is paused) →
+//!   degraded serving through the donor + promotion of replicated KV,
+//!   with a background replacement after `baseline_mttr_s`.
+//! * `SparePool` — a pre-provisioned hot standby swaps into the failed
+//!   slot after locate + re-form (~30 s outage, full capacity after);
+//!   in-flight requests restart, and the consumed spare re-provisions in
+//!   the background.
+//! * `CheckpointRestore` — the instance replays from its last shadow
+//!   checkpoint and returns after an interval-bounded recompute;
+//!   displaced requests keep their emitted tokens but recompute context.
 //!
 //! Fault injection is scripted through
 //! [`FaultOp`](crate::config::FaultOp) (see [`crate::scenario`] for the

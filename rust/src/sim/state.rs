@@ -296,7 +296,7 @@ impl ClusterSim {
         // separate stream (paper §3.2): it does not occupy the stage
         // server, but the hand-off of this stage's result waits for the
         // in-flight block copy — a small additive latency per stage.
-        let repl_extra_s = if self.cfg.serving.replication
+        let repl_extra_s = if self.cfg.serving.policy.replication.is_on()
             && self
                 .cp
                 .replication_target(self.effective_node(p.instance, stage))

@@ -4,7 +4,7 @@
 //! (DESIGN.md §1): hundreds of random cases per property, fully
 //! reproducible by seed.
 
-use kevlarflow::config::{ClusterConfig, NodeId, ServingConfig, SimTimingConfig};
+use kevlarflow::config::{ClusterConfig, NodeId, RoutePolicy, ServingConfig, SimTimingConfig};
 use kevlarflow::coordinator::control::{Action, ControlPlane, Event, Wake};
 use kevlarflow::coordinator::reroute::{select_donor, InstanceHealth, PipelineState};
 use kevlarflow::coordinator::router::{InstanceView, Router};
@@ -61,7 +61,7 @@ fn prop_router_conservation_and_eligibility() {
             .enumerate()
             .map(|(id, &s)| InstanceView { id, serving: s, load: rng.below(100) })
             .collect();
-        let mut router = Router::new();
+        let mut router = Router::new(RoutePolicy::RoundRobin, seed);
         let mut counts = vec![0usize; n];
         let k = 40 + rng.below(100);
         for _ in 0..k {
@@ -436,7 +436,7 @@ fn kv_eviction_and_error_paths() {
 fn prop_sim_no_lost_requests_across_policies() {
     // for random small workloads and any failure pattern, every arrived
     // request is eventually served exactly once (ids unique in records).
-    use kevlarflow::config::{ExperimentConfig, FaultPolicy};
+    use kevlarflow::config::{ExperimentConfig, PolicySpec};
     use kevlarflow::sim::ClusterSim;
     for seed in 0..12u64 {
         let mut rng = Pcg32::new(seed);
@@ -451,9 +451,9 @@ fn prop_sim_no_lost_requests_across_policies() {
         cfg.arrival_window_s = 200.0;
         cfg.max_sim_time_s = 4000.0;
         let policy = if rng.below(2) == 0 {
-            FaultPolicy::Standard
+            PolicySpec::standard()
         } else {
-            FaultPolicy::KevlarFlow
+            PolicySpec::kevlarflow()
         };
         cfg = cfg.with_policy(policy);
         for _ in 0..rng.below(3) {

@@ -3,10 +3,10 @@
 //! (router + batcher + membership + reroute + replication + recovery).
 
 use kevlarflow::bench;
-use kevlarflow::config::{ClusterConfig, ExperimentConfig, FaultPolicy, NodeId};
+use kevlarflow::config::{ClusterConfig, ExperimentConfig, NodeId, PolicySpec, ReplicationPolicy};
 use kevlarflow::sim::ClusterSim;
 
-fn cfg(scene: u8, rps: f64, policy: FaultPolicy) -> ExperimentConfig {
+fn cfg(scene: u8, rps: f64, policy: PolicySpec) -> ExperimentConfig {
     let mut c = bench::scenario(scene, rps, policy).unwrap();
     c.arrival_window_s = 600.0;
     c
@@ -16,8 +16,8 @@ fn cfg(scene: u8, rps: f64, policy: FaultPolicy) -> ExperimentConfig {
 fn headline_ttft_improvement_scene1() {
     // paper Table 1, scene 1, RPS 2: avg TTFT improvement is in the
     // hundreds (378.9x in the paper); latency roughly halves (2.18x).
-    let base = ClusterSim::new(cfg(1, 2.0, FaultPolicy::Standard)).run();
-    let ours = ClusterSim::new(cfg(1, 2.0, FaultPolicy::KevlarFlow)).run();
+    let base = ClusterSim::new(cfg(1, 2.0, PolicySpec::standard())).run();
+    let ours = ClusterSim::new(cfg(1, 2.0, PolicySpec::kevlarflow())).run();
     let (b, o) = (base.recorder.summary(), ours.recorder.summary());
     let ttft_imp = b.ttft_avg / o.ttft_avg;
     let lat_imp = b.latency_avg / o.latency_avg;
@@ -28,7 +28,7 @@ fn headline_ttft_improvement_scene1() {
 
 #[test]
 fn scene3_two_failures_both_recover() {
-    let res = ClusterSim::new(cfg(3, 4.0, FaultPolicy::KevlarFlow)).run();
+    let res = ClusterSim::new(cfg(3, 4.0, PolicySpec::kevlarflow())).run();
     assert_eq!(res.recovery.completed.len(), 2, "both pipelines must recover");
     let donors: Vec<_> = res.recovery.completed.iter().map(|r| r.donor).collect();
     assert_ne!(donors[0], donors[1], "distinct donors");
@@ -42,8 +42,8 @@ fn scene3_two_failures_both_recover() {
 #[test]
 fn recovery_time_flat_in_rps() {
     // Fig 8: recovery duration must not grow with load
-    let lo = ClusterSim::new(cfg(2, 1.0, FaultPolicy::KevlarFlow)).run();
-    let hi = ClusterSim::new(cfg(2, 10.0, FaultPolicy::KevlarFlow)).run();
+    let lo = ClusterSim::new(cfg(2, 1.0, PolicySpec::kevlarflow())).run();
+    let hi = ClusterSim::new(cfg(2, 10.0, PolicySpec::kevlarflow())).run();
     let (a, b) = (
         lo.recovery.mean_recovery_s().unwrap(),
         hi.recovery.mean_recovery_s().unwrap(),
@@ -55,8 +55,8 @@ fn recovery_time_flat_in_rps() {
 fn kevlar_serves_through_mttr_window_standard_does_not() {
     // during the 600s baseline MTTR the failed pipeline serves nothing
     // under Standard; under KevlarFlow it resumes within ~1 minute.
-    let base = ClusterSim::new(cfg(1, 2.0, FaultPolicy::Standard)).run();
-    let kev = ClusterSim::new(cfg(1, 2.0, FaultPolicy::KevlarFlow)).run();
+    let base = ClusterSim::new(cfg(1, 2.0, PolicySpec::standard())).run();
+    let kev = ClusterSim::new(cfg(1, 2.0, PolicySpec::kevlarflow())).run();
     let fail_t = bench::FAILURE_T;
     let served_in = |res: &kevlarflow::sim::SimResult, from: f64, to: f64| {
         res.recorder
@@ -73,10 +73,9 @@ fn kevlar_serves_through_mttr_window_standard_does_not() {
 
 #[test]
 fn replication_disabled_forces_recomputes() {
-    let mut with = cfg(1, 2.0, FaultPolicy::KevlarFlow);
-    with.serving.replication = true;
-    let mut without = cfg(1, 2.0, FaultPolicy::KevlarFlow);
-    without.serving.replication = false;
+    let with = cfg(1, 2.0, PolicySpec::kevlarflow());
+    let mut without = cfg(1, 2.0, PolicySpec::kevlarflow());
+    without.serving.policy.replication = ReplicationPolicy::Off;
     let a = ClusterSim::new(with).run();
     let b = ClusterSim::new(without).run();
     // without replication every in-flight request on the degraded
@@ -88,7 +87,7 @@ fn replication_disabled_forces_recomputes() {
 
 #[test]
 fn donor_instance_keeps_serving_while_donating() {
-    let res = ClusterSim::new(cfg(2, 3.0, FaultPolicy::KevlarFlow)).run();
+    let res = ClusterSim::new(cfg(2, 3.0, PolicySpec::kevlarflow())).run();
     let rec = &res.recovery.completed[0];
     let donor_inst = rec.donor.instance;
     // the donor's own instance completed requests in the degraded window
@@ -109,7 +108,7 @@ fn donor_instance_keeps_serving_while_donating() {
 fn baseline_knee_positions_match_paper() {
     // Fig 3/4: the knee is between RPS 3 and 4 on 8 nodes, 6 and 7 on 16.
     let t = |nodes: usize, rps: f64| {
-        let mut c = bench::healthy(nodes, rps, FaultPolicy::Standard).unwrap();
+        let mut c = bench::healthy(nodes, rps, PolicySpec::standard()).unwrap();
         c.arrival_window_s = 500.0;
         ClusterSim::new(c).run().recorder.summary().ttft_avg
     };
@@ -123,7 +122,7 @@ fn baseline_knee_positions_match_paper() {
 fn tpot_flat_across_load_and_policies() {
     // §4.1: TPOT ~163ms avg / ~203ms p99, invariant to RPS
     for rps in [1.0, 3.0] {
-        let mut c = bench::healthy(8, rps, FaultPolicy::KevlarFlow).unwrap();
+        let mut c = bench::healthy(8, rps, PolicySpec::kevlarflow()).unwrap();
         c.arrival_window_s = 400.0;
         let s = ClusterSim::new(c).run().recorder.summary();
         assert!((0.15..0.20).contains(&s.tpot_avg), "tpot {} at rps {rps}", s.tpot_avg);
@@ -137,7 +136,7 @@ fn total_outage_recovers_when_instances_rejoin() {
     // KevlarFlow degrades to standard behavior and still serves
     // everything after rejoin.
     let mut c = ExperimentConfig::new(ClusterConfig::paper_8node(), 0.5)
-        .with_policy(FaultPolicy::KevlarFlow)
+        .with_policy(PolicySpec::kevlarflow())
         .with_failure(50.0, NodeId::new(0, 1));
     c = c.with_failure(50.0, NodeId::new(1, 1));
     c.arrival_window_s = 300.0;

@@ -10,11 +10,11 @@
 //!    byte-identical `BENCH_scenarios.json` documents.
 
 use kevlarflow::bench::sweep;
-use kevlarflow::config::FaultPolicy;
+use kevlarflow::config::PolicySpec;
 use kevlarflow::scenario::registry;
 use kevlarflow::sim::{ClusterSim, LogMode, SimResult};
 
-fn run(s: &kevlarflow::scenario::Scenario, policy: FaultPolicy, mode: LogMode) -> SimResult {
+fn run(s: &kevlarflow::scenario::Scenario, policy: PolicySpec, mode: LogMode) -> SimResult {
     let mut s = s.clone();
     s.arrival_window_s = s.arrival_window_s.min(150.0);
     ClusterSim::new(s.to_experiment(s.default_rps, policy)).with_log(mode).run()
@@ -23,7 +23,7 @@ fn run(s: &kevlarflow::scenario::Scenario, policy: FaultPolicy, mode: LogMode) -
 #[test]
 fn log_mode_off_and_full_agree_on_every_scenario() {
     for s in registry() {
-        for policy in [FaultPolicy::Standard, FaultPolicy::KevlarFlow] {
+        for policy in PolicySpec::presets() {
             let off = run(&s, policy, LogMode::Off);
             let full = run(&s, policy, LogMode::Full);
             let tag = format!("{} ({})", s.name, policy.label());
@@ -71,8 +71,8 @@ fn sweep_bytes_identical_across_thread_counts() {
     // two scenarios × two policies = 4 matrix points; 8 requested workers
     // also exercises the jobs > points clamp
     let names = vec!["paper-1".to_string(), "flap".to_string()];
-    let serial = sweep::run_sweep(&names, false, Some(120.0), true, 1).unwrap();
-    let threaded = sweep::run_sweep(&names, false, Some(120.0), true, 8).unwrap();
+    let serial = sweep::run_sweep(&names, false, Some(120.0), true, 1, &[]).unwrap();
+    let threaded = sweep::run_sweep(&names, false, Some(120.0), true, 8, &[]).unwrap();
     assert_eq!(
         sweep::sweep_json(&serial).to_string(),
         sweep::sweep_json(&threaded).to_string(),

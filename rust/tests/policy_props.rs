@@ -1,0 +1,199 @@
+//! Properties of the composable policy API: every
+//! `RoutePolicy × RecoveryPolicy × ReplicationPolicy` combination runs
+//! the registry scenarios deterministically, replays into a fresh
+//! facade, and strands nothing — and the `standard`/`kevlarflow`
+//! presets reproduce the pre-redesign behavior exactly (same action
+//! streams as an explicitly-spelled triple, same exchange shapes the
+//! old two-variant enum produced, pinned in `coordinator/control.rs`).
+
+use kevlarflow::config::{
+    PolicySpec, RecoveryPolicy, ReplicationPolicy, RoutePolicy,
+};
+use kevlarflow::coordinator::control::{Action, ControlPlane};
+use kevlarflow::coordinator::PipelineState;
+use kevlarflow::scenario::{find, registry, Scenario};
+use kevlarflow::sim::SimResult;
+
+/// The full policy cube: 3 routes × 4 recoveries × 2 replications.
+fn all_combos() -> Vec<PolicySpec> {
+    let routes = [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::PowerOfTwo];
+    let recoveries = [
+        RecoveryPolicy::FullReinit,
+        RecoveryPolicy::DonorSplice,
+        RecoveryPolicy::SparePool { spares: 1 },
+        RecoveryPolicy::CheckpointRestore { interval_s: 45.0 },
+    ];
+    let replications = [ReplicationPolicy::Off, ReplicationPolicy::Ring { interval_iters: 8 }];
+    let mut combos = Vec::new();
+    for route in routes {
+        for recovery in recoveries {
+            for replication in replications {
+                combos.push(PolicySpec { route, recovery, replication });
+            }
+        }
+    }
+    combos
+}
+
+fn run_quick(s: &Scenario, policy: PolicySpec, window_s: f64) -> SimResult {
+    let mut s = s.clone();
+    s.arrival_window_s = s.arrival_window_s.min(window_s);
+    s.run_logged(s.default_rps, policy)
+}
+
+/// Replay a run's logged event trace into a fresh facade, asserting the
+/// identical action stream; returns the facade in its final state.
+fn replay(s: &Scenario, policy: PolicySpec, window_s: f64, res: &SimResult) -> ControlPlane {
+    let mut quick = s.clone();
+    quick.arrival_window_s = quick.arrival_window_s.min(window_s);
+    let cfg = quick.to_experiment(quick.default_rps, policy);
+    let mut cp = ControlPlane::new(&cfg.cluster, &cfg.serving, &cfg.timing, cfg.seed);
+    for (i, (t, ev, actions)) in res.control_log.iter().enumerate() {
+        let replayed = cp.handle(*t, ev.clone());
+        assert_eq!(
+            &replayed,
+            actions,
+            "{} ({}): exchange {i} diverged at t={t}: {ev:?}",
+            s.name,
+            policy.label()
+        );
+    }
+    cp
+}
+
+#[test]
+fn every_policy_combo_is_deterministic_replayable_and_strands_nothing() {
+    // the cube is 24 combos; each runs one registry scenario (rotating,
+    // so the whole registry is exercised across the cube) twice plus a
+    // replay — determinism, replayability, and zero stranded requests
+    let reg = registry();
+    for (i, policy) in all_combos().into_iter().enumerate() {
+        let s = &reg[i % reg.len()];
+        let a = run_quick(s, policy, 100.0);
+        let b = run_quick(s, policy, 100.0);
+        let tag = format!("{} ({})", s.name, policy.label());
+        assert_eq!(a.control_log.len(), b.control_log.len(), "{tag}: log lengths diverged");
+        assert!(
+            a.control_log.iter().zip(b.control_log.iter()).all(|(x, y)| x == y),
+            "{tag}: control logs diverged"
+        );
+        assert_eq!(a.incomplete, 0, "{tag}: stranded requests");
+        replay(s, policy, 100.0, &a);
+    }
+}
+
+#[test]
+fn presets_equal_their_explicit_triples_exchange_for_exchange() {
+    // `PolicySpec::parse("kevlarflow")` is sugar, not a third behavior:
+    // the preset and its spelled-out triple must produce the identical
+    // control-plane exchange stream (and so identical results)
+    for (preset, triple) in [
+        ("kevlarflow", "rr+donor-splice+ring:8"),
+        ("standard", "rr+full-reinit+off"),
+    ] {
+        let s = find("paper-1").unwrap();
+        let a = run_quick(&s, PolicySpec::parse(preset).unwrap(), 150.0);
+        let b = run_quick(&s, PolicySpec::parse(triple).unwrap(), 150.0);
+        assert_eq!(
+            a.control_log.len(),
+            b.control_log.len(),
+            "{preset} vs {triple}: exchange counts diverged"
+        );
+        assert!(
+            a.control_log.iter().zip(b.control_log.iter()).all(|(x, y)| x == y),
+            "{preset} vs {triple}: exchange streams diverged"
+        );
+        assert_eq!(a.recorder.summary(), b.recorder.summary(), "{preset}: summaries diverged");
+    }
+}
+
+#[test]
+fn spare_pool_and_checkpoint_run_end_to_end_with_distinct_outcomes() {
+    // 400 s of arrivals: the window must outlive every fast recovery
+    // (~30–60 s) so the TTFT comparison actually sees the policies'
+    // different serving stories, not just a shared 30 s outage tail
+    let s = find("paper-1").unwrap();
+    let kevlar = run_quick(&s, PolicySpec::kevlarflow(), 400.0);
+    let spare = run_quick(&s, PolicySpec::parse("rr+spare-pool:2+ring:8").unwrap(), 400.0);
+    let ckpt = run_quick(&s, PolicySpec::parse("rr+checkpoint-restore:60+off").unwrap(), 400.0);
+    let standard = run_quick(&s, PolicySpec::standard(), 400.0);
+
+    for (name, res) in [("kevlar", &kevlar), ("spare", &spare), ("ckpt", &ckpt)] {
+        assert_eq!(res.incomplete, 0, "{name}: stranded requests");
+        assert_eq!(res.recovery.completed.len(), 1, "{name}: must record one recovery");
+    }
+    let mttr = |r: &SimResult| r.recovery.mean_recovery_s().unwrap();
+    let (mk, ms, mc) = (mttr(&kevlar), mttr(&spare), mttr(&ckpt));
+    // all three are an order of magnitude under the 600 s re-provision…
+    for (name, m) in [("kevlar", mk), ("spare", ms), ("ckpt", mc)] {
+        assert!((15.0..120.0).contains(&m), "{name}: MTTR {m}s out of band");
+    }
+    // …but on three distinct clocks: the checkpoint replay (~reform +
+    // interval/2) is visibly slower than the spare swap
+    assert!(mk != ms && ms != mc && mk != mc, "MTTRs must differ: {mk} {ms} {mc}");
+    assert!(mc > ms + 10.0, "checkpoint replay ({mc}s) must exceed the spare swap ({ms}s)");
+
+    // TTFT tells the serving story: donor splicing keeps the pipeline
+    // serving (degraded), the others take a real (if short) outage, and
+    // full re-init takes the 600 s one
+    let ttft = |r: &SimResult| r.recorder.summary().ttft_avg;
+    assert!(ttft(&spare) > ttft(&kevlar), "a spare swap is an outage; donor splicing is not");
+    assert!(ttft(&ckpt) > ttft(&kevlar));
+    assert!(ttft(&standard) > ttft(&spare) * 2.0, "600 s re-init must dominate every recovery");
+
+    // progress semantics: the cold spare restarts in-flight requests,
+    // the checkpoint preserves them
+    let retries = |r: &SimResult| {
+        r.recorder.records.iter().map(|rec| rec.retries as u64).sum::<u64>()
+    };
+    assert!(retries(&spare) > 0, "spare swap must restart in-flight requests");
+    assert_eq!(retries(&ckpt), 0, "checkpoint restore must not lose emitted progress");
+    assert_eq!(retries(&kevlar), 0);
+}
+
+#[test]
+fn spare_pool_exhaustion_degrades_to_full_reinit_end_to_end() {
+    // paper-3 kills nodes in two different pipelines; with a single
+    // spare the second failure must pay the full re-provision
+    let mut s = find("paper-3").unwrap();
+    s.arrival_window_s = 150.0;
+    let res = s.run_logged(s.default_rps, PolicySpec::parse("rr+spare-pool:1+ring:8").unwrap());
+    assert_eq!(res.incomplete, 0);
+    assert_eq!(res.recovery.completed.len(), 1, "only the spare-backed failure recovers fast");
+    // the exhausted-pool instance went Down on the 600 s clock: its
+    // rejoin timer is the baseline MTTR
+    use kevlarflow::coordinator::control::Wake;
+    let full_reinit_timer = res.control_log.iter().any(|(_, _, actions)| {
+        actions.iter().any(|a| {
+            matches!(
+                a,
+                Action::StartTimer { after_s, wake: Wake::InstanceRejoined { .. } }
+                    if (*after_s - 600.0).abs() < 1e-9
+            )
+        })
+    });
+    assert!(full_reinit_timer, "second failure must fall back to the 600 s re-provision");
+}
+
+#[test]
+fn checkpoint_scenarios_end_healthy_and_replay() {
+    // transient-fault scenarios under the checkpoint policy still end
+    // with every pipeline Active (the facade-side invariant the preset
+    // suite pins for donor splicing)
+    let policy = PolicySpec::parse("rr+checkpoint-restore:30+ring:8").unwrap();
+    for name in ["flap", "slow-node"] {
+        let s = find(name).unwrap();
+        let res = run_quick(&s, policy, 150.0);
+        assert_eq!(res.incomplete, 0, "{name}: stranded requests");
+        let cp = replay(&s, policy, 150.0, &res);
+        for i in 0..s.n_instances {
+            assert_eq!(
+                cp.state(i),
+                PipelineState::Active,
+                "{name}: instance {i} not healthy at end of run"
+            );
+        }
+        assert!(cp.health().dead.is_empty(), "{name}: dead nodes remain");
+        assert!(cp.health().donations.is_empty(), "{name}: donors under a donor-less policy");
+    }
+}

@@ -4,7 +4,7 @@
 //! action stream, and the transient-fault scenarios (flap, straggler,
 //! rejoin storm) end with every pipeline instance healthy.
 
-use kevlarflow::config::{FaultOp, FaultPolicy, NodeId};
+use kevlarflow::config::{FaultOp, NodeId, PolicySpec};
 use kevlarflow::coordinator::control::{Action, ControlPlane, Event};
 use kevlarflow::coordinator::PipelineState;
 use kevlarflow::scenario::{find, registry, Scenario};
@@ -13,7 +13,7 @@ use kevlarflow::sim::SimResult;
 /// Run `s` with a test-sized arrival window (fault scripts and
 /// background-replacement timers still play out fully during the drain),
 /// with the control log on — these properties inspect the exchange.
-fn run_quick(s: &Scenario, policy: FaultPolicy) -> SimResult {
+fn run_quick(s: &Scenario, policy: PolicySpec) -> SimResult {
     let mut s = s.clone();
     s.arrival_window_s = s.arrival_window_s.min(200.0);
     s.run_logged(s.default_rps, policy)
@@ -21,7 +21,7 @@ fn run_quick(s: &Scenario, policy: FaultPolicy) -> SimResult {
 
 /// Replay a run's logged event trace into a fresh facade, asserting the
 /// identical action stream; returns the facade in its final state.
-fn replay(s: &Scenario, policy: FaultPolicy, res: &SimResult) -> ControlPlane {
+fn replay(s: &Scenario, policy: PolicySpec, res: &SimResult) -> ControlPlane {
     let mut quick = s.clone();
     quick.arrival_window_s = quick.arrival_window_s.min(200.0);
     let cfg = quick.to_experiment(quick.default_rps, policy);
@@ -37,7 +37,7 @@ fn replay(s: &Scenario, policy: FaultPolicy, res: &SimResult) -> ControlPlane {
     cp
 }
 
-fn assert_deterministic(s: &Scenario, policy: FaultPolicy) {
+fn assert_deterministic(s: &Scenario, policy: PolicySpec) {
     let a = run_quick(s, policy);
     let b = run_quick(s, policy);
     assert_eq!(
@@ -60,7 +60,7 @@ fn assert_deterministic(s: &Scenario, policy: FaultPolicy) {
 #[test]
 fn every_scenario_is_deterministic_and_replayable() {
     for s in registry() {
-        assert_deterministic(&s, FaultPolicy::KevlarFlow);
+        assert_deterministic(&s, PolicySpec::kevlarflow());
     }
 }
 
@@ -70,7 +70,7 @@ fn standard_policy_scenarios_deterministic_too() {
     // full matrix under both policies would double the suite's runtime
     // for paths the KevlarFlow pass already covers
     for name in ["paper-1", "flap", "slow-node", "rejoin-storm"] {
-        assert_deterministic(&find(name).unwrap(), FaultPolicy::Standard);
+        assert_deterministic(&find(name).unwrap(), PolicySpec::standard());
     }
 }
 
@@ -78,8 +78,8 @@ fn standard_policy_scenarios_deterministic_too() {
 fn transient_fault_scenarios_end_healthy() {
     for name in ["flap", "slow-node", "rejoin-storm"] {
         let s = find(name).unwrap();
-        let res = run_quick(&s, FaultPolicy::KevlarFlow);
-        let cp = replay(&s, FaultPolicy::KevlarFlow, &res);
+        let res = run_quick(&s, PolicySpec::kevlarflow());
+        let cp = replay(&s, PolicySpec::kevlarflow(), &res);
         for i in 0..s.n_instances {
             assert_eq!(
                 cp.state(i),
@@ -95,7 +95,7 @@ fn transient_fault_scenarios_end_healthy() {
 #[test]
 fn flap_rejoin_releases_donor_before_replacement() {
     let s = find("flap").unwrap();
-    let res = run_quick(&s, FaultPolicy::KevlarFlow);
+    let res = run_quick(&s, PolicySpec::kevlarflow());
     let early_release = res.control_log.iter().any(|(_, ev, actions)| {
         matches!(ev, Event::NodeRecovered { .. })
             && actions.iter().any(|a| matches!(a, Action::ReleaseDonor { .. }))
@@ -112,7 +112,7 @@ fn mid_recovery_rejoin_lands_via_retry() {
     let mut s = find("flap").unwrap();
     s.faults = vec![FaultOp::Flap { t_s: 120.0, node: NodeId::new(0, 2), down_s: 20.0 }];
     s.arrival_window_s = 200.0;
-    let res = s.run_logged(2.0, FaultPolicy::KevlarFlow);
+    let res = s.run_logged(2.0, PolicySpec::kevlarflow());
     let early_release = res.control_log.iter().any(|(_, ev, actions)| {
         matches!(ev, Event::NodeRecovered { .. })
             && actions.iter().any(|a| matches!(a, Action::ReleaseDonor { .. }))
@@ -129,7 +129,7 @@ fn blip_shorter_than_heartbeat_timeout_is_invisible() {
     let mut s = find("flap").unwrap();
     s.faults = vec![FaultOp::Flap { t_s: 120.0, node: NodeId::new(0, 2), down_s: 2.0 }];
     s.arrival_window_s = 150.0;
-    let res = s.run_logged(2.0, FaultPolicy::KevlarFlow);
+    let res = s.run_logged(2.0, PolicySpec::kevlarflow());
     assert!(
         !res.control_log.iter().any(|(_, ev, _)| matches!(ev, Event::HeartbeatMissed { .. })),
         "sub-timeout blip must not reach the control plane as a failure"
@@ -141,7 +141,7 @@ fn blip_shorter_than_heartbeat_timeout_is_invisible() {
 #[test]
 fn straggler_is_quarantined_under_kevlarflow_only() {
     let s = find("slow-node").unwrap();
-    let kev = run_quick(&s, FaultPolicy::KevlarFlow);
+    let kev = run_quick(&s, PolicySpec::kevlarflow());
     let spliced = kev.control_log.iter().any(|(_, ev, actions)| {
         matches!(ev, Event::StragglerDetected { .. })
             && actions.iter().any(|a| matches!(a, Action::SpliceDonor { .. }))
@@ -149,7 +149,7 @@ fn straggler_is_quarantined_under_kevlarflow_only() {
     assert!(spliced, "KevlarFlow must route around the straggler");
     assert_eq!(kev.recovery.completed.len(), 1);
 
-    let std_res = run_quick(&s, FaultPolicy::Standard);
+    let std_res = run_quick(&s, PolicySpec::standard());
     assert!(
         std_res
             .control_log
@@ -172,7 +172,7 @@ fn straggler_is_quarantined_under_kevlarflow_only() {
 #[test]
 fn rack_double_falls_back_to_full_reinit() {
     let s = find("rack-double").unwrap();
-    let res = run_quick(&s, FaultPolicy::KevlarFlow);
+    let res = run_quick(&s, PolicySpec::kevlarflow());
     // the second hole exceeds the single-donor model: the instance goes
     // fully down (Evict-All) and later rejoins fresh
     let full_evict = res.control_log.iter().any(|(_, _, actions)| {
@@ -198,7 +198,7 @@ fn rack_double_falls_back_to_full_reinit() {
 #[test]
 fn cascade_restarts_recovery_with_fresh_donor() {
     let s = find("cascade").unwrap();
-    let res = run_quick(&s, FaultPolicy::KevlarFlow);
+    let res = run_quick(&s, PolicySpec::kevlarflow());
     let donors: Vec<_> = res
         .control_log
         .iter()

@@ -5,7 +5,7 @@
 //! simulator's entire decision stream is reproduced by replaying its
 //! event trace into a fresh [`ControlPlane`].
 
-use kevlarflow::config::{ClusterConfig, ExperimentConfig, FaultPolicy, NodeId};
+use kevlarflow::config::{ClusterConfig, ExperimentConfig, NodeId, PolicySpec, ReplicationPolicy};
 use kevlarflow::coordinator::control::{Action, ControlPlane};
 use kevlarflow::sim::{ClusterSim, LogMode};
 
@@ -66,13 +66,13 @@ fn kevlar_masks_failure_at_low_rps() {
     let node = NodeId::new(0, 2);
     let base = ClusterSim::new(
         quick(ClusterConfig::paper_8node(), 2.0, 600.0)
-            .with_policy(FaultPolicy::Standard)
+            .with_policy(PolicySpec::standard())
             .with_failure(120.0, node),
     )
     .run();
     let kev = ClusterSim::new(
         quick(ClusterConfig::paper_8node(), 2.0, 600.0)
-            .with_policy(FaultPolicy::KevlarFlow)
+            .with_policy(PolicySpec::kevlarflow())
             .with_failure(120.0, node),
     )
     .run();
@@ -97,7 +97,7 @@ fn kevlar_masks_failure_at_low_rps() {
 fn donor_failure_recovers_both_pipelines() {
     // fail (0,2); donor should be (1,2); then fail the donor too
     let cfg = quick(ClusterConfig::paper_16node(), 2.0, 500.0)
-        .with_policy(FaultPolicy::KevlarFlow)
+        .with_policy(PolicySpec::kevlarflow())
         .with_failure(100.0, NodeId::new(0, 2))
         .with_failure(250.0, NodeId::new(1, 2));
     let res = ClusterSim::new(cfg).run();
@@ -110,9 +110,9 @@ fn donor_failure_recovers_both_pipelines() {
 #[test]
 fn replication_overhead_is_small() {
     let mut on = quick(ClusterConfig::paper_8node(), 2.0, 300.0);
-    on.serving.replication = true;
+    on.serving.policy.replication = ReplicationPolicy::Ring { interval_iters: 8 };
     let mut off = on.clone();
-    off.serving.replication = false;
+    off.serving.policy.replication = ReplicationPolicy::Off;
     let son = ClusterSim::new(on).run().recorder.summary();
     let soff = ClusterSim::new(off).run().recorder.summary();
     let overhead = son.latency_avg / soff.latency_avg - 1.0;
@@ -124,7 +124,7 @@ fn replication_overhead_is_small() {
 fn standard_policy_retries_lose_progress() {
     let res = ClusterSim::new(
         quick(ClusterConfig::paper_8node(), 1.0, 400.0)
-            .with_policy(FaultPolicy::Standard)
+            .with_policy(PolicySpec::standard())
             .with_failure(120.0, NodeId::new(0, 0)),
     )
     .run();
@@ -139,7 +139,7 @@ fn kv_utilization_in_headroom_band() {
     // (baseline semantics: primaries only — the paper's number is a
     // TensorRT-LLM measurement without replication)
     let res = ClusterSim::new(
-        quick(ClusterConfig::paper_8node(), 3.4, 500.0).with_policy(FaultPolicy::Standard),
+        quick(ClusterConfig::paper_8node(), 3.4, 500.0).with_policy(PolicySpec::standard()),
     )
     .run();
     let steady: Vec<f64> = res
@@ -163,13 +163,13 @@ fn kv_utilization_in_headroom_band() {
 fn control_plane_replay_reproduces_sim_decisions() {
     let cfgs = [
         quick(ClusterConfig::paper_8node(), 2.0, 300.0)
-            .with_policy(FaultPolicy::KevlarFlow)
+            .with_policy(PolicySpec::kevlarflow())
             .with_failure(120.0, NodeId::new(0, 2)),
         quick(ClusterConfig::paper_8node(), 1.0, 250.0)
-            .with_policy(FaultPolicy::Standard)
+            .with_policy(PolicySpec::standard())
             .with_failure(100.0, NodeId::new(0, 1)),
         quick(ClusterConfig::paper_16node(), 2.0, 300.0)
-            .with_policy(FaultPolicy::KevlarFlow)
+            .with_policy(PolicySpec::kevlarflow())
             .with_failure(100.0, NodeId::new(0, 2))
             .with_failure(120.0, NodeId::new(1, 2)),
     ];

@@ -7,14 +7,14 @@
 //! (or drags an xla dependency into the sim path), tier-1
 //! (`cargo test -q`) fails right here.
 
-use kevlarflow::config::{ClusterConfig, ExperimentConfig, FaultPolicy, NodeId};
+use kevlarflow::config::{ClusterConfig, ExperimentConfig, NodeId, PolicySpec};
 use kevlarflow::sim::ClusterSim;
 
 #[test]
 fn default_build_runs_sim_with_fault_recovery() {
     // default 8-node preset, one injected fault, KevlarFlow policy
     let mut cfg = ExperimentConfig::new(ClusterConfig::paper_8node(), 1.0)
-        .with_policy(FaultPolicy::KevlarFlow)
+        .with_policy(PolicySpec::kevlarflow())
         .with_failure(60.0, NodeId::new(0, 2));
     cfg.arrival_window_s = 180.0;
 

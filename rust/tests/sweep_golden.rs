@@ -5,7 +5,7 @@
 //! (they are already covered by the calibration tests).
 
 use kevlarflow::bench::sweep;
-use kevlarflow::config::Json;
+use kevlarflow::config::{Json, PolicySpec};
 
 /// Every key a sweep row must carry, in the writer's (sorted) order.
 const ROW_KEYS: [&str; 16] = [
@@ -30,12 +30,12 @@ const ROW_KEYS: [&str; 16] = [
 #[test]
 fn sweep_json_matches_golden_schema() {
     let names = vec!["paper-1".to_string()];
-    let rows = sweep::run_sweep(&names, false, Some(150.0), true, 1).unwrap();
+    let rows = sweep::run_sweep(&names, false, Some(150.0), true, 1, &[]).unwrap();
     let doc = sweep::sweep_json(&rows);
     let text = doc.to_string();
 
     // byte-determinism: an identical sweep serializes identically
-    let rows2 = sweep::run_sweep(&names, false, Some(150.0), true, 1).unwrap();
+    let rows2 = sweep::run_sweep(&names, false, Some(150.0), true, 1, &[]).unwrap();
     assert_eq!(text, sweep::sweep_json(&rows2).to_string());
 
     // document header
@@ -74,7 +74,7 @@ fn sweep_json_matches_golden_schema() {
 #[test]
 fn sweep_file_roundtrip() {
     let names = vec!["paper-1".to_string()];
-    let rows = sweep::run_sweep(&names, false, Some(60.0), true, 1).unwrap();
+    let rows = sweep::run_sweep(&names, false, Some(60.0), true, 1, &[]).unwrap();
     let dir = std::path::PathBuf::from(env!("CARGO_TARGET_TMPDIR"));
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("BENCH_scenarios.json");
@@ -84,4 +84,81 @@ fn sweep_file_roundtrip() {
     let parsed = Json::parse(text.trim_end()).unwrap();
     assert_eq!(parsed, sweep::sweep_json(&rows));
     std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn explicit_presets_match_default_sweep_bytes() {
+    // the policy-axis redesign must not move a byte of the default
+    // output: an explicit `--policies standard,kevlarflow` run serializes
+    // identically to the no-override run (which itself is the
+    // pre-redesign matrix order: standard first, then kevlarflow)
+    let names = vec!["paper-1".to_string()];
+    let default_rows = sweep::run_sweep(&names, false, Some(120.0), true, 1, &[]).unwrap();
+    let explicit = sweep::run_sweep(
+        &names,
+        false,
+        Some(120.0),
+        true,
+        1,
+        &PolicySpec::presets(),
+    )
+    .unwrap();
+    assert_eq!(
+        sweep::sweep_json(&default_rows).to_string(),
+        sweep::sweep_json(&explicit).to_string(),
+        "explicit preset axis must be byte-identical to the default sweep"
+    );
+}
+
+#[test]
+fn policy_matrix_rows_share_schema_and_diverge_in_results() {
+    // four policies through one scenario: the row schema is unchanged
+    // (new policies are new label values, not new columns), and the two
+    // genuinely new recovery strategies produce their own MTTR story
+    let policies = ["kevlarflow", "standard", "rr+spare-pool+ring", "p2c+checkpoint-restore+off"]
+        .map(|p| PolicySpec::parse(p).unwrap());
+    let names = vec!["paper-1".to_string()];
+    let rows = sweep::run_sweep(&names, false, Some(150.0), true, 2, &policies).unwrap();
+    assert_eq!(rows.len(), 4);
+    let doc = sweep::sweep_json(&rows);
+    let out = doc.get("rows").unwrap().as_arr().unwrap();
+    let labels: Vec<&str> =
+        out.iter().map(|r| r.get("policy").unwrap().as_str().unwrap()).collect();
+    assert_eq!(
+        labels,
+        vec!["kevlarflow", "standard", "rr+spare-pool:2+ring:8", "p2c+checkpoint-restore:60+off"],
+        "labels must be canonical and in axis order"
+    );
+    let mut recoveries = Vec::new();
+    for row in out {
+        let obj = row.as_obj().unwrap();
+        let keys: Vec<&str> = obj.keys().map(String::as_str).collect();
+        assert_eq!(keys, ROW_KEYS, "combo rows must keep the golden schema");
+        assert_eq!(row.get("incomplete").unwrap().as_f64(), Some(0.0));
+        if row.get("policy").unwrap().as_str() != Some("standard") {
+            let rec = row.get("mean_recovery_s").unwrap().as_f64().unwrap();
+            assert!((15.0..120.0).contains(&rec), "recovery {rec}s out of band");
+            recoveries.push(rec);
+        }
+    }
+    // kevlarflow / spare-pool / checkpoint-restore recover on three
+    // genuinely different clocks
+    recoveries.sort_by(f64::total_cmp);
+    recoveries.dedup();
+    assert_eq!(recoveries.len(), 3, "the three recovering policies must have distinct MTTRs");
+    // spare-pool restarts in-flight work; checkpoint-restore keeps it
+    let by_label = |want: &str| {
+        out.iter()
+            .find(|r| r.get("policy").unwrap().as_str() == Some(want))
+            .unwrap()
+    };
+    assert!(
+        by_label("rr+spare-pool:2+ring:8").get("retries").unwrap().as_f64().unwrap() > 0.0,
+        "a cold spare carries no KV: displaced requests must restart"
+    );
+    assert_eq!(
+        by_label("p2c+checkpoint-restore:60+off").get("retries").unwrap().as_f64(),
+        Some(0.0),
+        "checkpoint restore preserves emitted progress"
+    );
 }
