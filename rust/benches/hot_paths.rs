@@ -9,7 +9,10 @@
 //!   (`{"suite","version","mode","rows":[{name, ns_per_iter,
 //!   events_per_sec}]}`; for micro rows `events_per_sec` is
 //!   iterations/s, for the `sim …` rows it is simulator events/s — the
-//!   headline throughput number; `mode` is `"quick"` or `"full"`)
+//!   headline throughput number; `mode` is `"quick"` or `"full"`).
+//!   The event-queue micro row and every `sim …` row appear once per
+//!   backend (`[heap]` / `[wheel]`), giving the measured comparison
+//!   that gates the default-`QueueKind` flip (EXPERIMENTS.md).
 //! * `--out FILE`   JSON output path (default `BENCH_hot_paths.json`)
 //! * `--quick`      ~20× fewer iterations + shortened sim windows (CI
 //!   schema check, not a stable measurement)
@@ -18,7 +21,9 @@ use std::collections::BTreeMap;
 use std::hint::black_box;
 use std::time::Instant;
 
-use kevlarflow::config::{ClusterConfig, ExperimentConfig, Json, NodeId, PolicySpec, RoutePolicy};
+use kevlarflow::config::{
+    ClusterConfig, ExperimentConfig, Json, NodeId, PolicySpec, QueueKind, RoutePolicy,
+};
 use kevlarflow::coordinator::router::{InstanceView, Router};
 use kevlarflow::coordinator::ReplicationPlanner;
 use kevlarflow::kvcache::NodeKv;
@@ -131,18 +136,21 @@ fn main() {
         planner.replan(&c16, &health, &[]).len() as u64
     });
 
-    // event queue throughput
-    bench(&mut rows, "event queue push+pop (1k batch)", 5_000 / scale, || {
-        let mut q = EventQueue::with_capacity(1000);
-        for i in 0..1000 {
-            q.push((i % 97) as f64, Event::Sample);
-        }
-        let mut n = 0u64;
-        while q.pop().is_some() {
-            n += 1;
-        }
-        n
-    });
+    // event queue throughput, one row per backend (heap vs timing wheel)
+    for kind in [QueueKind::Heap, QueueKind::Wheel] {
+        let name = format!("event queue push+pop (1k batch) [{}]", kind.label());
+        bench(&mut rows, &name, 5_000 / scale, || {
+            let mut q = EventQueue::with_capacity_kind(kind, 1000);
+            for i in 0..1000 {
+                q.push((i % 97) as f64, Event::Sample);
+            }
+            let mut n = 0u64;
+            while q.pop().is_some() {
+                n += 1;
+            }
+            n
+        });
+    }
 
     // workload generation
     let spec = WorkloadSpec::sharegpt_like();
@@ -159,6 +167,10 @@ fn main() {
     });
 
     println!("\n== end-to-end simulation throughput ==");
+    // every sim config runs on both queue backends: the pop streams are
+    // proven identical (tests/event_queue_props.rs, perf_equivalence.rs),
+    // so the per-backend rows differ only in events/sec — the comparison
+    // that gates flipping the default QueueKind (see EXPERIMENTS.md)
     for (base, cfg) in [
         (
             "sim scene1 RPS2 standard",
@@ -173,29 +185,37 @@ fn main() {
             ExperimentConfig::new(ClusterConfig::paper_16node(), 12.0),
         ),
     ] {
-        // row names carry the mode so a clamped-window quick run can
-        // never masquerade as a full-run measurement
-        let name = format!("{base} ({})", if quick { "quick" } else { "full run" });
-        let mut cfg = cfg;
-        if quick {
-            cfg.arrival_window_s = cfg.arrival_window_s.min(200.0);
+        for kind in [QueueKind::Heap, QueueKind::Wheel] {
+            // row names carry the backend and the mode so a
+            // clamped-window quick run can never masquerade as a
+            // full-run measurement
+            let name = format!(
+                "{base} [{}] ({})",
+                kind.label(),
+                if quick { "quick" } else { "full run" }
+            );
+            let mut cfg = cfg.clone();
+            cfg.timing.queue = kind;
+            if quick {
+                cfg.arrival_window_s = cfg.arrival_window_s.min(200.0);
+            }
+            let t0 = Instant::now();
+            let res = ClusterSim::new(cfg).run();
+            let dt = t0.elapsed();
+            let events_per_sec = res.events_processed as f64 / dt.as_secs_f64();
+            println!(
+                "{name:<52} {:>9.2?}   {:>9} events  {:>6.2} Mev/s  ({} reqs)",
+                dt,
+                res.events_processed,
+                events_per_sec / 1e6,
+                res.recorder.records.len()
+            );
+            rows.push(BenchRow {
+                name,
+                ns_per_iter: dt.as_nanos() as f64 / res.events_processed.max(1) as f64,
+                events_per_sec,
+            });
         }
-        let t0 = Instant::now();
-        let res = ClusterSim::new(cfg).run();
-        let dt = t0.elapsed();
-        let events_per_sec = res.events_processed as f64 / dt.as_secs_f64();
-        println!(
-            "{name:<44} {:>9.2?}   {:>9} events  {:>6.2} Mev/s  ({} reqs)",
-            dt,
-            res.events_processed,
-            events_per_sec / 1e6,
-            res.recorder.records.len()
-        );
-        rows.push(BenchRow {
-            name,
-            ns_per_iter: dt.as_nanos() as f64 / res.events_processed.max(1) as f64,
-            events_per_sec,
-        });
     }
 
     if json {

@@ -22,7 +22,7 @@ use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::config::{Json, PolicySpec};
+use crate::config::{Json, PolicySpec, QueueKind};
 use crate::metrics::Summary;
 use crate::scenario::{registry, Scenario, ScenarioError};
 
@@ -45,9 +45,22 @@ pub struct SweepRow {
     pub retries: u64,
 }
 
-/// Run one point of the matrix.
+/// Run one point of the matrix on the default event-queue backend.
 pub fn run_point(s: &Scenario, rps: f64, policy: PolicySpec) -> SweepRow {
-    let res = s.run(rps, policy);
+    run_point_queued(s, rps, policy, QueueKind::default())
+}
+
+/// Run one point of the matrix on a chosen event-queue backend. The
+/// backend never appears in the row: it is a pure throughput knob, so
+/// the serialized sweep bytes are identical for every [`QueueKind`]
+/// (pinned by `rust/tests/perf_equivalence.rs`).
+pub fn run_point_queued(
+    s: &Scenario,
+    rps: f64,
+    policy: PolicySpec,
+    queue: QueueKind,
+) -> SweepRow {
+    let res = s.run_with_queue(rps, policy, queue);
     let retries = res.recorder.records.iter().map(|r| r.retries as u64).sum();
     SweepRow {
         scenario: s.name.clone(),
@@ -84,7 +97,8 @@ pub fn effective_jobs(requested: usize, n_points: usize) -> usize {
 /// parallelism). Every point is an independent deterministic simulation
 /// and rows are collected back in matrix order, so the output — and the
 /// serialized `BENCH_scenarios.json` — is byte-identical for any thread
-/// count (pinned by `rust/tests/perf_equivalence.rs`).
+/// count (pinned by `rust/tests/perf_equivalence.rs`). Every point runs
+/// on the `queue` backend; the output bytes are backend-independent.
 pub fn run_sweep(
     names: &[String],
     full_grid: bool,
@@ -92,6 +106,7 @@ pub fn run_sweep(
     quiet: bool,
     jobs: usize,
     policies: &[PolicySpec],
+    queue: QueueKind,
 ) -> Result<Vec<SweepRow>, ScenarioError> {
     let mut scenarios: Vec<Scenario> = if names.is_empty() {
         registry()
@@ -122,7 +137,7 @@ pub fn run_sweep(
     let mut slots: Vec<Option<SweepRow>> = points.iter().map(|_| None).collect();
     if jobs <= 1 {
         for (slot, &(s, rps, policy)) in slots.iter_mut().zip(points.iter()) {
-            *slot = Some(run_point(s, rps, policy));
+            *slot = Some(run_point_queued(s, rps, policy, queue));
         }
     } else {
         // work-stealing by atomic cursor: threads pull the next point,
@@ -138,7 +153,7 @@ pub fn run_sweep(
                             let Some(&(s, rps, policy)) = points.get(i) else {
                                 break;
                             };
-                            done.push((i, run_point(s, rps, policy)));
+                            done.push((i, run_point_queued(s, rps, policy, queue)));
                         }
                         done
                     })
@@ -232,7 +247,9 @@ mod tests {
 
     #[test]
     fn sweep_rejects_unknown_names() {
-        let err = run_sweep(&["nope".to_string()], false, Some(50.0), true, 1, &[]).unwrap_err();
+        let err =
+            run_sweep(&["nope".to_string()], false, Some(50.0), true, 1, &[], QueueKind::Heap)
+                .unwrap_err();
         assert!(matches!(err, ScenarioError::UnknownScenario(_)));
     }
 

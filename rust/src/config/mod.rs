@@ -201,6 +201,44 @@ impl ServingConfig {
     }
 }
 
+/// Which data structure backs the simulator's [`crate::sim::EventQueue`].
+///
+/// Both backends are proven pop-for-pop identical — same `(t, Event)`
+/// stream under `f64::total_cmp` time order with FIFO sequence tiebreak
+/// — by `rust/tests/event_queue_props.rs` (randomized differential
+/// fuzzing) and `rust/tests/perf_equivalence.rs` (whole-simulation
+/// equivalence across the scenario registry). The default stays `Heap`
+/// until a measured `BENCH_hot_paths.json` baseline lands showing
+/// `Wheel ≥ Heap` on the end-to-end sim rows (see ROADMAP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueKind {
+    /// `BinaryHeap<Entry>` — O(log n) push/pop, the historical backend.
+    #[default]
+    Heap,
+    /// Hierarchical timing wheel / calendar queue (`sim/timeq.rs`):
+    /// near wheel of fixed-width buckets plus an overflow ladder of
+    /// far-future rungs — amortized O(1) push, bucket-sort drain.
+    Wheel,
+}
+
+impl QueueKind {
+    /// Parse a CLI `--queue` value (`heap` | `wheel`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "heap" => Some(Self::Heap),
+            "wheel" => Some(Self::Wheel),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Heap => "heap",
+            Self::Wheel => "wheel",
+        }
+    }
+}
+
 /// Calibrated timing constants for the discrete-event simulator.
 ///
 /// All values derive from the paper's §4.1 baseline characterization of
@@ -254,6 +292,11 @@ pub struct SimTimingConfig {
     /// Inter-stage activation hand-off size (bytes) per request — used
     /// with the WAN bandwidth model for donor-path hops.
     pub handoff_bytes: f64,
+    /// Event-queue backend for the simulator ([`QueueKind::Heap`] or
+    /// [`QueueKind::Wheel`]; CLI `--queue`). Pure mechanism — proven
+    /// observation-identical, so it never changes a result, only how
+    /// fast the sim produces it.
+    pub queue: QueueKind,
 }
 
 impl Default for SimTimingConfig {
@@ -274,6 +317,7 @@ impl Default for SimTimingConfig {
             resume_s: 2.0,
             repl_tax: 0.005,
             handoff_bytes: 2.0 * 4096.0,
+            queue: QueueKind::default(),
         }
     }
 }
@@ -388,6 +432,16 @@ mod tests {
         let odd = ClusterConfig::custom(6, 2);
         assert_eq!(odd.n_nodes(), 12);
         assert_eq!(odd.instance_dc, vec![0, 1, 2, 3, 0, 1]);
+    }
+
+    #[test]
+    fn queue_kind_parse_and_default() {
+        assert_eq!(QueueKind::parse("heap"), Some(QueueKind::Heap));
+        assert_eq!(QueueKind::parse("wheel"), Some(QueueKind::Wheel));
+        assert_eq!(QueueKind::parse("calendar"), None);
+        assert_eq!(QueueKind::default(), QueueKind::Heap);
+        assert_eq!(QueueKind::Wheel.label(), "wheel");
+        assert_eq!(SimTimingConfig::default().queue, QueueKind::Heap);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use anyhow::{bail, Context, Result};
 
 use kevlarflow::bench;
-use kevlarflow::config::PolicySpec;
+use kevlarflow::config::{PolicySpec, QueueKind};
 use kevlarflow::scenario::{self, Scenario};
 
 const USAGE: &str = "\
@@ -26,16 +26,19 @@ USAGE:
       EXPERIMENT: fig3 fig4 fig6 fig7 fig8 fig9 table1 tpot all
   kevlarflow scenarios list                   show the fault-scenario registry
   kevlarflow scenarios run <NAME> [--rps R] [--policy SPEC|both]
-                          [--window S] [--file SPEC.json]
+                          [--window S] [--file SPEC.json] [--queue heap|wheel]
                                               run one scenario, print summaries
   kevlarflow scenarios sweep [--out FILE] [--only a,b] [--full] [--window S]
                              [--jobs N] [--policies SPEC,SPEC,...]
+                             [--queue heap|wheel]
                                               run the matrix on N worker threads
                                               (0/default = all cores; output is
-                                              byte-identical for any N), write
+                                              byte-identical for any N and any
+                                              --queue backend), write
                                               JSON results
                                               (default out: BENCH_scenarios.json)
   kevlarflow trace [--scenario NAME | --scene N] [--rps R] [--policy SPEC]
+                   [--queue heap|wheel]
                                               run a failure scenario and print
                                               the coordinator ControlPlane's
                                               event → action exchanges
@@ -46,6 +49,10 @@ Policy SPECs are preset names (standard, kevlarflow) or
 route+recovery+replication triples: route rr|ll|p2c, recovery
 full-reinit|donor-splice|spare-pool[:N]|checkpoint-restore[:S],
 replication off|ring[:N] — e.g. rr+spare-pool:2+ring:8.
+
+--queue selects the simulator's event-queue backend (default heap).
+The backends are proven result-identical; wheel is the throughput
+option for fleet-scale runs (see EXPERIMENTS.md).
 
 `generate` and `inspect-artifacts` need a binary built with
 `--features pjrt` plus the artifacts produced by python/compile/aot.py.
@@ -83,7 +90,8 @@ fn main() -> Result<()> {
                 scenario::paper_scene(scene)?
             };
             let policy = parse_policy(flag_value(&args, "--policy").unwrap_or("kevlarflow"))?;
-            trace(&s, rps, policy)
+            let queue = parse_queue(&args)?;
+            trace(&s, rps, policy, queue)
         }
         Some("generate") => {
             let prompt = args
@@ -168,15 +176,24 @@ fn parse_policy(spec: &str) -> Result<PolicySpec> {
     })
 }
 
+/// Parse an optional `--queue` flag (default: the heap backend).
+fn parse_queue(args: &[String]) -> Result<QueueKind> {
+    match flag_value(args, "--queue") {
+        None => Ok(QueueKind::default()),
+        Some(v) => QueueKind::parse(v)
+            .ok_or_else(|| anyhow::anyhow!("unknown queue backend '{v}' (heap or wheel)")),
+    }
+}
+
 /// Run one failure scenario and print the control plane's decision
 /// stream — the coordinator-level view of a recovery, straight from the
 /// `SimResult::control_log` the replay tests consume.
-fn trace(s: &Scenario, rps: f64, policy: PolicySpec) -> Result<()> {
+fn trace(s: &Scenario, rps: f64, policy: PolicySpec, queue: QueueKind) -> Result<()> {
     use kevlarflow::coordinator::control::{Action, Event};
 
     let mut s = s.clone();
     s.arrival_window_s = s.arrival_window_s.min(300.0);
-    let res = s.run_logged(rps, policy);
+    let res = s.run_logged_with_queue(rps, policy, queue);
 
     let mut dispatches = 0usize;
     let mut flushes = 0usize;
@@ -274,9 +291,13 @@ fn scenarios_run(args: &[String]) -> Result<()> {
         None | Some("both") => s.sweep_policies(),
         Some(p) => vec![parse_policy(p)?],
     };
+    let queue = parse_queue(args)?;
     println!("## scenario {} — {} (RPS {rps:.1})", s.name, s.summary);
     println!("   stresses: {}\n", s.stresses);
-    let rows: Vec<_> = policies.iter().map(|&p| bench::sweep::run_point(&s, rps, p)).collect();
+    let rows: Vec<_> = policies
+        .iter()
+        .map(|&p| bench::sweep::run_point_queued(&s, rps, p, queue))
+        .collect();
     bench::sweep::print_rows(&rows);
     Ok(())
 }
@@ -300,8 +321,9 @@ fn scenarios_sweep(args: &[String]) -> Result<()> {
                 "unknown policy '{bad}' in --policies (see usage for the spec grammar)"
             ))?,
     };
+    let queue = parse_queue(args)?;
     let out = flag_value(args, "--out").unwrap_or("BENCH_scenarios.json");
-    let rows = bench::sweep::run_sweep(&names, full, window, false, jobs, &policies)?;
+    let rows = bench::sweep::run_sweep(&names, full, window, false, jobs, &policies, queue)?;
     bench::sweep::write_sweep(std::path::Path::new(out), &rows)
         .with_context(|| format!("writing {out}"))?;
     println!("\nwrote {} rows to {out}", rows.len());

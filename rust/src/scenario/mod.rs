@@ -38,7 +38,7 @@
 //! ```
 
 use crate::config::{
-    ClusterConfig, ExperimentConfig, NodeId, PolicySpec, SimTimingConfig,
+    ClusterConfig, ExperimentConfig, NodeId, PolicySpec, QueueKind, SimTimingConfig,
 };
 use crate::config::Json;
 use crate::sim::{ClusterSim, LogMode, SimResult};
@@ -128,17 +128,48 @@ impl Scenario {
         cfg
     }
 
+    /// [`Scenario::to_experiment`] with an event-queue backend override
+    /// (the backend is a pure throughput knob: results are proven
+    /// identical across backends by `rust/tests/perf_equivalence.rs`).
+    pub fn to_experiment_queued(
+        &self,
+        rps: f64,
+        policy: PolicySpec,
+        queue: QueueKind,
+    ) -> ExperimentConfig {
+        let mut cfg = self.to_experiment(rps, policy);
+        cfg.timing.queue = queue;
+        cfg
+    }
+
     /// Run the scenario to completion. Control-log recording is off —
     /// the sweep-throughput path; use [`Scenario::run_logged`] when the
     /// exchange stream is needed.
     pub fn run(&self, rps: f64, policy: PolicySpec) -> SimResult {
-        ClusterSim::new(self.to_experiment(rps, policy)).run()
+        self.run_with_queue(rps, policy, QueueKind::default())
+    }
+
+    /// [`Scenario::run`] on a chosen event-queue backend.
+    pub fn run_with_queue(&self, rps: f64, policy: PolicySpec, queue: QueueKind) -> SimResult {
+        ClusterSim::new(self.to_experiment_queued(rps, policy, queue)).run()
     }
 
     /// Run with full control-log recording (`SimResult::control_log`
     /// populated) — the trace CLI and the replay tests.
     pub fn run_logged(&self, rps: f64, policy: PolicySpec) -> SimResult {
-        ClusterSim::new(self.to_experiment(rps, policy)).with_log(LogMode::Full).run()
+        self.run_logged_with_queue(rps, policy, QueueKind::default())
+    }
+
+    /// [`Scenario::run_logged`] on a chosen event-queue backend.
+    pub fn run_logged_with_queue(
+        &self,
+        rps: f64,
+        policy: PolicySpec,
+        queue: QueueKind,
+    ) -> SimResult {
+        ClusterSim::new(self.to_experiment_queued(rps, policy, queue))
+            .with_log(LogMode::Full)
+            .run()
     }
 
     /// The policy axis a sweep runs for this scenario: its own

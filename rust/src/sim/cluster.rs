@@ -16,7 +16,7 @@ use crate::metrics::Recorder;
 use crate::workload::{generate_trace, Pcg32, WorkloadSpec};
 
 use super::events::{Event, EventQueue};
-use super::state::{InstanceSim, NodeSim, Pass, ReqState, SAMPLE_INTERVAL_S};
+use super::state::{InstanceTable, NodeTable, Pass, ReqState, SAMPLE_INTERVAL_S};
 
 /// One logged control-plane exchange: `(sim time, event, actions)`. The
 /// full log replays into a fresh [`ControlPlane`] with the same config
@@ -84,8 +84,8 @@ pub struct ClusterSim {
     pub(crate) rng: Pcg32,
     pub(crate) reqs: Vec<ReqState>,
     pub(crate) cp: ControlPlane,
-    pub(crate) instances: Vec<InstanceSim>,
-    pub(crate) nodes: Vec<NodeSim>,
+    pub(crate) instances: InstanceTable,
+    pub(crate) nodes: NodeTable,
     pub(crate) passes: Vec<Pass>,
     pub(crate) recorder: Recorder,
     pub(crate) util_samples: Vec<(f64, f64)>,
@@ -113,7 +113,10 @@ impl ClusterSim {
         let trace = generate_trace(&cfg.workload, cfg.rps, cfg.arrival_window_s, cfg.seed);
         // the arrivals and fault script are known up front: reserve the
         // heap once instead of regrowing it across a million pushes
-        let mut q = EventQueue::with_capacity(trace.len() + 2 * cfg.faults.len() + 8);
+        let mut q = EventQueue::with_capacity_kind(
+            cfg.timing.queue,
+            trace.len() + 2 * cfg.faults.len() + 8,
+        );
         for (i, r) in trace.iter().enumerate() {
             q.push(r.arrival_s, Event::Arrival { req: i });
         }
@@ -133,12 +136,12 @@ impl ClusterSim {
         q.push(SAMPLE_INTERVAL_S, Event::Sample);
 
         let reqs: Vec<ReqState> = trace.into_iter().map(ReqState::new).collect();
-        let nodes = cfg
-            .cluster
-            .nodes()
-            .map(|id| NodeSim::new(id, cfg.serving.kv_capacity_blocks, cfg.serving.page_size))
-            .collect();
-        let instances = (0..cfg.cluster.n_instances).map(|_| InstanceSim::default()).collect();
+        let nodes = NodeTable::new(
+            cfg.cluster.nodes(),
+            cfg.serving.kv_capacity_blocks,
+            cfg.serving.page_size,
+        );
+        let instances = InstanceTable::new(cfg.cluster.n_instances);
         let mut cp = ControlPlane::new(&cfg.cluster, &cfg.serving, &cfg.timing, cfg.seed);
         cp.reserve_requests(reqs.len());
         let rng = Pcg32::with_stream(cfg.seed, 0x5e0);
@@ -195,12 +198,12 @@ impl ClusterSim {
     fn apply(&mut self, action: Action) {
         match action {
             Action::Dispatch { req, instance } => {
-                self.instances[instance].waiting.push_back(req as usize);
+                self.instances.waiting[instance].push_back(req as usize);
                 self.pump(instance);
             }
             Action::DropEpoch { instance } => self.drop_epoch(instance),
             Action::Evict { instance, scope, reset } => self.evict(instance, scope, reset),
-            Action::FlushReplicas { instance } => self.instances[instance].flush_due = true,
+            Action::FlushReplicas { instance } => self.instances.flush_due[instance] = true,
             // pure signalling for the sim: splice/re-form cost is carried
             // by the recovery timer, and there is no real communicator
             Action::SpliceDonor { .. } | Action::ReformCommunicator { .. } => {}
@@ -222,13 +225,12 @@ impl ClusterSim {
     /// passes put their requests back at the head of the queue (KV
     /// reservations are max-based, re-admission is idempotent).
     fn drop_epoch(&mut self, instance: usize) {
-        let inst = &mut self.instances[instance];
-        inst.epoch += 1;
-        inst.decode_inflight = false;
-        inst.prefills_inflight = 0;
-        let aborted = std::mem::take(&mut inst.prefilling);
+        self.instances.epoch[instance] += 1;
+        self.instances.decode_inflight[instance] = false;
+        self.instances.prefills_inflight[instance] = 0;
+        let aborted = std::mem::take(&mut self.instances.prefilling[instance]);
         for req in aborted.into_iter().rev() {
-            inst.waiting.push_front(req);
+            self.instances.waiting[instance].push_front(req);
         }
     }
 
@@ -238,14 +240,14 @@ impl ClusterSim {
     fn evict(&mut self, instance: usize, scope: EvictScope, reset: ResetMode) {
         let mut displaced: Vec<usize> = Vec::new();
         if scope == EvictScope::All {
-            displaced.extend(self.instances[instance].running.drain(..));
+            displaced.extend(self.instances.running[instance].drain(..));
         }
-        displaced.extend(self.instances[instance].waiting.drain(..));
+        displaced.extend(self.instances.waiting[instance].drain(..));
         for &req in &displaced {
             let id = self.reqs[req].spec.id;
             for s in 0..self.cfg.cluster.n_stages {
                 let ni = self.node_index(NodeId::new(instance, s));
-                let _ = self.nodes[ni].kv.free_primary(id);
+                let _ = self.nodes.kv[ni].free_primary(id);
             }
             match reset {
                 ResetMode::Restart => {
@@ -273,12 +275,12 @@ impl ClusterSim {
     /// the donor; requests whose replica was dropped (pressure) or never
     /// written recompute from scratch via a prefill pass.
     fn promote_replicas(&mut self, instance: usize, donor: NodeId) {
-        let running = std::mem::take(&mut self.instances[instance].running);
+        let running = std::mem::take(&mut self.instances.running[instance]);
         let di = self.node_index(donor);
         let mut keep = Vec::new();
         for req in running {
             let id = self.reqs[req].spec.id;
-            match self.nodes[di].kv.promote_replica(id) {
+            match self.nodes.kv[di].promote_replica(id) {
                 Ok(synced) if synced > 0 => {
                     // roll decode progress back to the replicated
                     // watermark; the lag tokens recompute as decode steps
@@ -295,13 +297,13 @@ impl ClusterSim {
                     for s in 0..self.cfg.cluster.n_stages {
                         let n = self.effective_node(instance, s);
                         let ni = self.node_index(n);
-                        let _ = self.nodes[ni].kv.free_primary(id);
+                        let _ = self.nodes.kv[ni].free_primary(id);
                     }
-                    self.instances[instance].waiting.push_front(req);
+                    self.instances.waiting[instance].push_front(req);
                 }
             }
         }
-        self.instances[instance].running = keep;
+        self.instances.running[instance] = keep;
         self.pump(instance);
         // the donor's own instance keeps serving throughout
     }
@@ -311,16 +313,16 @@ impl ClusterSim {
     fn swap_replacement(&mut self, instance: usize, donor: NodeId, fresh: NodeId) {
         let fi = self.node_index(fresh);
         let di = self.node_index(donor);
-        self.nodes[fi].alive = true;
-        self.nodes[fi].slow_factor = 1.0; // replacement hardware is healthy
-        self.nodes[fi].kv =
-            NodeKv::new(fresh, self.cfg.serving.kv_capacity_blocks, self.cfg.serving.page_size);
-        let running: Vec<usize> = self.instances[instance].running.clone();
+        // replacement hardware is healthy; the dead slot had nothing
+        // queued or in service
+        self.nodes
+            .fresh(fi, fresh, self.cfg.serving.kv_capacity_blocks, self.cfg.serving.page_size);
+        let running: Vec<usize> = self.instances.running[instance].clone();
         for req in running {
             let id = self.reqs[req].spec.id;
             let ctx = self.reqs[req].context_tokens();
-            if self.nodes[di].kv.free_primary(id).is_ok() {
-                let _ = self.nodes[fi].kv.grow_primary(id, ctx);
+            if self.nodes.kv[di].free_primary(id).is_ok() {
+                let _ = self.nodes.kv[fi].grow_primary(id, ctx);
             }
         }
         self.pump(instance);
@@ -331,12 +333,8 @@ impl ClusterSim {
         for s in 0..self.cfg.cluster.n_stages {
             let id = NodeId::new(instance, s);
             let ni = self.node_index(id);
-            self.nodes[ni].alive = true;
-            self.nodes[ni].slow_factor = 1.0;
-            self.nodes[ni].kv =
-                NodeKv::new(id, self.cfg.serving.kv_capacity_blocks, self.cfg.serving.page_size);
-            self.nodes[ni].current = None;
-            self.nodes[ni].queue.clear();
+            self.nodes
+                .fresh(ni, id, self.cfg.serving.kv_capacity_blocks, self.cfg.serving.page_size);
         }
     }
 
@@ -344,12 +342,12 @@ impl ClusterSim {
 
     fn failure_inject(&mut self, node: NodeId) {
         let ni = self.node_index(node);
-        if !self.nodes[ni].alive {
+        if !self.nodes.alive[ni] {
             return;
         }
-        self.nodes[ni].alive = false;
-        self.nodes[ni].current = None; // in-service pass lost
-        self.nodes[ni].queue.clear();
+        self.nodes.alive[ni] = false;
+        self.nodes.current[ni] = None; // in-service pass lost
+        self.nodes.queue[ni].clear();
         // the membership layer notices after the heartbeat timeout
         self.q
             .push(self.now + self.cfg.timing.detect_s, Event::FailureDetect { node });
@@ -363,12 +361,14 @@ impl ClusterSim {
     fn node_rejoin(&mut self, node: NodeId) {
         use crate::coordinator::PipelineState;
         let ni = self.node_index(node);
-        if !self.nodes[ni].alive {
-            self.nodes[ni].alive = true;
-            self.nodes[ni].kv =
+        if !self.nodes.alive[ni] {
+            // NOT NodeTable::fresh: a process restart does not cure
+            // fail-slow hardware, so slow_factor deliberately survives
+            self.nodes.alive[ni] = true;
+            self.nodes.kv[ni] =
                 NodeKv::new(node, self.cfg.serving.kv_capacity_blocks, self.cfg.serving.page_size);
-            self.nodes[ni].current = None;
-            self.nodes[ni].queue.clear();
+            self.nodes.current[ni] = None;
+            self.nodes.queue[ni].clear();
             if !self.cp.health().is_dead(node) {
                 // the blip was shorter than the heartbeat timeout — the
                 // coordinator never noticed (the detection retracts). The
@@ -391,7 +391,7 @@ impl ClusterSim {
 
     fn slow_start(&mut self, node: NodeId, factor: f64) {
         let ni = self.node_index(node);
-        self.nodes[ni].slow_factor = factor;
+        self.nodes.slow_factor[ni] = factor;
         // a sustained slowdown trips the monitoring layer's windowed
         // pass-time signal after `straggler_detect_s`
         if factor >= STRAGGLER_FACTOR {
@@ -404,14 +404,14 @@ impl ClusterSim {
 
     fn slow_end(&mut self, node: NodeId) {
         let ni = self.node_index(node);
-        self.nodes[ni].slow_factor = 1.0;
+        self.nodes.slow_factor[ni] = 1.0;
     }
 
     fn straggler_notice(&mut self, node: NodeId) {
         let ni = self.node_index(node);
         // only report if the node is still alive and still slow (a kill
         // or a `SlowEnd` in the detection window retracts the signal)
-        if self.nodes[ni].alive && self.nodes[ni].slow_factor >= STRAGGLER_FACTOR {
+        if self.nodes.alive[ni] && self.nodes.slow_factor[ni] >= STRAGGLER_FACTOR {
             self.control(Ctl::StragglerDetected { node });
         }
     }
@@ -445,7 +445,7 @@ impl ClusterSim {
                 Event::StageDone { node } => self.stage_done(node),
                 Event::PassDone { pass } => {
                     let pp = &self.passes[pass];
-                    if pp.epoch == self.instances[pp.instance].epoch {
+                    if pp.epoch == self.instances.epoch[pp.instance] {
                         self.finish_pass(pass);
                     }
                 }
@@ -454,7 +454,7 @@ impl ClusterSim {
                     // a flap shorter than the heartbeat timeout retracts
                     // the detection: heartbeats resumed before the miss
                     // count declared the node dead
-                    if !self.nodes[self.node_index(node)].alive {
+                    if !self.nodes.alive[self.node_index(node)] {
                         self.control(Ctl::HeartbeatMissed { node });
                     }
                 }

@@ -1,11 +1,19 @@
-//! The simulator's event queue: a time-ordered heap with a deterministic
-//! FIFO tiebreak (events at equal timestamps fire in scheduling order).
+//! The simulator's event queue: a time-ordered priority queue with a
+//! deterministic FIFO tiebreak (events at equal timestamps fire in
+//! scheduling order) over a runtime-selectable backend
+//! ([`crate::config::QueueKind`]): the historical `BinaryHeap` or the
+//! hierarchical timing wheel in [`super::timeq`]. The two are proven
+//! pop-for-pop identical (`rust/tests/event_queue_props.rs`,
+//! `rust/tests/perf_equivalence.rs`), so the choice is purely a
+//! throughput knob.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use crate::config::NodeId;
+use crate::config::{NodeId, QueueKind};
 use crate::coordinator::control::Wake;
+
+use super::timeq::TimingWheel;
 
 /// Everything that can happen in the cluster simulation.
 ///
@@ -50,15 +58,23 @@ pub enum Event {
 }
 
 #[derive(Debug)]
-struct Entry {
-    t: f64,
-    seq: u64,
-    ev: Event,
+pub(crate) struct Entry {
+    pub(crate) t: f64,
+    pub(crate) seq: u64,
+    pub(crate) ev: Event,
+}
+
+/// Chronological total order on entries — ascending `(t, seq)` under
+/// [`f64::total_cmp`]. This is THE determinism contract: both backends
+/// pop in exactly this order, and the FIFO `seq` tiebreak makes it
+/// total (no two entries share a key).
+pub(crate) fn chrono(a: &Entry, b: &Entry) -> Ordering {
+    a.t.total_cmp(&b.t).then(a.seq.cmp(&b.seq))
 }
 
 impl PartialEq for Entry {
     fn eq(&self, other: &Self) -> bool {
-        self.t.total_cmp(&other.t) == Ordering::Equal && self.seq == other.seq
+        chrono(self, other) == Ordering::Equal
     }
 }
 impl Eq for Entry {}
@@ -69,53 +85,117 @@ impl PartialOrd for Entry {
 }
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap: earlier time first, then lower seq (FIFO).
-        // `total_cmp` keeps Ord a lawful total order (push() rejects
-        // non-finite timestamps, but the comparator must not be able to
-        // panic or violate transitivity regardless).
-        other.t.total_cmp(&self.t).then(other.seq.cmp(&self.seq))
+        // min-heap: reversed chrono order. `total_cmp` keeps Ord a
+        // lawful total order (push() rejects non-finite timestamps, but
+        // the comparator must not be able to panic or violate
+        // transitivity regardless).
+        chrono(other, self)
     }
 }
 
-/// Deterministic time-ordered event queue.
-#[derive(Debug, Default)]
+#[derive(Debug)]
+enum Backend {
+    Heap(BinaryHeap<Entry>),
+    Wheel(TimingWheel),
+}
+
+/// Deterministic time-ordered event queue over a selectable backend.
+///
+/// Constructors default to [`QueueKind::Heap`]; the sim picks the
+/// backend from [`crate::config::SimTimingConfig::queue`]
+/// (CLI `--queue heap|wheel`).
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Entry>,
+    backend: Backend,
     seq: u64,
+    len: usize,
+    /// Causality watermark: timestamp of the most recently popped
+    /// entry. Virtual time never runs backwards past it.
+    last_t: f64,
     pub processed: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl EventQueue {
     pub fn new() -> Self {
-        Self::default()
+        Self::new_kind(QueueKind::default())
     }
 
-    /// Pre-size the backing heap. [`crate::sim::ClusterSim`] reserves the
-    /// whole trace up front so million-event runs never regrow mid-loop.
+    pub fn new_kind(kind: QueueKind) -> Self {
+        Self::with_capacity_kind(kind, 0)
+    }
+
+    /// Pre-size the backing store. [`crate::sim::ClusterSim`] reserves
+    /// the whole trace up front so million-event runs never regrow
+    /// mid-loop. (The wheel's buckets size themselves; pre-reservation
+    /// only matters for the heap.)
     pub fn with_capacity(n: usize) -> Self {
-        Self { heap: BinaryHeap::with_capacity(n), seq: 0, processed: 0 }
+        Self::with_capacity_kind(QueueKind::default(), n)
+    }
+
+    pub fn with_capacity_kind(kind: QueueKind, n: usize) -> Self {
+        let backend = match kind {
+            QueueKind::Heap => Backend::Heap(BinaryHeap::with_capacity(n)),
+            QueueKind::Wheel => Backend::Wheel(TimingWheel::new()),
+        };
+        Self { backend, seq: 0, len: 0, last_t: f64::NEG_INFINITY, processed: 0 }
+    }
+
+    /// Which backend this queue runs on.
+    pub fn kind(&self) -> QueueKind {
+        match self.backend {
+            Backend::Heap(_) => QueueKind::Heap,
+            Backend::Wheel(_) => QueueKind::Wheel,
+        }
     }
 
     pub fn push(&mut self, t: f64, ev: Event) {
-        // a NaN/inf deadline would silently corrupt the heap order (or
+        // a NaN/inf deadline would silently corrupt the queue order (or
         // park an event at t=∞ forever): refuse it in release builds too
         assert!(t.is_finite(), "non-finite event timestamp {t}");
-        self.heap.push(Entry { t, seq: self.seq, ev });
+        // A deadline earlier than the last popped time is a causality
+        // violation: the event would fire in the simulator's past.
+        // Catch it loudly in debug builds; in release, saturate to
+        // "now" so time order stays intact instead of silently
+        // delivering an event out of order. Applied here — before the
+        // backend — so both backends see the identical timestamp.
+        debug_assert!(
+            t >= self.last_t,
+            "causality violation: push at t={t} before last pop at t={}",
+            self.last_t
+        );
+        let t = if t < self.last_t { self.last_t } else { t };
+        let e = Entry { t, seq: self.seq, ev };
         self.seq += 1;
+        self.len += 1;
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(e),
+            Backend::Wheel(w) => w.push(e),
+        }
     }
 
     pub fn pop(&mut self) -> Option<(f64, Event)> {
-        let e = self.heap.pop()?;
+        let e = match &mut self.backend {
+            Backend::Heap(h) => h.pop(),
+            Backend::Wheel(w) => w.pop(),
+        }?;
         self.processed += 1;
+        self.len -= 1;
+        self.last_t = e.t;
         Some((e.t, e.ev))
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 }
 
@@ -123,41 +203,117 @@ impl EventQueue {
 mod tests {
     use super::*;
 
+    fn kinds() -> [QueueKind; 2] {
+        [QueueKind::Heap, QueueKind::Wheel]
+    }
+
     #[test]
     fn time_ordering() {
-        let mut q = EventQueue::new();
-        q.push(2.0, Event::Sample);
-        q.push(1.0, Event::Arrival { req: 0 });
-        q.push(3.0, Event::Arrival { req: 1 });
-        assert_eq!(q.pop().unwrap().0, 1.0);
-        assert_eq!(q.pop().unwrap().0, 2.0);
-        assert_eq!(q.pop().unwrap().0, 3.0);
-        assert!(q.pop().is_none());
+        for kind in kinds() {
+            let mut q = EventQueue::new_kind(kind);
+            q.push(2.0, Event::Sample);
+            q.push(1.0, Event::Arrival { req: 0 });
+            q.push(3.0, Event::Arrival { req: 1 });
+            assert_eq!(q.pop().unwrap().0, 1.0, "{kind:?}");
+            assert_eq!(q.pop().unwrap().0, 2.0, "{kind:?}");
+            assert_eq!(q.pop().unwrap().0, 3.0, "{kind:?}");
+            assert!(q.pop().is_none(), "{kind:?}");
+        }
     }
 
     #[test]
     fn fifo_tiebreak_at_equal_time() {
-        let mut q = EventQueue::new();
-        for i in 0..10 {
-            q.push(5.0, Event::Arrival { req: i });
-        }
-        for i in 0..10 {
-            match q.pop().unwrap().1 {
-                Event::Arrival { req } => assert_eq!(req, i),
-                _ => panic!(),
+        for kind in kinds() {
+            let mut q = EventQueue::new_kind(kind);
+            for i in 0..10 {
+                q.push(5.0, Event::Arrival { req: i });
+            }
+            for i in 0..10 {
+                match q.pop().unwrap().1 {
+                    Event::Arrival { req } => assert_eq!(req, i, "{kind:?}"),
+                    _ => panic!(),
+                }
             }
         }
     }
 
     #[test]
     fn interleaved_push_pop() {
+        for kind in kinds() {
+            let mut q = EventQueue::new_kind(kind);
+            q.push(1.0, Event::Sample);
+            assert_eq!(q.pop().unwrap().0, 1.0, "{kind:?}");
+            q.push(1.5, Event::Sample);
+            q.push(1.25, Event::Sample);
+            assert_eq!(q.pop().unwrap().0, 1.25, "{kind:?}");
+            assert_eq!(q.len(), 1, "{kind:?}");
+            assert_eq!(q.processed, 2, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn negative_zero_orders_before_zero() {
+        for kind in kinds() {
+            let mut q = EventQueue::new_kind(kind);
+            q.push(0.0, Event::Arrival { req: 0 });
+            q.push(-0.0, Event::Arrival { req: 1 });
+            // total_cmp: -0.0 < 0.0, despite pushing it second
+            assert_eq!(q.pop().unwrap().0.to_bits(), (-0.0f64).to_bits(), "{kind:?}");
+            assert_eq!(q.pop().unwrap().0.to_bits(), 0.0f64.to_bits(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn far_future_deadlines_cross_the_ladder() {
+        for kind in kinds() {
+            let mut q = EventQueue::new_kind(kind);
+            q.push(7200.0, Event::Sample); // MTTR-scale wake
+            q.push(0.5, Event::Arrival { req: 0 });
+            q.push(90.0, Event::Arrival { req: 1 });
+            assert_eq!(q.pop().unwrap().0, 0.5, "{kind:?}");
+            assert_eq!(q.pop().unwrap().0, 90.0, "{kind:?}");
+            assert_eq!(q.pop().unwrap().0, 7200.0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "causality violation")]
+    fn heap_rejects_pre_causal_push_in_debug() {
+        let mut q = EventQueue::new_kind(QueueKind::Heap);
+        q.push(5.0, Event::Sample);
+        q.pop();
+        q.push(3.0, Event::Sample);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "causality violation")]
+    fn wheel_rejects_pre_causal_push_in_debug() {
+        let mut q = EventQueue::new_kind(QueueKind::Wheel);
+        q.push(5.0, Event::Sample);
+        q.pop();
+        q.push(3.0, Event::Sample);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn pre_causal_push_saturates_to_now_in_release() {
+        for kind in kinds() {
+            let mut q = EventQueue::new_kind(kind);
+            q.push(5.0, Event::Sample);
+            assert_eq!(q.pop().unwrap().0, 5.0);
+            q.push(3.0, Event::Arrival { req: 0 });
+            let (t, ev) = q.pop().unwrap();
+            assert_eq!(t, 5.0, "{kind:?}: pre-causal deadline must saturate to now");
+            assert_eq!(ev, Event::Arrival { req: 0 });
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event timestamp")]
+    fn rejects_non_finite_time() {
         let mut q = EventQueue::new();
-        q.push(1.0, Event::Sample);
-        assert_eq!(q.pop().unwrap().0, 1.0);
-        q.push(0.5, Event::Sample);
-        q.push(0.25, Event::Sample);
-        assert_eq!(q.pop().unwrap().0, 0.25);
-        assert_eq!(q.len(), 1);
-        assert_eq!(q.processed, 2);
+        q.push(f64::NAN, Event::Sample);
     }
 }

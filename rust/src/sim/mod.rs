@@ -62,6 +62,7 @@
 mod cluster;
 mod events;
 mod state;
+mod timeq;
 
 pub use cluster::{ClusterSim, ControlRecord, LogMode, SimResult};
 pub use events::{Event, EventQueue};

@@ -5,6 +5,13 @@
 //! [`crate::coordinator::control::ControlPlane`]; nothing in this file
 //! decides *where* traffic goes or *how* a failure is handled — it only
 //! models how long the decided work takes and what memory it occupies.
+//!
+//! Per-instance and per-node state is laid out as dense
+//! structure-of-arrays tables ([`InstanceTable`], [`NodeTable`]) indexed
+//! by instance id / flat node index: the hot handlers touch one or two
+//! fields of many entities per event (epoch checks, alive checks, slow
+//! factors), and parallel columns keep those scans on adjacent memory
+//! instead of striding over whole structs.
 
 use std::collections::VecDeque;
 
@@ -70,67 +77,92 @@ impl ReqState {
     }
 }
 
-/// Per-node simulated executor: FIFO single server + KV accounting.
+/// Per-node simulated executor state (FIFO single server + KV
+/// accounting) as parallel columns indexed by the flat node index
+/// ([`ClusterSim::node_index`]). The node's identity lives in its
+/// [`NodeKv`]; no separate id column is needed.
 #[derive(Debug)]
-pub(crate) struct NodeSim {
-    pub(crate) id: NodeId,
-    pub(crate) alive: bool,
-    pub(crate) kv: NodeKv,
+pub(crate) struct NodeTable {
+    pub(crate) alive: Vec<bool>,
+    pub(crate) kv: Vec<NodeKv>,
     /// (pass index, remaining stage) being serviced, if busy.
-    pub(crate) current: Option<usize>,
-    pub(crate) queue: VecDeque<usize>,
+    pub(crate) current: Vec<Option<usize>>,
+    pub(crate) queue: Vec<VecDeque<usize>>,
     /// Fail-slow multiplier on this node's stage service time (1.0 =
     /// healthy; a straggler scenario raises it for a window).
-    pub(crate) slow_factor: f64,
+    pub(crate) slow_factor: Vec<f64>,
 }
 
-impl NodeSim {
-    pub(crate) fn new(id: NodeId, capacity_blocks: usize, page_size: usize) -> Self {
+impl NodeTable {
+    pub(crate) fn new(
+        ids: impl Iterator<Item = NodeId>,
+        capacity_blocks: usize,
+        page_size: usize,
+    ) -> Self {
+        let kv: Vec<NodeKv> =
+            ids.map(|id| NodeKv::new(id, capacity_blocks, page_size)).collect();
+        let n = kv.len();
         Self {
-            id,
-            alive: true,
-            kv: NodeKv::new(id, capacity_blocks, page_size),
-            current: None,
-            queue: VecDeque::new(),
-            slow_factor: 1.0,
+            alive: vec![true; n],
+            kv,
+            current: vec![None; n],
+            queue: (0..n).map(|_| VecDeque::new()).collect(),
+            slow_factor: vec![1.0; n],
         }
+    }
+
+    /// Reset node `ni` to a healthy, empty executor (fresh KV, nothing
+    /// queued): used when a process rejoins or a replacement swaps in.
+    pub(crate) fn fresh(
+        &mut self,
+        ni: usize,
+        id: NodeId,
+        capacity_blocks: usize,
+        page_size: usize,
+    ) {
+        self.alive[ni] = true;
+        self.slow_factor[ni] = 1.0;
+        self.kv[ni] = NodeKv::new(id, capacity_blocks, page_size);
+        self.current[ni] = None;
+        self.queue[ni].clear();
     }
 }
 
-/// Per-instance serving mechanics. Availability state is NOT here — the
-/// control plane owns it ([`ClusterSim`] queries
-/// `ControlPlane::state`); this is only the scheduler bookkeeping.
+/// Per-instance serving mechanics as parallel columns indexed by
+/// instance id. Availability state is NOT here — the control plane owns
+/// it ([`ClusterSim`] queries `ControlPlane::state`); this is only the
+/// scheduler bookkeeping.
 #[derive(Debug)]
-pub(crate) struct InstanceSim {
-    pub(crate) waiting: VecDeque<usize>,
-    pub(crate) running: Vec<usize>,
+pub(crate) struct InstanceTable {
+    pub(crate) waiting: Vec<VecDeque<usize>>,
+    pub(crate) running: Vec<Vec<usize>>,
     /// Is a decode iteration currently traversing the stages?
-    pub(crate) decode_inflight: bool,
+    pub(crate) decode_inflight: Vec<bool>,
     /// Prefill passes currently in the pipeline.
-    pub(crate) prefills_inflight: usize,
+    pub(crate) prefills_inflight: Vec<usize>,
     /// Requests those passes belong to (recovered on pass abort).
-    pub(crate) prefilling: Vec<usize>,
-    pub(crate) iter_count: u64,
-    pub(crate) epoch: u64,
+    pub(crate) prefilling: Vec<Vec<usize>>,
+    pub(crate) iter_count: Vec<u64>,
+    pub(crate) epoch: Vec<u64>,
     /// Current slow congestion multiplier (redrawn periodically).
-    pub(crate) slow_level: f64,
+    pub(crate) slow_level: Vec<f64>,
     /// The control plane flagged this decode iteration for a replica
     /// flush (consumed by the decode completion handler).
-    pub(crate) flush_due: bool,
+    pub(crate) flush_due: Vec<bool>,
 }
 
-impl Default for InstanceSim {
-    fn default() -> Self {
+impl InstanceTable {
+    pub(crate) fn new(n: usize) -> Self {
         Self {
-            waiting: VecDeque::new(),
-            running: Vec::new(),
-            decode_inflight: false,
-            prefills_inflight: 0,
-            prefilling: Vec::new(),
-            iter_count: 0,
-            epoch: 0,
-            slow_level: 1.0,
-            flush_due: false,
+            waiting: (0..n).map(|_| VecDeque::new()).collect(),
+            running: (0..n).map(|_| Vec::new()).collect(),
+            decode_inflight: vec![false; n],
+            prefills_inflight: vec![0; n],
+            prefilling: (0..n).map(|_| Vec::new()).collect(),
+            iter_count: vec![0; n],
+            epoch: vec![0; n],
+            slow_level: vec![1.0; n],
+            flush_due: vec![false; n],
         }
     }
 }
@@ -168,7 +200,7 @@ impl ClusterSim {
                 t.prefill_stage_base_ms + t.prefill_stage_per_token_ms * toks
             }
         };
-        let slow = self.instances[instance].slow_level * self.nodes[ni].slow_factor;
+        let slow = self.instances.slow_level[instance] * self.nodes.slow_factor[ni];
         base * slow * self.rng.lognormal_jitter(t.jitter_sigma)
     }
 
@@ -183,7 +215,7 @@ impl ClusterSim {
     }
 
     pub(crate) fn start_pass(&mut self, instance: usize, kind: PassKind) {
-        let epoch = self.instances[instance].epoch;
+        let epoch = self.instances.epoch[instance];
         self.passes.push(Pass { instance, kind, epoch });
         let pass = self.passes.len() - 1;
         let hop = self.hop_ms(instance, 0) / 1000.0;
@@ -198,26 +230,27 @@ impl ClusterSim {
             return;
         }
         // admit waiting prefills
-        while self.instances[instance].prefills_inflight < self.max_prefills {
-            let inst = &self.instances[instance];
-            if inst.waiting.is_empty()
-                || inst.running.len() + inst.prefills_inflight >= self.cfg.serving.max_batch
+        while self.instances.prefills_inflight[instance] < self.max_prefills {
+            if self.instances.waiting[instance].is_empty()
+                || self.instances.running[instance].len()
+                    + self.instances.prefills_inflight[instance]
+                    >= self.cfg.serving.max_batch
             {
                 break;
             }
-            let req = *self.instances[instance].waiting.front().unwrap();
+            let req = *self.instances.waiting[instance].front().unwrap();
             if !self.try_admit_kv(instance, req) {
                 break; // KV pressure: head-of-line waits for space
             }
-            self.instances[instance].waiting.pop_front();
-            self.instances[instance].prefills_inflight += 1;
-            self.instances[instance].prefilling.push(req);
+            self.instances.waiting[instance].pop_front();
+            self.instances.prefills_inflight[instance] += 1;
+            self.instances.prefilling[instance].push(req);
             self.start_pass(instance, PassKind::Prefill { req });
         }
         // keep decoding
-        let inst = &mut self.instances[instance];
-        if !inst.decode_inflight && !inst.running.is_empty() {
-            inst.decode_inflight = true;
+        if !self.instances.decode_inflight[instance] && !self.instances.running[instance].is_empty()
+        {
+            self.instances.decode_inflight[instance] = true;
             self.start_pass(instance, PassKind::Decode);
         }
     }
@@ -230,11 +263,11 @@ impl ClusterSim {
         for s in 0..self.cfg.cluster.n_stages {
             let n = self.effective_node(instance, s);
             let ni = self.node_index(n);
-            match self.nodes[ni].kv.grow_primary(id, ctx) {
+            match self.nodes.kv[ni].grow_primary(id, ctx) {
                 Ok(_) => grown.push(ni),
                 Err(KvError::OutOfMemory) => {
                     for &g in &grown {
-                        let _ = self.nodes[g].kv.free_primary(id);
+                        let _ = self.nodes.kv[g].free_primary(id);
                     }
                     return false;
                 }
@@ -246,50 +279,50 @@ impl ClusterSim {
 
     pub(crate) fn pass_arrive(&mut self, pass: usize, stage: usize) {
         let p = &self.passes[pass];
-        if p.epoch != self.instances[p.instance].epoch {
+        if p.epoch != self.instances.epoch[p.instance] {
             return; // stale pass from before a failure
         }
         let node = self.effective_node(p.instance, stage);
         let ni = self.node_index(node);
-        if !self.nodes[ni].alive {
+        if !self.nodes.alive[ni] {
             // the stage server is gone; the pass stalls here until the
             // failure is detected and the epoch advances (it is then
             // dropped). Nothing to schedule.
             return;
         }
-        self.nodes[ni].queue.push_back(pass * 16 + stage);
+        self.nodes.queue[ni].push_back(pass * 16 + stage);
         self.maybe_serve(ni);
     }
 
     pub(crate) fn maybe_serve(&mut self, ni: usize) {
-        if self.nodes[ni].current.is_some() || !self.nodes[ni].alive {
+        if self.nodes.current[ni].is_some() || !self.nodes.alive[ni] {
             return;
         }
-        let Some(item) = self.nodes[ni].queue.pop_front() else {
+        let Some(item) = self.nodes.queue[ni].pop_front() else {
             return;
         };
         let (pass, _stage) = (item / 16, item % 16);
         // stale check at service start too
         let p = &self.passes[pass];
-        if p.epoch != self.instances[p.instance].epoch {
+        if p.epoch != self.instances.epoch[p.instance] {
             return self.maybe_serve(ni);
         }
         let kind = p.kind;
         let inst = p.instance;
         let ms = self.service_ms(inst, ni, kind);
-        self.nodes[ni].current = Some(item);
+        self.nodes.current[ni] = Some(item);
         self.q.push(self.now + ms / 1000.0, Event::StageDone { node: ni });
     }
 
     pub(crate) fn stage_done(&mut self, ni: usize) {
-        let Some(item) = self.nodes[ni].current.take() else {
+        let Some(item) = self.nodes.current[ni].take() else {
             return; // node died mid-service; cleared elsewhere
         };
         let (pass, stage) = (item / 16, item % 16);
         self.maybe_serve(ni);
 
         let p = self.passes[pass];
-        if p.epoch != self.instances[p.instance].epoch {
+        if p.epoch != self.instances.epoch[p.instance] {
             return;
         }
         // background replication overlaps communication with compute on a
@@ -324,8 +357,8 @@ impl ClusterSim {
         let instance = p.instance;
         match p.kind {
             PassKind::Prefill { req } => {
-                self.instances[instance].prefills_inflight -= 1;
-                self.instances[instance].prefilling.retain(|&r| r != req);
+                self.instances.prefills_inflight[instance] -= 1;
+                self.instances.prefilling[instance].retain(|&r| r != req);
                 let r = &mut self.reqs[req];
                 if !r.done {
                     if r.first_token_s.is_none() {
@@ -338,23 +371,22 @@ impl ClusterSim {
                     if r.tokens_out >= r.spec.output_len {
                         self.complete(instance, req);
                     } else {
-                        self.instances[instance].running.push(req);
+                        self.instances.running[instance].push(req);
                     }
                 }
                 // else: completed elsewhere during migration churn
             }
             PassKind::Decode => {
-                self.instances[instance].decode_inflight = false;
-                self.instances[instance].iter_count += 1;
-                if self.instances[instance].iter_count % self.cfg.timing.slow_epoch_iters == 0
-                {
-                    self.instances[instance].slow_level =
+                self.instances.decode_inflight[instance] = false;
+                self.instances.iter_count[instance] += 1;
+                if self.instances.iter_count[instance] % self.cfg.timing.slow_epoch_iters == 0 {
+                    self.instances.slow_level[instance] =
                         self.rng.lognormal_jitter(self.cfg.timing.slow_sigma);
                 }
                 // the control plane owns the replication cadence
                 self.control(Ctl::PassCompleted { instance, decode: true });
-                let flush = std::mem::take(&mut self.instances[instance].flush_due);
-                let running = std::mem::take(&mut self.instances[instance].running);
+                let flush = std::mem::take(&mut self.instances.flush_due[instance]);
+                let running = std::mem::take(&mut self.instances.running[instance]);
                 let mut keep = Vec::with_capacity(running.len());
                 for req in running {
                     self.reqs[req].tokens_out += 1;
@@ -377,7 +409,7 @@ impl ClusterSim {
                     }
                     keep.push(req);
                 }
-                self.instances[instance].running = keep;
+                self.instances.running[instance] = keep;
             }
         }
         self.pump(instance);
@@ -389,7 +421,7 @@ impl ClusterSim {
         for s in 0..self.cfg.cluster.n_stages {
             let n = self.effective_node(instance, s);
             let ni = self.node_index(n);
-            if self.nodes[ni].kv.grow_primary(id, ctx).is_err() {
+            if self.nodes.kv[ni].grow_primary(id, ctx).is_err() {
                 return false;
             }
         }
@@ -410,7 +442,7 @@ impl ClusterSim {
                 continue;
             };
             let ti = self.node_index(tgt);
-            if !self.nodes[ti].kv.write_replica(id, src, ctx, self.now) {
+            if !self.nodes.kv[ti].write_replica(id, src, ctx, self.now) {
                 self.replica_stalls += 1;
                 all_ok = false;
             }
@@ -425,14 +457,14 @@ impl ClusterSim {
         for s in 0..self.cfg.cluster.n_stages {
             let n = self.effective_node(instance, s);
             let ni = self.node_index(n);
-            let _ = self.nodes[ni].kv.free_primary(id);
+            let _ = self.nodes.kv[ni].free_primary(id);
         }
         // replicas are swept cluster-wide: targets may have changed across
         // replans and a targeted sweep measured <5% faster (§Perf) — the
         // exhaustive sweep can never leak blocks.
         for node in self.cfg.cluster.nodes() {
             let ni = self.node_index(node);
-            self.nodes[ni].kv.drop_replica(id);
+            self.nodes.kv[ni].drop_replica(id);
         }
     }
 
@@ -461,16 +493,22 @@ impl ClusterSim {
         let r = &mut self.reqs[req];
         r.resume_ctx = r.context_tokens();
         let id = r.spec.id;
-        self.instances[instance].waiting.push_front(req);
+        self.instances.waiting[instance].push_front(req);
         // its replicas were swept: the synced watermark is gone
         self.control(Ctl::ReplicaSynced { req: id, tokens: 0 });
     }
 
     pub(crate) fn sample_util(&mut self) {
-        let alive: Vec<&NodeSim> = self.nodes.iter().filter(|n| n.alive).collect();
-        if !alive.is_empty() {
-            let u = alive.iter().map(|n| n.kv.utilization()).sum::<f64>() / alive.len() as f64;
-            self.util_samples.push((self.now, u));
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for (kv, &alive) in self.nodes.kv.iter().zip(&self.nodes.alive) {
+            if alive {
+                sum += kv.utilization();
+                n += 1;
+            }
+        }
+        if n > 0 {
+            self.util_samples.push((self.now, sum / n as f64));
         }
         // stop sampling once all requests are done (lets the queue drain)
         if self.reqs.iter().any(|r| !r.done) {

@@ -1,0 +1,257 @@
+//! Hierarchical timing-wheel / calendar-queue backend for the
+//! simulator's [`super::EventQueue`].
+//!
+//! Layout (DESIGN.md §6):
+//!
+//! * **Near wheel** — [`SLOTS`] fixed-width buckets of
+//!   [`BUCKET_WIDTH_S`] seconds (2⁻⁶ s), covering one *rung* of
+//!   [`RUNG_SPAN_S`] = 64 s. Push is an O(1) append plus an occupancy
+//!   bit; an occupancy bitmap scan finds the next non-empty bucket.
+//! * **Overflow ladder** — deadlines beyond the near wheel's rung
+//!   (far-future recovery timers, MTTR wakes, the tail of a long
+//!   arrival trace) collect in per-rung vectors sorted by rung index.
+//!   When the near wheel drains, the lowest rung is distributed into
+//!   it in one O(rung) pass, so each entry is touched a constant
+//!   number of times end to end.
+//!
+//! ## Determinism contract
+//!
+//! Pop order must be **byte-identical** to the `BinaryHeap` backend:
+//! ascending `(t, seq)` under [`f64::total_cmp`] with the FIFO
+//! sequence tiebreak. Three properties carry the proof:
+//!
+//! 1. [`abs_bucket`] is monotone non-decreasing in `t` (scale by a
+//!    positive power of two, `floor`, saturating cast), so an earlier
+//!    timestamp can never land in a later bucket, and equal
+//!    timestamps — including `-0.0` vs `0.0`, which `total_cmp`
+//!    distinguishes but arithmetic does not — always share a bucket.
+//! 2. Each bucket is sorted by `(total_cmp(t), seq)` when it becomes
+//!    the drain buffer, reproducing the heap's order within a bucket.
+//! 3. A push landing at or before the bucket currently draining (only
+//!    possible for deadlines at the causality floor — see
+//!    [`super::EventQueue::push`]) is merged into the drain buffer at
+//!    its exact chrono position, so it pops precisely where the heap
+//!    would pop it.
+//!
+//! The contract is enforced by the randomized differential fuzzer in
+//! `rust/tests/event_queue_props.rs` and the whole-simulation
+//! equivalence suite in `rust/tests/perf_equivalence.rs`.
+
+use std::cmp::Ordering;
+
+use super::events::{chrono, Entry};
+
+/// Buckets per rung of the near wheel.
+pub(crate) const SLOTS: usize = 4096;
+const SLOT_WORDS: usize = SLOTS / 64;
+
+/// Near-bucket width in seconds (2⁻⁶ s ≈ 15.6 ms — a few sim events
+/// per bucket at steady state, so drain sorts stay tiny). A power of
+/// two keeps `t / width` an exact scaling for dyadic timestamps.
+pub(crate) const BUCKET_WIDTH_S: f64 = 1.0 / 64.0;
+
+/// Seconds covered by one rung of the near wheel.
+pub(crate) const RUNG_SPAN_S: f64 = SLOTS as f64 * BUCKET_WIDTH_S;
+
+/// Absolute bucket index of a timestamp: monotone non-decreasing in
+/// `t` for all finite inputs. The float→int cast saturates, so
+/// astronomically large magnitudes collapse into the extreme rungs —
+/// still correct, because drain order is decided by the exact
+/// `(t, seq)` sort, never by the bucket index.
+fn abs_bucket(t: f64) -> i128 {
+    (t * (1.0 / BUCKET_WIDTH_S)).floor() as i128
+}
+
+/// One ladder rung: every queued entry whose deadline falls within the
+/// 64 s span starting at `idx * RUNG_SPAN_S`.
+#[derive(Debug)]
+struct Rung {
+    idx: i128,
+    entries: Vec<Entry>,
+}
+
+/// The timing-wheel backend. See the module docs for the layout and
+/// the determinism contract.
+#[derive(Debug)]
+pub(crate) struct TimingWheel {
+    /// Near wheel: bucket `s` holds entries with
+    /// `abs_bucket(t) == rung * SLOTS + s`.
+    buckets: Vec<Vec<Entry>>,
+    /// Occupancy bitmap over `buckets` (bit set ⇔ bucket non-empty).
+    occ: [u64; SLOT_WORDS],
+    /// Rung index the near wheel currently covers (valid once
+    /// `active`).
+    rung: i128,
+    /// The wheel is positioned lazily on the first pop; until then
+    /// every entry lives in the ladder.
+    active: bool,
+    /// Slots below this index are drained for the current rung; a push
+    /// landing below it merges into `drain` instead.
+    scan_from: usize,
+    /// The bucket currently draining, sorted DESCENDING by `(t, seq)`
+    /// so `pop()` takes from the back in chrono order without
+    /// shifting.
+    drain: Vec<Entry>,
+    /// Overflow ladder: future rungs, ascending by index.
+    ladder: Vec<Rung>,
+    len: usize,
+}
+
+impl TimingWheel {
+    pub(crate) fn new() -> Self {
+        Self {
+            buckets: (0..SLOTS).map(|_| Vec::new()).collect(),
+            occ: [0; SLOT_WORDS],
+            rung: 0,
+            active: false,
+            scan_from: 0,
+            drain: Vec::new(),
+            ladder: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub(crate) fn push(&mut self, e: Entry) {
+        self.len += 1;
+        let abs = abs_bucket(e.t);
+        let r = abs.div_euclid(SLOTS as i128);
+        if self.active && r <= self.rung {
+            if r == self.rung {
+                let slot = (abs - r * SLOTS as i128) as usize;
+                if slot >= self.scan_from {
+                    self.buckets[slot].push(e);
+                    self.occ[slot / 64] |= 1 << (slot % 64);
+                    return;
+                }
+            }
+            // At (or, saturated, before) the bucket currently draining:
+            // merge into the sorted buffer at the exact chrono position
+            // so the pop stream matches the heap's.
+            let pos = self.drain.partition_point(|x| chrono(x, &e) == Ordering::Greater);
+            self.drain.insert(pos, e);
+            return;
+        }
+        // future rung, or the wheel is not positioned yet
+        let at = self.ladder.partition_point(|g| g.idx < r);
+        match self.ladder.get_mut(at) {
+            Some(g) if g.idx == r => g.entries.push(e),
+            _ => self.ladder.insert(at, Rung { idx: r, entries: vec![e] }),
+        }
+    }
+
+    pub(crate) fn pop(&mut self) -> Option<Entry> {
+        loop {
+            if let Some(e) = self.drain.pop() {
+                self.len -= 1;
+                return Some(e);
+            }
+            if self.len == 0 {
+                return None;
+            }
+            if self.active {
+                if let Some(slot) = self.next_occupied() {
+                    self.occ[slot / 64] &= !(1u64 << (slot % 64));
+                    self.scan_from = slot + 1;
+                    // recycle the spent drain allocation into the bucket
+                    let bucket = std::mem::take(&mut self.buckets[slot]);
+                    self.buckets[slot] = std::mem::replace(&mut self.drain, bucket);
+                    self.drain.sort_unstable_by(|a, b| chrono(b, a));
+                    continue;
+                }
+            }
+            // Near wheel exhausted (or never positioned): cover the
+            // ladder's lowest rung and distribute it into the buckets.
+            // `len > 0` with an empty wheel guarantees the ladder is
+            // non-empty, because entries live nowhere else.
+            let next = self.ladder.remove(0);
+            self.rung = next.idx;
+            self.scan_from = 0;
+            self.active = true;
+            for e in next.entries {
+                let slot = (abs_bucket(e.t) - next.idx * SLOTS as i128) as usize;
+                self.buckets[slot].push(e);
+                self.occ[slot / 64] |= 1 << (slot % 64);
+            }
+        }
+    }
+
+    /// Lowest occupied near-wheel slot at or after `scan_from`.
+    fn next_occupied(&self) -> Option<usize> {
+        let mut w = self.scan_from / 64;
+        if w >= SLOT_WORDS {
+            return None;
+        }
+        let mut word = self.occ[w] & (!0u64 << (self.scan_from % 64));
+        loop {
+            if word != 0 {
+                return Some(w * 64 + word.trailing_zeros() as usize);
+            }
+            w += 1;
+            if w >= SLOT_WORDS {
+                return None;
+            }
+            word = self.occ[w];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Event;
+
+    fn entry(t: f64, seq: u64) -> Entry {
+        Entry { t, seq, ev: Event::Arrival { req: seq as usize } }
+    }
+
+    #[test]
+    fn bucket_map_is_monotone_and_merges_signed_zero() {
+        assert_eq!(abs_bucket(-0.0), abs_bucket(0.0));
+        assert_eq!(abs_bucket(0.0), 0);
+        assert_eq!(abs_bucket(BUCKET_WIDTH_S), 1);
+        assert_eq!(abs_bucket(RUNG_SPAN_S), SLOTS as i128);
+        assert!(abs_bucket(-1e-12) < abs_bucket(0.0));
+        let mut prev = abs_bucket(-1e9);
+        for i in 0..1000 {
+            let cur = abs_bucket(-1e9 + i as f64 * 2e6);
+            assert!(cur >= prev);
+            prev = cur;
+        }
+        // saturating casts stay ordered at the extremes
+        assert!(abs_bucket(f64::MIN) < abs_bucket(0.0));
+        assert!(abs_bucket(f64::MAX) > abs_bucket(0.0));
+    }
+
+    #[test]
+    fn drains_across_rungs_in_chrono_order() {
+        let mut w = TimingWheel::new();
+        // three rungs apart, pushed out of order, plus duplicates
+        let ts = [200.0, 0.5, 65.0, 0.5, 1e6, 0.015, 65.0];
+        for (i, &t) in ts.iter().enumerate() {
+            w.push(entry(t, i as u64));
+        }
+        let mut sorted: Vec<(f64, u64)> =
+            ts.iter().copied().zip(0u64..).collect();
+        sorted.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for want in sorted {
+            let e = w.pop().unwrap();
+            assert_eq!((e.t, e.seq), want);
+        }
+        assert!(w.pop().is_none());
+    }
+
+    #[test]
+    fn push_into_current_drain_bucket_merges_in_order() {
+        let mut w = TimingWheel::new();
+        w.push(entry(1.0, 0));
+        w.push(entry(1.0 + 1e-4, 2)); // same bucket, later time
+        let first = w.pop().unwrap();
+        assert_eq!(first.seq, 0);
+        // lands in the bucket currently draining, between the popped
+        // entry and the buffered one
+        w.push(entry(1.0 + 1e-5, 3));
+        assert_eq!(w.pop().unwrap().seq, 3);
+        assert_eq!(w.pop().unwrap().seq, 2);
+        assert!(w.pop().is_none());
+    }
+}

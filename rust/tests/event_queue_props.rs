@@ -1,0 +1,207 @@
+//! Differential proof that the timing-wheel event-queue backend is
+//! pop-for-pop identical to the binary heap.
+//!
+//! The seeded fuzzer drives a `QueueKind::Wheel` and a `QueueKind::Heap`
+//! queue through *identical* push/pop interleavings — duplicate
+//! timestamps, sub-bucket spacing, exact bucket/rung boundaries,
+//! far-future overflow deadlines, pop-then-push at the causality floor,
+//! and `-0.0` vs `0.0` — and asserts the `(t, Event)` pop streams are
+//! byte-identical (bit-exact timestamps, same events, same counters)
+//! across ≥1000 seeds. Whole-simulation equivalence lives in
+//! `perf_equivalence.rs`; this file attacks the queue contract directly.
+
+use kevlarflow::config::QueueKind;
+use kevlarflow::sim::{Event, EventQueue};
+use kevlarflow::workload::Pcg32;
+
+/// Near-wheel bucket width (mirrors `sim/timeq.rs`): deltas are built
+/// around it so pushes land inside one bucket, at exact bucket
+/// boundaries, and across rung boundaries (64 s) alike.
+const BUCKET_S: f64 = 1.0 / 64.0;
+
+/// Pop both queues once and assert the streams stay identical.
+/// Returns whether the queues still had an entry.
+fn pop_both(heap: &mut EventQueue, wheel: &mut EventQueue, ctx: &str) -> Option<f64> {
+    let a = heap.pop();
+    let b = wheel.pop();
+    match (&a, &b) {
+        (Some((ta, ea)), Some((tb, eb))) => {
+            assert_eq!(
+                ta.to_bits(),
+                tb.to_bits(),
+                "{ctx}: pop times diverged ({ta} vs {tb})"
+            );
+            assert_eq!(ea, eb, "{ctx}: pop events diverged at t={ta}");
+        }
+        (None, None) => {}
+        _ => panic!("{ctx}: one backend drained early ({a:?} vs {b:?})"),
+    }
+    assert_eq!(heap.len(), wheel.len(), "{ctx}: len diverged");
+    assert_eq!(heap.processed, wheel.processed, "{ctx}: processed diverged");
+    a.map(|(t, _)| t)
+}
+
+/// A timestamp at or after `floor` (the causality watermark), drawn from
+/// a palette that stresses every structural edge of the wheel:
+/// duplicates (delta 0), sub-bucket spacing, exact bucket multiples,
+/// rung-boundary crossings, and far-future ladder deadlines.
+fn gen_t(rng: &mut Pcg32, floor: f64) -> f64 {
+    let base = if floor == f64::NEG_INFINITY { 0.0 } else { floor };
+    match rng.below(8) {
+        0 => base,                                        // duplicate timestamp
+        1 => base + rng.uniform() * 1e-6,                 // sub-bucket jitter
+        2 => base + BUCKET_S * rng.below(5) as f64,       // exact bucket steps
+        3 => (base / BUCKET_S).ceil() * BUCKET_S + BUCKET_S * rng.below(3) as f64, // boundary
+        4 => base + rng.uniform() * 0.4,                  // a few buckets out
+        5 => base + 64.0 * (1 + rng.below(3)) as f64,     // next rungs exactly
+        6 => base + rng.uniform() * 300.0,                // cross-rung spread
+        _ => base + rng.uniform() * 2.0e5,                // deep overflow ladder
+    }
+}
+
+#[test]
+fn fuzz_wheel_and_heap_pop_streams_are_byte_identical() {
+    const SEEDS: u64 = 1200;
+    for seed in 0..SEEDS {
+        let ctx = format!("seed {seed}");
+        let mut rng = Pcg32::new(seed);
+        let mut heap = EventQueue::new_kind(QueueKind::Heap);
+        let mut wheel = EventQueue::new_kind(QueueKind::Wheel);
+        let mut next_req = 0usize;
+        let mut floor = f64::NEG_INFINITY;
+
+        let mut push_both = |heap: &mut EventQueue, wheel: &mut EventQueue, t: f64| {
+            let ev = Event::Arrival { req: next_req };
+            next_req += 1;
+            heap.push(t, ev.clone());
+            wheel.push(t, ev);
+        };
+
+        // phase 1: pre-pop burst (no causality floor yet) with signed
+        // zeros and raw far-future deadlines in the mix
+        for _ in 0..24 {
+            let t = match rng.below(6) {
+                0 => 0.0,
+                1 => -0.0,
+                2 => rng.uniform() * BUCKET_S,
+                3 => BUCKET_S * rng.below(4100) as f64, // across the whole rung + boundary
+                4 => rng.uniform() * 64.0,
+                _ => rng.uniform() * 1.0e6,
+            };
+            push_both(&mut heap, &mut wheel, t);
+        }
+
+        // phase 2: interleaved pop-then-push at and above the moving
+        // causality floor
+        for _ in 0..200 {
+            if rng.below(2) == 0 {
+                if let Some(t) = pop_both(&mut heap, &mut wheel, &ctx) {
+                    floor = t;
+                }
+            } else {
+                // -0.0 stays pushable while the floor sits at 0.0
+                // (arithmetic -0.0 >= 0.0 holds, total_cmp orders it first)
+                let t = if floor == 0.0 && rng.below(8) == 0 {
+                    -0.0
+                } else {
+                    gen_t(&mut rng, floor)
+                };
+                push_both(&mut heap, &mut wheel, t);
+            }
+        }
+
+        // drain: every remaining entry must match
+        while pop_both(&mut heap, &mut wheel, &ctx).is_some() {}
+        assert!(heap.is_empty() && wheel.is_empty(), "{ctx}: drain left entries");
+    }
+}
+
+#[test]
+fn duplicate_timestamp_floods_preserve_fifo_across_backends() {
+    // hundreds of entries in one bucket at the same t, interleaved with
+    // pops: the seq tiebreak must reproduce heap order exactly
+    let mut heap = EventQueue::new_kind(QueueKind::Heap);
+    let mut wheel = EventQueue::new_kind(QueueKind::Wheel);
+    for wave in 0..6 {
+        for i in 0..100 {
+            let ev = Event::PassArrive { pass: wave * 100 + i, stage: i % 4 };
+            heap.push(7.25, ev.clone());
+            wheel.push(7.25, ev);
+        }
+        for _ in 0..40 {
+            pop_both(&mut heap, &mut wheel, "dup-flood");
+        }
+    }
+    while pop_both(&mut heap, &mut wheel, "dup-flood").is_some() {}
+}
+
+#[test]
+fn rung_boundary_and_overflow_ladder_order_matches_heap() {
+    // exact rung edges (k * 64 s), one tick inside, one bucket before,
+    // plus MTTR-scale deadlines pushed in shuffled order
+    let ts = [
+        64.0,
+        64.0 - BUCKET_S,
+        64.0 + 1e-9,
+        128.0,
+        127.984375, // 128 - 1/64
+        0.0,
+        600.0,
+        600.0,
+        4096.0,
+        1.0e6,
+        63.999999,
+        64.015625, // 64 + 1/64
+    ];
+    let mut heap = EventQueue::new_kind(QueueKind::Heap);
+    let mut wheel = EventQueue::new_kind(QueueKind::Wheel);
+    for (i, &t) in ts.iter().enumerate() {
+        let ev = Event::StageDone { node: i };
+        heap.push(t, ev.clone());
+        wheel.push(t, ev);
+    }
+    while pop_both(&mut heap, &mut wheel, "rung-boundary").is_some() {}
+}
+
+#[test]
+fn pop_then_push_at_the_exact_floor_matches_heap() {
+    // pushes landing exactly at the last popped time go into the bucket
+    // currently draining — the wheel must merge them where the heap
+    // would pop them (FIFO after anything already buffered at that t)
+    let mut heap = EventQueue::new_kind(QueueKind::Heap);
+    let mut wheel = EventQueue::new_kind(QueueKind::Wheel);
+    for i in 0..8 {
+        let ev = Event::Arrival { req: i };
+        heap.push(2.0, ev.clone());
+        wheel.push(2.0, ev);
+    }
+    let t = pop_both(&mut heap, &mut wheel, "floor-merge").unwrap();
+    assert_eq!(t, 2.0);
+    for i in 8..12 {
+        let ev = Event::Arrival { req: i };
+        heap.push(2.0, ev.clone());
+        wheel.push(2.0, ev);
+    }
+    while pop_both(&mut heap, &mut wheel, "floor-merge").is_some() {}
+}
+
+#[test]
+fn signed_zero_after_zero_pop_is_legal_and_identical() {
+    // total_cmp distinguishes -0.0 < 0.0, but the causality clamp uses
+    // arithmetic comparison, so a -0.0 push while the floor is 0.0 must
+    // survive unclamped on BOTH backends
+    let mut heap = EventQueue::new_kind(QueueKind::Heap);
+    let mut wheel = EventQueue::new_kind(QueueKind::Wheel);
+    for q in [&mut heap, &mut wheel] {
+        q.push(0.0, Event::Sample);
+    }
+    let t = pop_both(&mut heap, &mut wheel, "signed-zero").unwrap();
+    assert_eq!(t.to_bits(), 0.0f64.to_bits());
+    for q in [&mut heap, &mut wheel] {
+        q.push(-0.0, Event::Arrival { req: 0 });
+        q.push(0.0, Event::Arrival { req: 1 });
+    }
+    let t = pop_both(&mut heap, &mut wheel, "signed-zero").unwrap();
+    assert_eq!(t.to_bits(), (-0.0f64).to_bits(), "-0.0 must not be clamped away");
+    while pop_both(&mut heap, &mut wheel, "signed-zero").is_some() {}
+}

@@ -1,16 +1,22 @@
-//! Equivalence proofs for the PR 4 hot-loop optimizations: turning the
-//! control log off ([`LogMode::Off`], the sweep default) and fanning the
-//! sweep out over worker threads are pure *mechanical* changes — every
-//! observable simulation result must be identical.
+//! Equivalence proofs for the performance machinery: turning the
+//! control log off ([`LogMode::Off`], the sweep default), fanning the
+//! sweep out over worker threads, and swapping the event-queue backend
+//! ([`QueueKind::Wheel`] vs the heap) are pure *mechanical* changes —
+//! every observable simulation result must be identical.
 //!
 //! 1. For every registry scenario × both fault policies, a `LogMode::Off`
 //!    run and a `LogMode::Full` run produce the same metrics summary,
 //!    event counts, recovery records, and completion set.
 //! 2. A `--jobs 1` sweep and a `--jobs 8` sweep serialize to
 //!    byte-identical `BENCH_scenarios.json` documents.
+//! 3. For every registry scenario × both fault policies, a
+//!    `--queue wheel` run matches a `--queue heap` run
+//!    completion-by-completion, and sweeps serialize to byte-identical
+//!    documents under either backend. (The queue-contract fuzz proof is
+//!    `event_queue_props.rs`; this is the end-to-end half.)
 
 use kevlarflow::bench::sweep;
-use kevlarflow::config::PolicySpec;
+use kevlarflow::config::{PolicySpec, QueueKind};
 use kevlarflow::scenario::registry;
 use kevlarflow::sim::{ClusterSim, LogMode, SimResult};
 
@@ -18,6 +24,48 @@ fn run(s: &kevlarflow::scenario::Scenario, policy: PolicySpec, mode: LogMode) ->
     let mut s = s.clone();
     s.arrival_window_s = s.arrival_window_s.min(150.0);
     ClusterSim::new(s.to_experiment(s.default_rps, policy)).with_log(mode).run()
+}
+
+fn run_queued(
+    s: &kevlarflow::scenario::Scenario,
+    policy: PolicySpec,
+    queue: QueueKind,
+) -> SimResult {
+    let mut s = s.clone();
+    s.arrival_window_s = s.arrival_window_s.min(150.0);
+    s.run_with_queue(s.default_rps, policy, queue)
+}
+
+/// Completion-by-completion (and counter-by-counter) identity of two
+/// runs that are supposed to differ only mechanically.
+fn assert_results_identical(a: &SimResult, b: &SimResult, tag: &str) {
+    assert_eq!(a.recorder.summary(), b.recorder.summary(), "{tag}: summary");
+    assert_eq!(a.events_processed, b.events_processed, "{tag}: event count");
+    assert_eq!(a.sim_time_s, b.sim_time_s, "{tag}: end time");
+    assert_eq!(a.preemptions, b.preemptions, "{tag}: preemptions");
+    assert_eq!(a.replica_stalls, b.replica_stalls, "{tag}: replica stalls");
+    assert_eq!(a.full_recomputes, b.full_recomputes, "{tag}: recomputes");
+    assert_eq!(a.incomplete, b.incomplete, "{tag}: incomplete");
+    assert_eq!(a.util_samples, b.util_samples, "{tag}: util samples");
+    assert_eq!(
+        a.recovery.completed.len(),
+        b.recovery.completed.len(),
+        "{tag}: recovery count"
+    );
+    for (x, y) in a.recovery.completed.iter().zip(b.recovery.completed.iter()) {
+        assert_eq!(x.failed, y.failed, "{tag}: recovered node");
+        assert_eq!(x.donor, y.donor, "{tag}: donor");
+        assert_eq!(x.resumed_s, y.resumed_s, "{tag}: resume time");
+    }
+    // completion-by-completion identity, not just aggregates
+    assert_eq!(a.recorder.records.len(), b.recorder.records.len(), "{tag}: completions");
+    for (x, y) in a.recorder.records.iter().zip(b.recorder.records.iter()) {
+        assert_eq!(x.id, y.id, "{tag}: completion order");
+        assert_eq!(x.first_token_s, y.first_token_s, "{tag}: ttft of req {}", x.id);
+        assert_eq!(x.completion_s, y.completion_s, "{tag}: finish of req {}", x.id);
+        assert_eq!(x.retries, y.retries, "{tag}: retries of req {}", x.id);
+        assert_eq!(x.instance, y.instance, "{tag}: placement of req {}", x.id);
+    }
 }
 
 #[test]
@@ -30,38 +78,19 @@ fn log_mode_off_and_full_agree_on_every_scenario() {
 
             assert!(off.control_log.is_empty(), "{tag}: Off must not record");
             assert!(!full.control_log.is_empty(), "{tag}: Full must record");
+            assert_results_identical(&off, &full, &tag);
+        }
+    }
+}
 
-            assert_eq!(off.recorder.summary(), full.recorder.summary(), "{tag}: summary");
-            assert_eq!(off.events_processed, full.events_processed, "{tag}: event count");
-            assert_eq!(off.sim_time_s, full.sim_time_s, "{tag}: end time");
-            assert_eq!(off.preemptions, full.preemptions, "{tag}: preemptions");
-            assert_eq!(off.replica_stalls, full.replica_stalls, "{tag}: replica stalls");
-            assert_eq!(off.full_recomputes, full.full_recomputes, "{tag}: recomputes");
-            assert_eq!(off.incomplete, full.incomplete, "{tag}: incomplete");
-            assert_eq!(off.util_samples, full.util_samples, "{tag}: util samples");
-            assert_eq!(
-                off.recovery.completed.len(),
-                full.recovery.completed.len(),
-                "{tag}: recovery count"
-            );
-            for (a, b) in off.recovery.completed.iter().zip(full.recovery.completed.iter()) {
-                assert_eq!(a.failed, b.failed, "{tag}: recovered node");
-                assert_eq!(a.donor, b.donor, "{tag}: donor");
-                assert_eq!(a.resumed_s, b.resumed_s, "{tag}: resume time");
-            }
-            // completion-by-completion identity, not just aggregates
-            assert_eq!(
-                off.recorder.records.len(),
-                full.recorder.records.len(),
-                "{tag}: completions"
-            );
-            for (a, b) in off.recorder.records.iter().zip(full.recorder.records.iter()) {
-                assert_eq!(a.id, b.id, "{tag}: completion order");
-                assert_eq!(a.first_token_s, b.first_token_s, "{tag}: ttft of req {}", a.id);
-                assert_eq!(a.completion_s, b.completion_s, "{tag}: finish of req {}", a.id);
-                assert_eq!(a.retries, b.retries, "{tag}: retries of req {}", a.id);
-                assert_eq!(a.instance, b.instance, "{tag}: placement of req {}", a.id);
-            }
+#[test]
+fn wheel_and_heap_agree_on_every_scenario() {
+    for s in registry() {
+        for policy in PolicySpec::presets() {
+            let heap = run_queued(&s, policy, QueueKind::Heap);
+            let wheel = run_queued(&s, policy, QueueKind::Wheel);
+            let tag = format!("{} ({}) heap-vs-wheel", s.name, policy.label());
+            assert_results_identical(&heap, &wheel, &tag);
         }
     }
 }
@@ -71,11 +100,28 @@ fn sweep_bytes_identical_across_thread_counts() {
     // two scenarios × two policies = 4 matrix points; 8 requested workers
     // also exercises the jobs > points clamp
     let names = vec!["paper-1".to_string(), "flap".to_string()];
-    let serial = sweep::run_sweep(&names, false, Some(120.0), true, 1, &[]).unwrap();
-    let threaded = sweep::run_sweep(&names, false, Some(120.0), true, 8, &[]).unwrap();
+    let serial =
+        sweep::run_sweep(&names, false, Some(120.0), true, 1, &[], QueueKind::Heap).unwrap();
+    let threaded =
+        sweep::run_sweep(&names, false, Some(120.0), true, 8, &[], QueueKind::Heap).unwrap();
     assert_eq!(
         sweep::sweep_json(&serial).to_string(),
         sweep::sweep_json(&threaded).to_string(),
         "sweep output must not depend on the worker-thread count"
+    );
+}
+
+#[test]
+fn sweep_bytes_identical_across_queue_backends() {
+    // the backend is a pure throughput knob: the serialized document —
+    // the artifact sweeps get diffed on — must be byte-for-byte the same
+    let names = vec!["paper-1".to_string(), "slow-node".to_string()];
+    let heap = sweep::run_sweep(&names, false, Some(120.0), true, 2, &[], QueueKind::Heap).unwrap();
+    let wheel =
+        sweep::run_sweep(&names, false, Some(120.0), true, 2, &[], QueueKind::Wheel).unwrap();
+    assert_eq!(
+        sweep::sweep_json(&heap).to_string(),
+        sweep::sweep_json(&wheel).to_string(),
+        "sweep output must not depend on the event-queue backend"
     );
 }

@@ -5,7 +5,7 @@
 //! (they are already covered by the calibration tests).
 
 use kevlarflow::bench::sweep;
-use kevlarflow::config::{Json, PolicySpec};
+use kevlarflow::config::{Json, PolicySpec, QueueKind};
 
 /// Every key a sweep row must carry, in the writer's (sorted) order.
 const ROW_KEYS: [&str; 16] = [
@@ -30,12 +30,14 @@ const ROW_KEYS: [&str; 16] = [
 #[test]
 fn sweep_json_matches_golden_schema() {
     let names = vec!["paper-1".to_string()];
-    let rows = sweep::run_sweep(&names, false, Some(150.0), true, 1, &[]).unwrap();
+    let rows =
+        sweep::run_sweep(&names, false, Some(150.0), true, 1, &[], QueueKind::Heap).unwrap();
     let doc = sweep::sweep_json(&rows);
     let text = doc.to_string();
 
     // byte-determinism: an identical sweep serializes identically
-    let rows2 = sweep::run_sweep(&names, false, Some(150.0), true, 1, &[]).unwrap();
+    let rows2 =
+        sweep::run_sweep(&names, false, Some(150.0), true, 1, &[], QueueKind::Heap).unwrap();
     assert_eq!(text, sweep::sweep_json(&rows2).to_string());
 
     // document header
@@ -74,7 +76,7 @@ fn sweep_json_matches_golden_schema() {
 #[test]
 fn sweep_file_roundtrip() {
     let names = vec!["paper-1".to_string()];
-    let rows = sweep::run_sweep(&names, false, Some(60.0), true, 1, &[]).unwrap();
+    let rows = sweep::run_sweep(&names, false, Some(60.0), true, 1, &[], QueueKind::Heap).unwrap();
     let dir = std::path::PathBuf::from(env!("CARGO_TARGET_TMPDIR"));
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("BENCH_scenarios.json");
@@ -93,7 +95,8 @@ fn explicit_presets_match_default_sweep_bytes() {
     // identically to the no-override run (which itself is the
     // pre-redesign matrix order: standard first, then kevlarflow)
     let names = vec!["paper-1".to_string()];
-    let default_rows = sweep::run_sweep(&names, false, Some(120.0), true, 1, &[]).unwrap();
+    let default_rows =
+        sweep::run_sweep(&names, false, Some(120.0), true, 1, &[], QueueKind::Heap).unwrap();
     let explicit = sweep::run_sweep(
         &names,
         false,
@@ -101,6 +104,7 @@ fn explicit_presets_match_default_sweep_bytes() {
         true,
         1,
         &PolicySpec::presets(),
+        QueueKind::Heap,
     )
     .unwrap();
     assert_eq!(
@@ -118,7 +122,8 @@ fn policy_matrix_rows_share_schema_and_diverge_in_results() {
     let policies = ["kevlarflow", "standard", "rr+spare-pool+ring", "p2c+checkpoint-restore+off"]
         .map(|p| PolicySpec::parse(p).unwrap());
     let names = vec!["paper-1".to_string()];
-    let rows = sweep::run_sweep(&names, false, Some(150.0), true, 2, &policies).unwrap();
+    let rows = sweep::run_sweep(&names, false, Some(150.0), true, 2, &policies, QueueKind::Heap)
+        .unwrap();
     assert_eq!(rows.len(), 4);
     let doc = sweep::sweep_json(&rows);
     let out = doc.get("rows").unwrap().as_arr().unwrap();
