@@ -24,7 +24,13 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::config::{Json, PolicySpec, QueueKind};
 use crate::metrics::Summary;
+use crate::obs;
 use crate::scenario::{registry, Scenario, ScenarioError};
+use crate::sim::SimResult;
+
+/// Snapshot window of `--metrics-out` documents (sim seconds) — matches
+/// the sim's utilization sampling cadence.
+pub const METRICS_WINDOW_S: f64 = 10.0;
 
 /// Results of one `(scenario, policy, rps)` simulation.
 #[derive(Debug, Clone)]
@@ -60,7 +66,31 @@ pub fn run_point_queued(
     policy: PolicySpec,
     queue: QueueKind,
 ) -> SweepRow {
-    let res = s.run_with_queue(rps, policy, queue);
+    row_from(s, rps, policy, &s.run_with_queue(rps, policy, queue))
+}
+
+/// [`run_point_queued`] with a windowed [`obs::Recorder`] attached: the
+/// row is identical (observation never moves a result), and the
+/// recorder comes back as a [`obs::PointDoc`] for `--metrics-out`.
+pub fn run_point_observed(
+    s: &Scenario,
+    rps: f64,
+    policy: PolicySpec,
+    queue: QueueKind,
+    window_s: f64,
+) -> (SweepRow, obs::PointDoc) {
+    let res = s.run_observed(rps, policy, queue, window_s);
+    let row = row_from(s, rps, policy, &res);
+    let doc = obs::PointDoc {
+        scenario: s.name.clone(),
+        policy: policy.label(),
+        rps,
+        recorder: res.obs.expect("run_observed attaches a recorder"),
+    };
+    (row, doc)
+}
+
+fn row_from(s: &Scenario, rps: f64, policy: PolicySpec, res: &SimResult) -> SweepRow {
     let retries = res.recorder.records.iter().map(|r| r.retries as u64).sum();
     SweepRow {
         scenario: s.name.clone(),
@@ -108,6 +138,50 @@ pub fn run_sweep(
     policies: &[PolicySpec],
     queue: QueueKind,
 ) -> Result<Vec<SweepRow>, ScenarioError> {
+    let rows = run_matrix(names, full_grid, window_s, jobs, policies, queue, run_point_queued)?;
+    if !quiet {
+        print_rows(&rows);
+    }
+    Ok(rows)
+}
+
+/// [`run_sweep`] with a windowed [`obs::Recorder`] on every point: rows
+/// are identical to the unobserved sweep, and each point's recorder
+/// comes back as a [`obs::PointDoc`] (in matrix order, so
+/// [`obs::metrics_json`]'s shard merge is `--jobs`-independent).
+#[allow(clippy::too_many_arguments)]
+pub fn run_sweep_observed(
+    names: &[String],
+    full_grid: bool,
+    window_s: Option<f64>,
+    quiet: bool,
+    jobs: usize,
+    policies: &[PolicySpec],
+    queue: QueueKind,
+    metrics_window_s: f64,
+) -> Result<(Vec<SweepRow>, Vec<obs::PointDoc>), ScenarioError> {
+    let results = run_matrix(names, full_grid, window_s, jobs, policies, queue, |s, rps, p, q| {
+        run_point_observed(s, rps, p, q, metrics_window_s)
+    })?;
+    let (rows, points) = results.into_iter().unzip();
+    if !quiet {
+        print_rows(&rows);
+    }
+    Ok((rows, points))
+}
+
+/// The shared matrix fan-out: enumerate scenarios × policies × RPS in
+/// output order, run every point through `run` on a scoped worker pool,
+/// reassemble results in matrix order.
+fn run_matrix<R: Send>(
+    names: &[String],
+    full_grid: bool,
+    window_s: Option<f64>,
+    jobs: usize,
+    policies: &[PolicySpec],
+    queue: QueueKind,
+    run: impl Fn(&Scenario, f64, PolicySpec, QueueKind) -> R + Sync,
+) -> Result<Vec<R>, ScenarioError> {
     let mut scenarios: Vec<Scenario> = if names.is_empty() {
         registry()
     } else {
@@ -134,26 +208,27 @@ pub fn run_sweep(
         }
     }
     let jobs = effective_jobs(jobs, points.len());
-    let mut slots: Vec<Option<SweepRow>> = points.iter().map(|_| None).collect();
+    let mut slots: Vec<Option<R>> = points.iter().map(|_| None).collect();
     if jobs <= 1 {
         for (slot, &(s, rps, policy)) in slots.iter_mut().zip(points.iter()) {
-            *slot = Some(run_point_queued(s, rps, policy, queue));
+            *slot = Some(run(s, rps, policy, queue));
         }
     } else {
         // work-stealing by atomic cursor: threads pull the next point,
         // results carry their matrix index back for in-order assembly
         let next = AtomicUsize::new(0);
+        let run = &run;
         std::thread::scope(|scope| {
             let workers: Vec<_> = (0..jobs)
                 .map(|_| {
                     scope.spawn(|| {
-                        let mut done: Vec<(usize, SweepRow)> = Vec::new();
+                        let mut done: Vec<(usize, R)> = Vec::new();
                         loop {
                             let i = next.fetch_add(1, Ordering::Relaxed);
                             let Some(&(s, rps, policy)) = points.get(i) else {
                                 break;
                             };
-                            done.push((i, run_point_queued(s, rps, policy, queue)));
+                            done.push((i, run(s, rps, policy, queue)));
                         }
                         done
                     })
@@ -166,12 +241,7 @@ pub fn run_sweep(
             }
         });
     }
-    let rows: Vec<SweepRow> =
-        slots.into_iter().map(|r| r.expect("every sweep point computed")).collect();
-    if !quiet {
-        print_rows(&rows);
-    }
-    Ok(rows)
+    Ok(slots.into_iter().map(|r| r.expect("every sweep point computed")).collect())
 }
 
 /// Markdown comparison table (one line per matrix point).

@@ -133,6 +133,26 @@ pub enum Event {
     SpareReady,
 }
 
+impl Event {
+    /// Stable label for metrics (`kf_control_events_total{event=…}`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::RequestArrived { .. } => "request_arrived",
+            Event::RequestDisplaced { .. } => "request_displaced",
+            Event::RequestCompleted { .. } => "request_completed",
+            Event::PassCompleted { .. } => "pass_completed",
+            Event::ReplicaSynced { .. } => "replica_synced",
+            Event::HeartbeatMissed { .. } => "heartbeat_missed",
+            Event::RecoveryElapsed { .. } => "recovery_elapsed",
+            Event::NodeProvisioned { .. } => "node_provisioned",
+            Event::InstanceRejoined { .. } => "instance_rejoined",
+            Event::NodeRecovered { .. } => "node_recovered",
+            Event::StragglerDetected { .. } => "straggler_detected",
+            Event::SpareReady => "spare_ready",
+        }
+    }
+}
+
 /// Which of an instance's requests an [`Action::Evict`] displaces.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EvictScope {
@@ -216,6 +236,23 @@ pub enum Action {
     ReleaseDonor { instance: usize, donor: NodeId, fresh: NodeId },
     /// Schedule `wake` to fire `after_s` seconds from now.
     StartTimer { after_s: f64, wake: Wake },
+}
+
+impl Action {
+    /// Stable label for metrics (`kf_control_actions_total{action=…}`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Action::Dispatch { .. } => "dispatch",
+            Action::DropEpoch { .. } => "drop_epoch",
+            Action::Evict { .. } => "evict",
+            Action::FlushReplicas { .. } => "flush_replicas",
+            Action::SpliceDonor { .. } => "splice_donor",
+            Action::ReformCommunicator { .. } => "reform_communicator",
+            Action::PromoteReplicas { .. } => "promote_replicas",
+            Action::ReleaseDonor { .. } => "release_donor",
+            Action::StartTimer { .. } => "start_timer",
+        }
+    }
 }
 
 /// Sentinel in the dense `assigned` table: no outstanding placement.

@@ -52,6 +52,10 @@ pub(crate) struct PendingFailure {
     /// spare/checkpoint strategies have no donor and store the failed
     /// slot itself.
     pub(crate) donor: NodeId,
+    /// Planned phase durations (locate/reform/restore/resume) carried
+    /// into the eventual [`RecoveryRecord`] for observability; zeros
+    /// where a strategy has no such phase.
+    pub(crate) phases_s: [f64; 4],
 }
 
 impl ControlPlane {
@@ -193,8 +197,12 @@ impl ControlPlane {
             scope: EvictScope::Queued,
             reset: ResetMode::KeepProgress,
         });
-        self.pending[instance] =
-            Some(PendingFailure { injected_s: now_s - plan.detect_s, failed, donor });
+        self.pending[instance] = Some(PendingFailure {
+            injected_s: now_s - plan.detect_s,
+            failed,
+            donor,
+            phases_s: plan.phase_durations(),
+        });
         self.health.donations.insert(donor, instance);
         let members: Vec<NodeId> = (0..self.cluster.n_stages)
             .map(|s| if s == failed.stage { donor } else { NodeId::new(instance, s) })
@@ -237,8 +245,12 @@ impl ControlPlane {
         let swap_s: f64 = plan.phases.iter().map(|&(_, d)| d).sum();
         self.set_state(instance, PipelineState::Down { until_s: now_s + swap_s });
         self.health.donations.retain(|_, b| *b != instance);
-        self.pending[instance] =
-            Some(PendingFailure { injected_s: now_s - plan.detect_s, failed, donor: failed });
+        self.pending[instance] = Some(PendingFailure {
+            injected_s: now_s - plan.detect_s,
+            failed,
+            donor: failed,
+            phases_s: plan.phase_durations(),
+        });
         out.push(Action::Evict {
             instance,
             scope: EvictScope::All,
@@ -279,6 +291,9 @@ impl ControlPlane {
             injected_s: now_s - self.timing.detect_s,
             failed,
             donor: failed,
+            // the restore is one undifferentiated replay: all of it in
+            // the restore slot
+            phases_s: [0.0, 0.0, restore_s, 0.0],
         });
         out.push(Action::Evict {
             instance,
@@ -299,7 +314,8 @@ impl ControlPlane {
         if !matches!(self.health.states[instance], PipelineState::Recovering { .. }) {
             return;
         }
-        let Some(PendingFailure { injected_s, failed, donor }) = self.pending[instance] else {
+        let Some(PendingFailure { injected_s, failed, donor, phases_s }) = self.pending[instance]
+        else {
             return;
         };
         // a second node of this instance died while it was recovering
@@ -327,6 +343,7 @@ impl ControlPlane {
             detected_s: injected_s + self.timing.detect_s,
             resumed_s: now_s,
             replacement_s: injected_s + self.serving.baseline_mttr_s,
+            phases_s,
         });
         self.planner.replan(&self.cluster, &self.health, &[]);
         out.push(Action::PromoteReplicas { instance, donor });
@@ -399,7 +416,8 @@ impl ControlPlane {
         // outage bounded by the swap/restore time, not the 600 s
         // re-provision) — record them for MTTR reporting. Full re-init
         // and the donor-splice fallback leave `pending` empty.
-        if let Some(PendingFailure { injected_s, failed, donor }) = self.pending[instance].take()
+        if let Some(PendingFailure { injected_s, failed, donor, phases_s }) =
+            self.pending[instance].take()
         {
             self.recovery.record(RecoveryRecord {
                 failed,
@@ -408,6 +426,7 @@ impl ControlPlane {
                 detected_s: injected_s + self.timing.detect_s,
                 resumed_s: now_s,
                 replacement_s: now_s,
+                phases_s,
             });
         }
         self.planner.replan(&self.cluster, &self.health, &[]);

@@ -34,6 +34,27 @@ pub enum RecoveryPhase {
     Resume,
 }
 
+impl RecoveryPhase {
+    /// Canonical execution order (also the layout of
+    /// [`RecoveryRecord::phases_s`]).
+    pub const ALL: [RecoveryPhase; 4] = [
+        RecoveryPhase::LocateDonor,
+        RecoveryPhase::ReformCommunicator,
+        RecoveryPhase::RestoreState,
+        RecoveryPhase::Resume,
+    ];
+
+    /// Stable label for metrics / trace slices.
+    pub fn name(self) -> &'static str {
+        match self {
+            RecoveryPhase::LocateDonor => "locate",
+            RecoveryPhase::ReformCommunicator => "reform",
+            RecoveryPhase::RestoreState => "restore",
+            RecoveryPhase::Resume => "resume",
+        }
+    }
+}
+
 /// A fully-scheduled recovery for one failure.
 #[derive(Debug, Clone)]
 pub struct RecoveryPlan {
@@ -91,6 +112,17 @@ impl RecoveryPlan {
     pub fn total_s(&self) -> f64 {
         self.detect_s + self.phases.iter().map(|&(_, d)| d).sum::<f64>()
     }
+
+    /// Per-phase durations in [`RecoveryPhase::ALL`] order, for
+    /// [`RecoveryRecord::phases_s`].
+    pub fn phase_durations(&self) -> [f64; 4] {
+        let mut out = [0.0; 4];
+        for &(phase, dur) in &self.phases {
+            let i = RecoveryPhase::ALL.iter().position(|&p| p == phase).unwrap();
+            out[i] += dur;
+        }
+        out
+    }
 }
 
 /// One completed recovery, for Fig 8 reporting.
@@ -103,11 +135,21 @@ pub struct RecoveryRecord {
     pub resumed_s: f64,
     /// Replacement node swapped in (cluster back to full health).
     pub replacement_s: f64,
+    /// Planned per-phase durations in [`RecoveryPhase::ALL`] order
+    /// (locate/reform/restore/resume); zeros where a strategy has no
+    /// such phase (e.g. checkpoint-restore spends everything in
+    /// restore).
+    pub phases_s: [f64; 4],
 }
 
 impl RecoveryRecord {
     pub fn recovery_time_s(&self) -> f64 {
         self.resumed_s - self.injected_s
+    }
+
+    /// `(label, duration)` per phase, in execution order.
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, f64)> {
+        RecoveryPhase::ALL.into_iter().map(RecoveryPhase::name).zip(self.phases_s)
     }
 }
 
@@ -196,8 +238,14 @@ mod tests {
             detected_s: 104.0,
             resumed_s: 131.0,
             replacement_s: 704.0,
+            phases_s: [3.0, 18.0, 3.0, 3.0],
         };
         assert!((r.recovery_time_s() - 31.0).abs() < 1e-9);
+        let phases: Vec<_> = r.phases().collect();
+        assert_eq!(
+            phases,
+            [("locate", 3.0), ("reform", 18.0), ("restore", 3.0), ("resume", 3.0)]
+        );
         let mut m = RecoveryManager::new();
         m.record(r);
         assert!((m.mean_recovery_s().unwrap() - 31.0).abs() < 1e-9);

@@ -22,6 +22,7 @@ use std::time::Instant;
 
 use crate::config::{ClusterConfig, PolicySpec, ServingConfig, SimTimingConfig};
 use crate::coordinator::control::{Action, ControlPlane, Event, Wake};
+use crate::obs;
 
 /// Wall-clock adapter around [`ControlPlane`] for engine-side drivers.
 pub struct ControlDriver {
@@ -29,6 +30,9 @@ pub struct ControlDriver {
     origin: Instant,
     /// (deadline seconds since origin, wake) for modeled timers.
     timers: Vec<(f64, Wake)>,
+    /// The same windowed recorder the sim uses (`DESIGN.md` §7): every
+    /// exchange and completed recovery is metered as it happens.
+    obs: obs::Recorder,
 }
 
 impl ControlDriver {
@@ -42,6 +46,7 @@ impl ControlDriver {
             cp: ControlPlane::new(cluster, serving, timing, seed),
             origin: Instant::now(),
             timers: Vec::new(),
+            obs: obs::Recorder::new(obs::DEFAULT_WINDOW_S),
         }
     }
 
@@ -56,7 +61,12 @@ impl ControlDriver {
     /// so callers can observe the full decision.
     pub fn feed(&mut self, event: Event) -> Vec<Action> {
         let now = self.now_s();
-        let actions = self.cp.handle(now, event);
+        let recovered_before = self.cp.recovery().completed.len();
+        let actions = self.cp.handle(now, event.clone());
+        self.obs.exchange(now, &event, &actions);
+        for rec in &self.cp.recovery().completed[recovered_before..] {
+            self.obs.recovery_completed(now, rec);
+        }
         for a in &actions {
             if let Action::StartTimer { after_s, wake } = a {
                 self.timers.push((now + after_s, *wake));
@@ -93,5 +103,16 @@ impl ControlDriver {
     /// The policy spec this driver was configured with.
     pub fn policy(&self) -> PolicySpec {
         self.cp.serving.policy
+    }
+
+    /// The driver's metric recorder (cumulative + windowed).
+    pub fn obs(&self) -> &obs::Recorder {
+        &self.obs
+    }
+
+    /// Mutable recorder access — engines record their own
+    /// request/sample metrics through the same interface the sim uses.
+    pub fn obs_mut(&mut self) -> &mut obs::Recorder {
+        &mut self.obs
     }
 }

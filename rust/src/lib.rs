@@ -42,7 +42,7 @@
 //!
 //! * **default (no features)** — the sim-only build: [`sim`],
 //!   [`coordinator`], [`comm`], [`kvcache`], [`workload`], [`metrics`],
-//!   [`bench`] and [`config`]. No native dependencies; `cargo test`
+//!   [`obs`], [`bench`] and [`config`]. No native dependencies; `cargo test`
 //!   exercises the simulator, the coordinator policies, the comm
 //!   primitives and the property tests out of the box.
 //! * **`pjrt`** — additionally compiles `runtime` and `engine` (which
@@ -57,6 +57,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod kvcache;
 pub mod metrics;
+pub mod obs;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scenario;

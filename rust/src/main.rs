@@ -27,21 +27,28 @@ USAGE:
   kevlarflow scenarios list                   show the fault-scenario registry
   kevlarflow scenarios run <NAME> [--rps R] [--policy SPEC|both]
                           [--window S] [--file SPEC.json] [--queue heap|wheel]
+                          [--metrics-out FILE]
                                               run one scenario, print summaries
+                                              (--metrics-out writes the windowed
+                                              metric registry as JSON)
   kevlarflow scenarios sweep [--out FILE] [--only a,b] [--full] [--window S]
                              [--jobs N] [--policies SPEC,SPEC,...]
-                             [--queue heap|wheel]
+                             [--queue heap|wheel] [--metrics-out FILE]
                                               run the matrix on N worker threads
-                                              (0/default = all cores; output is
+                                              (0/default = all cores; output —
+                                              including --metrics-out — is
                                               byte-identical for any N and any
                                               --queue backend), write
                                               JSON results
                                               (default out: BENCH_scenarios.json)
   kevlarflow trace [--scenario NAME | --scene N] [--rps R] [--policy SPEC]
-                   [--queue heap|wheel]
+                   [--queue heap|wheel] [--perfetto FILE]
                                               run a failure scenario and print
                                               the coordinator ControlPlane's
-                                              event → action exchanges
+                                              event → action exchanges;
+                                              --perfetto also writes the same
+                                              capture as a chrome://tracing /
+                                              Perfetto JSON timeline
   kevlarflow generate [PROMPT] [--n TOKENS]   greedy-generate with the AOT model
   kevlarflow inspect-artifacts                print the artifact manifest
 
@@ -91,7 +98,8 @@ fn main() -> Result<()> {
             };
             let policy = parse_policy(flag_value(&args, "--policy").unwrap_or("kevlarflow"))?;
             let queue = parse_queue(&args)?;
-            trace(&s, rps, policy, queue)
+            let perfetto = flag_value(&args, "--perfetto").map(str::to_string);
+            trace(&s, rps, policy, queue, perfetto.as_deref())
         }
         Some("generate") => {
             let prompt = args
@@ -185,56 +193,35 @@ fn parse_queue(args: &[String]) -> Result<QueueKind> {
     }
 }
 
-/// Run one failure scenario and print the control plane's decision
-/// stream — the coordinator-level view of a recovery, straight from the
-/// `SimResult::control_log` the replay tests consume.
-fn trace(s: &Scenario, rps: f64, policy: PolicySpec, queue: QueueKind) -> Result<()> {
-    use kevlarflow::coordinator::control::{Action, Event};
+/// Run one failure scenario and render the control plane's decision
+/// stream. One capture (`SimResult::control_log` + recovery records),
+/// two renderers: the text dump always prints, and `--perfetto FILE`
+/// additionally writes the chrome://tracing timeline of the same run.
+fn trace(
+    s: &Scenario,
+    rps: f64,
+    policy: PolicySpec,
+    queue: QueueKind,
+    perfetto: Option<&str>,
+) -> Result<()> {
+    use kevlarflow::obs::trace::{render_text, write_perfetto, TraceMeta};
 
     let mut s = s.clone();
     s.arrival_window_s = s.arrival_window_s.min(300.0);
     let res = s.run_logged_with_queue(rps, policy, queue);
-
-    let mut dispatches = 0usize;
-    let mut flushes = 0usize;
-    let mut syncs = 0usize;
-    println!(
-        "## control-plane trace — scenario {}, RPS {rps:.1} ({})\n",
-        s.name,
-        policy.label()
-    );
-    for (t, ev, actions) in &res.control_log {
-        match ev {
-            Event::RequestArrived { .. } | Event::RequestDisplaced { .. } => {
-                dispatches += actions.len();
-            }
-            Event::ReplicaSynced { .. } => syncs += 1,
-            Event::PassCompleted { .. } => {
-                flushes += actions
-                    .iter()
-                    .filter(|a| matches!(a, Action::FlushReplicas { .. }))
-                    .count();
-            }
-            Event::RequestCompleted { .. } => {}
-            // the failure path: print every exchange verbatim
-            _ => {
-                println!("t={t:9.3}s  {ev:?}");
-                for a in actions {
-                    println!("             -> {a:?}");
-                }
-            }
-        }
+    let meta = TraceMeta {
+        scenario: s.name.clone(),
+        policy: policy.label(),
+        rps,
+        n_instances: s.n_instances,
+        n_stages: s.n_stages,
+    };
+    print!("{}", render_text(&meta, &res));
+    if let Some(path) = perfetto {
+        write_perfetto(std::path::Path::new(path), &meta, &res)
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote Perfetto trace to {path}");
     }
-    println!(
-        "\n(plus {dispatches} dispatches, {flushes} replica-flush cadences, \
-         {syncs} replica syncs)"
-    );
-    println!(
-        "served {} requests; recoveries: {}; incomplete: {}",
-        res.recorder.summary().n,
-        res.recovery.completed.len(),
-        res.incomplete
-    );
     Ok(())
 }
 
@@ -292,12 +279,26 @@ fn scenarios_run(args: &[String]) -> Result<()> {
         Some(p) => vec![parse_policy(p)?],
     };
     let queue = parse_queue(args)?;
+    let metrics_out = flag_value(args, "--metrics-out");
     println!("## scenario {} — {} (RPS {rps:.1})", s.name, s.summary);
     println!("   stresses: {}\n", s.stresses);
-    let rows: Vec<_> = policies
-        .iter()
-        .map(|&p| bench::sweep::run_point_queued(&s, rps, p, queue))
-        .collect();
+    let rows: Vec<_> = if let Some(path) = metrics_out {
+        let (rows, points): (Vec<_>, Vec<_>) = policies
+            .iter()
+            .map(|&p| {
+                bench::sweep::run_point_observed(&s, rps, p, queue, bench::sweep::METRICS_WINDOW_S)
+            })
+            .unzip();
+        kevlarflow::obs::write_metrics(std::path::Path::new(path), &points)
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote metrics for {} points to {path}\n", points.len());
+        rows
+    } else {
+        policies
+            .iter()
+            .map(|&p| bench::sweep::run_point_queued(&s, rps, p, queue))
+            .collect()
+    };
     bench::sweep::print_rows(&rows);
     Ok(())
 }
@@ -323,7 +324,24 @@ fn scenarios_sweep(args: &[String]) -> Result<()> {
     };
     let queue = parse_queue(args)?;
     let out = flag_value(args, "--out").unwrap_or("BENCH_scenarios.json");
-    let rows = bench::sweep::run_sweep(&names, full, window, false, jobs, &policies, queue)?;
+    let rows = if let Some(metrics_out) = flag_value(args, "--metrics-out") {
+        let (rows, points) = bench::sweep::run_sweep_observed(
+            &names,
+            full,
+            window,
+            false,
+            jobs,
+            &policies,
+            queue,
+            bench::sweep::METRICS_WINDOW_S,
+        )?;
+        kevlarflow::obs::write_metrics(std::path::Path::new(metrics_out), &points)
+            .with_context(|| format!("writing {metrics_out}"))?;
+        println!("\nwrote metrics for {} points to {metrics_out}", points.len());
+        rows
+    } else {
+        bench::sweep::run_sweep(&names, full, window, false, jobs, &policies, queue)?
+    };
     bench::sweep::write_sweep(std::path::Path::new(out), &rows)
         .with_context(|| format!("writing {out}"))?;
     println!("\nwrote {} rows to {out}", rows.len());

@@ -1,0 +1,956 @@
+//! First-class observability: a hand-rolled, zero-dependency metric
+//! registry (Prometheus-style counter/gauge/histogram families keyed by
+//! deterministic label sets) plus the windowed [`Recorder`] every
+//! substrate records into, and the trace exporters over the captured
+//! control-plane exchange ([`trace`]).
+//!
+//! ## Determinism contract
+//!
+//! Everything here serializes byte-identically for identical runs:
+//!
+//! * **Label sets are ordered.** A [`LabelSet`] is a `BTreeMap` of
+//!   key/value pairs, so `{a=1, b=2}` and `{b=2, a=1}` are the same
+//!   series and always render in the same order. Families and series
+//!   are `BTreeMap`-keyed too — JSON output order never depends on
+//!   insertion order.
+//! * **Histogram buckets are fixed.** A histogram's bucket boundaries
+//!   are chosen at first observation (exponential grids sized for the
+//!   latency/TTFT/recovery ranges, see [`latency_buckets_s`] and
+//!   friends) and never resize, so bucket counts merge bucket-wise.
+//!   Values land in the first bucket whose upper bound is `>= v` under
+//!   [`f64::total_cmp`] (so `-0.0` sorts below `+0.0` and `NaN` lands
+//!   in the overflow bucket, never panics).
+//! * **Shard merge is associative and order-preserving.**
+//!   [`Registry::merge_from`] sums counters and histogram buckets and
+//!   right-biases gauges (last write wins), so
+//!   `merge(a, merge(b, c)) == merge(merge(a, b), c)` and merging
+//!   per-shard registries in matrix order equals serial recording —
+//!   the property that makes `scenarios sweep --metrics-out` bytes
+//!   independent of `--jobs` (pinned by `rust/tests/obs_props.rs` and
+//!   `rust/tests/obs_golden.rs`).
+//!
+//! The sim ([`crate::sim::ClusterSim::with_obs`]), the
+//! [`crate::coordinator::ControlPlane`] facade (whose event→action
+//! exchange is captured at the driver boundary by
+//! [`Recorder::exchange`]) and the PJRT engine driver
+//! (`engine::ControlDriver`, with `--features pjrt`) all record through
+//! this one interface. DESIGN.md §7 documents the model.
+
+pub mod trace;
+
+use std::collections::BTreeMap;
+
+use crate::config::Json;
+use crate::coordinator::control::{Action, Event};
+use crate::coordinator::recovery::RecoveryRecord;
+use crate::metrics::RequestRecord;
+
+/// TTFT service-level objective: completions whose first token took
+/// longer burn `kf_slo_ttft_violations_total`.
+pub const SLO_TTFT_S: f64 = 2.0;
+/// End-to-end latency SLO backing `kf_slo_latency_violations_total`.
+pub const SLO_LATENCY_S: f64 = 30.0;
+/// Default snapshot window of the windowed time series (matches the
+/// sim's KV-utilization sampling cadence).
+pub const DEFAULT_WINDOW_S: f64 = 10.0;
+
+// ---------------------------------------------------------------- buckets
+
+/// `count` exponential upper bounds `start, start*factor, …`.
+pub fn exponential_buckets(start: f64, factor: f64, count: usize) -> Vec<f64> {
+    assert!(start > 0.0 && factor > 1.0 && count > 0, "degenerate bucket grid");
+    let mut b = Vec::with_capacity(count);
+    let mut v = start;
+    for _ in 0..count {
+        b.push(v);
+        v *= factor;
+    }
+    b
+}
+
+/// `count` linear upper bounds `start, start+width, …`.
+pub fn linear_buckets(start: f64, width: f64, count: usize) -> Vec<f64> {
+    assert!(width > 0.0 && count > 0, "degenerate bucket grid");
+    (0..count).map(|i| start + width * i as f64).collect()
+}
+
+/// Request latency / TTFT grid: 10 ms … 327.68 s (16 ×2 buckets) — spans
+/// the paper's sub-second TTFTs and the sub-600 s failure-path tails.
+pub fn latency_buckets_s() -> Vec<f64> {
+    exponential_buckets(0.01, 2.0, 16)
+}
+
+/// Recovery-time grid: 1 s … 2048 s (covers donor splices ~30 s through
+/// the 600 s full re-provision baseline).
+pub fn recovery_buckets_s() -> Vec<f64> {
+    exponential_buckets(1.0, 2.0, 12)
+}
+
+/// Recovery-phase grid: 0.25 s … 512 s.
+pub fn phase_buckets_s() -> Vec<f64> {
+    exponential_buckets(0.25, 2.0, 12)
+}
+
+/// Queue-depth / inflight grid: 1 … 2048 requests.
+pub fn depth_buckets() -> Vec<f64> {
+    exponential_buckets(1.0, 2.0, 12)
+}
+
+/// KV-utilization grid: 0.1 … 1.0 in tenths.
+pub fn util_buckets() -> Vec<f64> {
+    linear_buckets(0.1, 0.1, 10)
+}
+
+// --------------------------------------------------------------- label set
+
+/// A deterministic set of label key/value pairs. `BTreeMap`-backed, so
+/// two sets with the same pairs are the same series regardless of
+/// insertion order, and serialization order is always lexicographic.
+#[derive(Debug, Clone, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub struct LabelSet(BTreeMap<String, String>);
+
+impl LabelSet {
+    /// The empty label set (the family's only series).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Builder-style insert: `LabelSet::empty().with("instance", "0")`.
+    pub fn with(mut self, key: &str, value: impl std::fmt::Display) -> Self {
+        self.0.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn pairs(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.0.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(
+            self.0.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+        )
+    }
+}
+
+// --------------------------------------------------------------- histogram
+
+/// Fixed-bucket histogram: `bounds` are strictly increasing upper bounds
+/// (`le`), `counts` has one extra overflow bucket for values above the
+/// last bound (and `NaN`, which sorts above `+inf` under
+/// [`f64::total_cmp`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(bounds: Vec<f64>) -> Self {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket");
+        assert!(
+            bounds.windows(2).all(|w| w[0].total_cmp(&w[1]).is_lt()),
+            "histogram bounds must be strictly increasing"
+        );
+        let n = bounds.len();
+        Self { bounds, counts: vec![0; n + 1], sum: 0.0, count: 0 }
+    }
+
+    /// Record one value: the first bucket whose bound is `>= v` under the
+    /// total order (a value exactly on a boundary belongs to that bucket;
+    /// `-0.0` lands at or below a `0.0` bound; `NaN` overflows).
+    pub fn observe(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|b| b.total_cmp(&v).is_lt());
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket counts (`bounds.len() + 1`, last = overflow).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Bucket-wise sum. Both histograms must share the bucket grid — a
+    /// metric name has one fixed grid, so shards always agree.
+    pub fn merge_from(&mut self, other: &Self) {
+        assert_eq!(
+            self.bounds, other.bounds,
+            "histogram merge across different bucket grids"
+        );
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+
+    /// The observations recorded since `prev` (a cumulative snapshot of
+    /// this same histogram): bucket-wise difference.
+    fn delta_since(&self, prev: &Self) -> Self {
+        debug_assert_eq!(self.bounds, prev.bounds);
+        Self {
+            bounds: self.bounds.clone(),
+            counts: self
+                .counts
+                .iter()
+                .zip(&prev.counts)
+                .map(|(c, p)| c - p)
+                .collect(),
+            sum: self.sum - prev.sum,
+            count: self.count - prev.count,
+        }
+    }
+
+    /// Bucket-interpolated quantile estimate (the
+    /// `histogram_quantile` model: linear within the owning bucket,
+    /// clamped to the last finite bound for the overflow bucket).
+    /// Returns 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if (next as f64) >= target {
+                if i >= self.bounds.len() {
+                    return self.bounds[self.bounds.len() - 1];
+                }
+                let lower = if i == 0 { 0.0_f64.min(self.bounds[0]) } else { self.bounds[i - 1] };
+                let frac = (target - cum as f64) / c as f64;
+                return lower + (self.bounds[i] - lower) * frac.clamp(0.0, 1.0);
+            }
+            cum = next;
+        }
+        self.bounds[self.bounds.len() - 1]
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".into(), Json::Num(self.count as f64));
+        m.insert("sum".into(), Json::Num(self.sum));
+        m.insert("le".into(), Json::Arr(self.bounds.iter().map(|&b| Json::Num(b)).collect()));
+        m.insert(
+            "counts".into(),
+            Json::Arr(self.counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+// ---------------------------------------------------------------- registry
+
+/// One metric sample of a series.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Metric {
+    /// Monotone sum (merges by addition).
+    Counter(u64),
+    /// Last-written value (merges right-biased).
+    Gauge(f64),
+    /// Fixed-bucket distribution (merges bucket-wise).
+    Histogram(Histogram),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Metric::Counter(v) => Json::Num(*v as f64),
+            Metric::Gauge(v) => Json::Num(*v),
+            Metric::Histogram(h) => h.to_json(),
+        }
+    }
+}
+
+/// All series of one metric name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Family {
+    pub help: &'static str,
+    pub series: BTreeMap<LabelSet, Metric>,
+}
+
+/// The metric registry: families keyed by name, series keyed by
+/// [`LabelSet`] — every map is a `BTreeMap`, so iteration (and the JSON
+/// document) is fully deterministic.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Registry {
+    families: BTreeMap<&'static str, Family>,
+}
+
+impl Registry {
+    pub fn is_empty(&self) -> bool {
+        self.families.is_empty()
+    }
+
+    pub fn families(&self) -> impl Iterator<Item = (&'static str, &Family)> {
+        self.families.iter().map(|(&n, f)| (n, f))
+    }
+
+    /// Add `v` to the counter series `name{labels}` (created at 0).
+    pub fn counter(&mut self, name: &'static str, help: &'static str, labels: &LabelSet, v: u64) {
+        match self.series(name, help, labels, || Metric::Counter(0)) {
+            Metric::Counter(c) => *c += v,
+            m => panic!("{name} is a {}, not a counter", m.kind()),
+        }
+    }
+
+    /// Set the gauge series `name{labels}`.
+    pub fn gauge(&mut self, name: &'static str, help: &'static str, labels: &LabelSet, v: f64) {
+        match self.series(name, help, labels, || Metric::Gauge(0.0)) {
+            Metric::Gauge(g) => *g = v,
+            m => panic!("{name} is a {}, not a gauge", m.kind()),
+        }
+    }
+
+    /// Observe `v` into the histogram series `name{labels}`; `bounds`
+    /// fixes the bucket grid on first use (a name has ONE grid — mixed
+    /// grids would make shard merge undefined).
+    pub fn observe(
+        &mut self,
+        name: &'static str,
+        help: &'static str,
+        labels: &LabelSet,
+        bounds: &[f64],
+        v: f64,
+    ) {
+        match self.series(name, help, labels, || Metric::Histogram(Histogram::new(bounds.to_vec())))
+        {
+            Metric::Histogram(h) => {
+                debug_assert_eq!(h.bounds(), bounds, "{name}: bucket grid changed");
+                h.observe(v);
+            }
+            m => panic!("{name} is a {}, not a histogram", m.kind()),
+        }
+    }
+
+    /// Read one series, if recorded.
+    pub fn get(&self, name: &str, labels: &LabelSet) -> Option<&Metric> {
+        self.families.get(name).and_then(|f| f.series.get(labels))
+    }
+
+    fn series(
+        &mut self,
+        name: &'static str,
+        help: &'static str,
+        labels: &LabelSet,
+        init: impl FnOnce() -> Metric,
+    ) -> &mut Metric {
+        self.families
+            .entry(name)
+            .or_insert_with(|| Family { help, series: BTreeMap::new() })
+            .series
+            .entry(labels.clone())
+            .or_insert_with(init)
+    }
+
+    /// Fold `other` into `self`: counters and histogram buckets sum,
+    /// gauges take `other`'s value when present (right-biased last
+    /// write). Associative, and — applied to per-shard registries in
+    /// recording order — equal to serial recording into one registry
+    /// (pinned by `rust/tests/obs_props.rs`).
+    pub fn merge_from(&mut self, other: &Registry) {
+        for (&name, fam) in &other.families {
+            let target = self
+                .families
+                .entry(name)
+                .or_insert_with(|| Family { help: fam.help, series: BTreeMap::new() });
+            for (labels, metric) in &fam.series {
+                match target.series.entry(labels.clone()) {
+                    std::collections::btree_map::Entry::Vacant(e) => {
+                        e.insert(metric.clone());
+                    }
+                    std::collections::btree_map::Entry::Occupied(mut e) => {
+                        match (e.get_mut(), metric) {
+                            (Metric::Counter(a), Metric::Counter(b)) => *a += b,
+                            (Metric::Gauge(a), Metric::Gauge(b)) => *a = *b,
+                            (Metric::Histogram(a), Metric::Histogram(b)) => a.merge_from(b),
+                            (a, b) => panic!(
+                                "{name}: merging {} into {}",
+                                b.kind(),
+                                a.kind()
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The activity recorded since `prev` (an earlier cumulative
+    /// snapshot of this same registry): counters and histograms
+    /// subtract, gauges report their current value. Series absent from
+    /// `prev` pass through whole.
+    pub fn delta_since(&self, prev: &Registry) -> Registry {
+        let mut out = Registry::default();
+        for (&name, fam) in &self.families {
+            let prev_fam = prev.families.get(name);
+            let mut series = BTreeMap::new();
+            for (labels, metric) in &fam.series {
+                let delta = match (metric, prev_fam.and_then(|f| f.series.get(labels))) {
+                    (Metric::Counter(c), Some(Metric::Counter(p))) => Metric::Counter(c - p),
+                    (Metric::Histogram(h), Some(Metric::Histogram(p))) => {
+                        Metric::Histogram(h.delta_since(p))
+                    }
+                    (m, _) => m.clone(),
+                };
+                series.insert(labels.clone(), delta);
+            }
+            out.families.insert(name, Family { help: fam.help, series });
+        }
+        out
+    }
+
+    /// Deterministic JSON document:
+    /// `{name: {"help", "kind", "series": [{"labels", "value"}]}}`.
+    pub fn to_json(&self) -> Json {
+        let mut doc = BTreeMap::new();
+        for (&name, fam) in &self.families {
+            let mut f = BTreeMap::new();
+            f.insert("help".into(), Json::Str(fam.help.into()));
+            let kind = fam
+                .series
+                .values()
+                .next()
+                .map(Metric::kind)
+                .unwrap_or("counter");
+            f.insert("kind".into(), Json::Str(kind.into()));
+            f.insert(
+                "series".into(),
+                Json::Arr(
+                    fam.series
+                        .iter()
+                        .map(|(labels, m)| {
+                            let mut s = BTreeMap::new();
+                            s.insert("labels".into(), labels.to_json());
+                            s.insert("value".into(), m.to_json());
+                            Json::Obj(s)
+                        })
+                        .collect(),
+                ),
+            );
+            doc.insert(name.to_string(), Json::Obj(f));
+        }
+        Json::Obj(doc)
+    }
+}
+
+// ---------------------------------------------------------------- recorder
+
+/// One sealed snapshot window: the activity in `[t0_s, t1_s)` as a delta
+/// registry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Window {
+    pub t0_s: f64,
+    pub t1_s: f64,
+    pub delta: Registry,
+}
+
+/// The single instrumentation surface every substrate records into: a
+/// cumulative [`Registry`] plus windowed snapshots sealed at a fixed
+/// cadence, so sweeps emit per-percentile time series (queue depth,
+/// inflight, SLO burn, recovery phases) instead of end-of-run scalars.
+///
+/// Recording is observation-only — no RNG, no events, no feedback into
+/// the run — so enabling it never perturbs results (the property behind
+/// the `--queue heap|wheel` byte-identity of `--metrics-out`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Recorder {
+    window_s: f64,
+    window_start: f64,
+    cum: Registry,
+    /// Cumulative snapshot at the last seal (windows are deltas).
+    prev: Registry,
+    windows: Vec<Window>,
+}
+
+impl Recorder {
+    pub fn new(window_s: f64) -> Self {
+        assert!(window_s > 0.0, "window must be positive");
+        Self {
+            window_s,
+            window_start: 0.0,
+            cum: Registry::default(),
+            prev: Registry::default(),
+            windows: Vec::new(),
+        }
+    }
+
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    /// The cumulative registry (run totals).
+    pub fn registry(&self) -> &Registry {
+        &self.cum
+    }
+
+    /// Sealed windows so far (call [`Recorder::finish`] first to flush
+    /// the trailing partial window).
+    pub fn windows(&self) -> &[Window] {
+        &self.windows
+    }
+
+    /// Seal every window that ends at or before `now_s`. Every record
+    /// method calls this, so substrates only need to pass the clock.
+    pub fn advance(&mut self, now_s: f64) {
+        while now_s >= self.window_start + self.window_s {
+            let t1 = self.window_start + self.window_s;
+            self.seal(t1);
+            self.window_start = t1;
+        }
+    }
+
+    /// Flush the trailing partial window (if any activity landed in it).
+    pub fn finish(&mut self, now_s: f64) {
+        self.advance(now_s);
+        if self.cum != self.prev {
+            self.seal(now_s.max(self.window_start));
+        }
+    }
+
+    fn seal(&mut self, t1_s: f64) {
+        // idle windows (no recording since the last seal) are skipped —
+        // `delta_since` passes every known family through, so "no new
+        // activity" is the cum == prev comparison, not an empty delta
+        if self.cum == self.prev {
+            return;
+        }
+        let delta = self.cum.delta_since(&self.prev);
+        self.windows.push(Window { t0_s: self.window_start, t1_s, delta });
+        self.prev = self.cum.clone();
+    }
+
+    // ------------------------------------------------- recording surface
+
+    /// Record one control-plane exchange `(event, actions)` — the hook
+    /// both drivers (sim and engine) call at the facade boundary, so the
+    /// facade's decision stream is metered without compromising its
+    /// purity contract.
+    pub fn exchange(&mut self, now_s: f64, event: &Event, actions: &[Action]) {
+        self.advance(now_s);
+        self.cum.counter(
+            "kf_control_events_total",
+            "control-plane events handled, by event kind",
+            &LabelSet::empty().with("event", event.kind()),
+            1,
+        );
+        for a in actions {
+            self.cum.counter(
+                "kf_control_actions_total",
+                "control-plane actions emitted, by action kind",
+                &LabelSet::empty().with("action", a.kind()),
+                1,
+            );
+        }
+        match event {
+            Event::HeartbeatMissed { node } => self.cum.counter(
+                "kf_faults_detected_total",
+                "heartbeat-timeout fault detections, by node",
+                &LabelSet::empty().with("node", node),
+                1,
+            ),
+            Event::StragglerDetected { node } => self.cum.counter(
+                "kf_stragglers_detected_total",
+                "fail-slow straggler detections, by node",
+                &LabelSet::empty().with("node", node),
+                1,
+            ),
+            Event::NodeRecovered { node } => self.cum.counter(
+                "kf_node_rejoins_total",
+                "failed-node process rejoin reports, by node",
+                &LabelSet::empty().with("node", node),
+                1,
+            ),
+            _ => {}
+        }
+        for a in actions {
+            let reroute = match a {
+                Action::SpliceDonor { .. } => Some("splice"),
+                Action::PromoteReplicas { .. } => Some("promote"),
+                Action::ReleaseDonor { .. } => Some("release"),
+                Action::Evict { .. } => Some("evict"),
+                _ => None,
+            };
+            if let Some(kind) = reroute {
+                self.cum.counter(
+                    "kf_reroutes_total",
+                    "traffic-rerouting actions (donor splices, evictions, promotions, releases)",
+                    &LabelSet::empty().with("kind", kind),
+                    1,
+                );
+            }
+        }
+    }
+
+    /// Record one completed request (latency/TTFT/TPOT distributions,
+    /// retry and SLO-burn counters).
+    pub fn request_completed(&mut self, now_s: f64, rec: &RequestRecord) {
+        self.advance(now_s);
+        let none = LabelSet::empty();
+        let lat = latency_buckets_s();
+        self.cum.counter("kf_requests_completed_total", "requests fully served", &none, 1);
+        self.cum.counter(
+            "kf_request_retries_total",
+            "request restarts from scratch (progress loss on failover)",
+            &none,
+            rec.retries as u64,
+        );
+        self.cum.observe(
+            "kf_request_latency_seconds",
+            "end-to-end request latency",
+            &none,
+            &lat,
+            rec.latency(),
+        );
+        self.cum.observe(
+            "kf_ttft_seconds",
+            "time to first token",
+            &none,
+            &lat,
+            rec.ttft(),
+        );
+        self.cum.observe(
+            "kf_tpot_seconds",
+            "time per output token over the decode phase",
+            &none,
+            &lat,
+            rec.tpot(),
+        );
+        if rec.ttft() > SLO_TTFT_S {
+            self.cum.counter(
+                "kf_slo_ttft_violations_total",
+                "completions whose TTFT exceeded the 2 s objective",
+                &none,
+                1,
+            );
+        }
+        if rec.latency() > SLO_LATENCY_S {
+            self.cum.counter(
+                "kf_slo_latency_violations_total",
+                "completions whose latency exceeded the 30 s objective",
+                &none,
+                1,
+            );
+        }
+    }
+
+    /// Record one instance's scheduler depth at a sampling tick: queued
+    /// (waiting) and inflight (running) request counts.
+    pub fn sample_instance(&mut self, now_s: f64, instance: usize, queued: usize, inflight: usize) {
+        self.advance(now_s);
+        let labels = LabelSet::empty().with("instance", instance);
+        let depth = depth_buckets();
+        self.cum.gauge(
+            "kf_queue_depth",
+            "requests waiting on an instance's scheduler (last sample)",
+            &labels,
+            queued as f64,
+        );
+        self.cum.gauge(
+            "kf_inflight_requests",
+            "requests running on an instance (last sample)",
+            &labels,
+            inflight as f64,
+        );
+        self.cum.observe(
+            "kf_queue_depth_samples",
+            "distribution of per-instance queue depth over sampling ticks",
+            &labels,
+            &depth,
+            queued as f64,
+        );
+        self.cum.observe(
+            "kf_inflight_samples",
+            "distribution of per-instance inflight requests over sampling ticks",
+            &labels,
+            &depth,
+            inflight as f64,
+        );
+    }
+
+    /// Record cluster-level health at a sampling tick: mean KV
+    /// utilization over alive nodes and the number of serving pipelines.
+    pub fn sample_cluster(&mut self, now_s: f64, kv_util: f64, serving: usize, total: usize) {
+        self.advance(now_s);
+        let none = LabelSet::empty();
+        self.cum.gauge(
+            "kf_kv_utilization",
+            "mean KV-cache utilization over alive nodes (last sample)",
+            &none,
+            kv_util,
+        );
+        self.cum.observe(
+            "kf_kv_utilization_samples",
+            "distribution of mean KV utilization over sampling ticks",
+            &none,
+            &util_buckets(),
+            kv_util,
+        );
+        self.cum.gauge(
+            "kf_pipelines_serving",
+            "pipelines currently accepting traffic (last sample)",
+            &none,
+            serving as f64,
+        );
+        self.cum.gauge(
+            "kf_pipelines_total",
+            "pipelines configured",
+            &none,
+            total as f64,
+        );
+    }
+
+    /// Record one KV-pressure preemption.
+    pub fn preemption(&mut self, now_s: f64) {
+        self.advance(now_s);
+        self.cum.counter(
+            "kf_preemptions_total",
+            "requests preempted for KV pressure",
+            &LabelSet::empty(),
+            1,
+        );
+    }
+
+    /// Record one completed recovery: total service-visible time plus
+    /// the per-phase durations (locate/reform/restore/resume).
+    pub fn recovery_completed(&mut self, now_s: f64, rec: &RecoveryRecord) {
+        self.advance(now_s);
+        let none = LabelSet::empty();
+        self.cum.counter("kf_recoveries_total", "completed fast recoveries", &none, 1);
+        self.cum.observe(
+            "kf_recovery_seconds",
+            "service-visible recovery time (injection to resume)",
+            &none,
+            &recovery_buckets_s(),
+            rec.recovery_time_s(),
+        );
+        for (phase, dur) in rec.phases() {
+            if dur > 0.0 {
+                self.cum.observe(
+                    "kf_recovery_phase_seconds",
+                    "recovery phase durations, by phase",
+                    &LabelSet::empty().with("phase", phase),
+                    &phase_buckets_s(),
+                    dur,
+                );
+            }
+        }
+    }
+
+    // ------------------------------------------------------------- export
+
+    /// The full metrics document of this recorder: run totals plus the
+    /// windowed time series with per-window histogram quantiles.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("window_s".into(), Json::Num(self.window_s));
+        m.insert("totals".into(), self.cum.to_json());
+        m.insert(
+            "windows".into(),
+            Json::Arr(self.windows.iter().map(window_json).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+fn window_json(w: &Window) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("t0_s".into(), Json::Num(w.t0_s));
+    m.insert("t1_s".into(), Json::Num(w.t1_s));
+    m.insert("metrics".into(), w.delta.to_json());
+    // per-percentile time series: quantile estimates of every histogram
+    // series from this window's own observations
+    let mut quantiles = BTreeMap::new();
+    for (name, fam) in w.delta.families() {
+        let rows: Vec<Json> = fam
+            .series
+            .iter()
+            .filter_map(|(labels, m)| match m {
+                Metric::Histogram(h) if h.count() > 0 => {
+                    let mut q = BTreeMap::new();
+                    q.insert("labels".into(), labels.to_json());
+                    q.insert("count".into(), Json::Num(h.count() as f64));
+                    q.insert("p50".into(), Json::Num(h.quantile(0.50)));
+                    q.insert("p90".into(), Json::Num(h.quantile(0.90)));
+                    q.insert("p99".into(), Json::Num(h.quantile(0.99)));
+                    Some(Json::Obj(q))
+                }
+                _ => None,
+            })
+            .collect();
+        if !rows.is_empty() {
+            quantiles.insert(name.to_string(), Json::Arr(rows));
+        }
+    }
+    m.insert("quantiles".into(), Json::Obj(quantiles));
+    Json::Obj(m)
+}
+
+// ------------------------------------------------------------- sweep doc
+
+/// One `(scenario, policy, rps)` point's recorded metrics.
+#[derive(Debug, Clone)]
+pub struct PointDoc {
+    pub scenario: String,
+    pub policy: String,
+    pub rps: f64,
+    pub recorder: Recorder,
+}
+
+/// The machine-readable metrics document of a run/sweep:
+/// `{"suite": "kevlarflow-metrics", "version": 1, "window_s", "points",
+/// "aggregate"}` where `aggregate` folds every point's cumulative
+/// registry in matrix order via [`Registry::merge_from`]. Byte-identical
+/// for any `--jobs` (points reassemble in matrix order before the fold)
+/// and any `--queue` backend (recording is observation-only).
+pub fn metrics_json(points: &[PointDoc]) -> Json {
+    let mut aggregate = Registry::default();
+    for p in points {
+        aggregate.merge_from(p.recorder.registry());
+    }
+    let mut m = BTreeMap::new();
+    m.insert("suite".into(), Json::Str("kevlarflow-metrics".into()));
+    m.insert("version".into(), Json::Num(1.0));
+    m.insert(
+        "window_s".into(),
+        Json::Num(points.first().map(|p| p.recorder.window_s()).unwrap_or(DEFAULT_WINDOW_S)),
+    );
+    m.insert(
+        "points".into(),
+        Json::Arr(
+            points
+                .iter()
+                .map(|p| {
+                    let mut o = BTreeMap::new();
+                    o.insert("scenario".into(), Json::Str(p.scenario.clone()));
+                    o.insert("policy".into(), Json::Str(p.policy.clone()));
+                    o.insert("rps".into(), Json::Num(p.rps));
+                    o.insert("metrics".into(), p.recorder.to_json());
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    m.insert("aggregate".into(), aggregate.to_json());
+    Json::Obj(m)
+}
+
+/// Write the metrics document (compact JSON, trailing newline).
+pub fn write_metrics(path: &std::path::Path, points: &[PointDoc]) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(metrics_json(points).to_string().as_bytes())?;
+    f.write_all(b"\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_grids_are_strictly_increasing() {
+        for grid in [
+            latency_buckets_s(),
+            recovery_buckets_s(),
+            phase_buckets_s(),
+            depth_buckets(),
+            util_buckets(),
+        ] {
+            assert!(grid.windows(2).all(|w| w[0] < w[1]), "{grid:?}");
+        }
+        assert_eq!(latency_buckets_s().len(), 16);
+        assert!((latency_buckets_s()[15] - 327.68).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_counter_gauge_roundtrip() {
+        let mut r = Registry::default();
+        let l = LabelSet::empty().with("instance", 0);
+        r.counter("c", "help", &l, 2);
+        r.counter("c", "help", &l, 3);
+        r.gauge("g", "help", &l, 1.5);
+        r.gauge("g", "help", &l, 2.5);
+        assert_eq!(r.get("c", &l), Some(&Metric::Counter(5)));
+        assert_eq!(r.get("g", &l), Some(&Metric::Gauge(2.5)));
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        let mut h = Histogram::new(vec![1.0, 2.0, 4.0]);
+        for _ in 0..100 {
+            h.observe(1.5);
+        }
+        let p50 = h.quantile(0.5);
+        assert!((1.0..=2.0).contains(&p50), "{p50}");
+        // everything beyond the last bound clamps to it
+        let mut o = Histogram::new(vec![1.0]);
+        o.observe(99.0);
+        assert_eq!(o.quantile(0.99), 1.0);
+        assert_eq!(Histogram::new(vec![1.0]).quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn recorder_windows_are_deltas() {
+        let mut rec = Recorder::new(10.0);
+        let l = LabelSet::empty();
+        rec.advance(0.0);
+        rec.cum.counter("x", "h", &l, 1);
+        rec.advance(12.0); // seals [0, 10)
+        rec.cum.counter("x", "h", &l, 4);
+        rec.finish(15.0);
+        assert_eq!(rec.windows().len(), 2);
+        assert_eq!(rec.windows()[0].delta.get("x", &l), Some(&Metric::Counter(1)));
+        assert_eq!(rec.windows()[1].delta.get("x", &l), Some(&Metric::Counter(4)));
+        assert_eq!(rec.registry().get("x", &l), Some(&Metric::Counter(5)));
+        assert_eq!(rec.windows()[1].t1_s, 15.0);
+    }
+
+    #[test]
+    fn metrics_doc_shape() {
+        let mut rec = Recorder::new(10.0);
+        rec.preemption(3.0);
+        rec.finish(5.0);
+        let doc = metrics_json(&[PointDoc {
+            scenario: "s".into(),
+            policy: "kevlarflow".into(),
+            rps: 2.0,
+            recorder: rec,
+        }]);
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("kevlarflow-metrics"));
+        assert_eq!(doc.get("version").unwrap().as_f64(), Some(1.0));
+        let agg = doc.get("aggregate").unwrap();
+        let fam = agg.get("kf_preemptions_total").unwrap();
+        assert_eq!(fam.get("kind").unwrap().as_str(), Some("counter"));
+        // round-trips through the parser
+        assert_eq!(Json::parse(&doc.to_string()).unwrap(), doc);
+    }
+}

@@ -1,0 +1,308 @@
+//! Trace exporters over the captured control-plane exchange: the text
+//! renderer behind `kevlarflow trace` and the Perfetto /
+//! chrome://tracing JSON exporter behind `trace --perfetto`.
+//!
+//! Both render the SAME capture — `SimResult::control_log` plus the
+//! completed `RecoveryRecord`s — so there is exactly one event-capture
+//! path (the `LogMode::Full` control log the replay tests already
+//! consume), and two views of it.
+//!
+//! ## Track model (Perfetto)
+//!
+//! * One *process* per pipeline: `pid = instance + 1`, named
+//!   `pipeline-<instance>`.
+//! * Thread 0 of each process is the **control track**: duration slices
+//!   for the recovery choreography (`detect`, then
+//!   `locate`/`reform`/`restore`/`resume`, then `degraded (donor …)`
+//!   until the replacement swaps in) and instants for the rerouting
+//!   actions (`splice_donor`, `evict`, `promote_replicas`,
+//!   `release_donor`).
+//! * Thread `stage + 1` is that stage's **node track**: instants for the
+//!   per-node fault signals (`heartbeat_missed`, `straggler_detected`,
+//!   `node_recovered`).
+//!
+//! Timestamps are microseconds of sim time. Events are sorted by
+//! `(pid, tid, ts, seq)` so every track is time-monotonic — the property
+//! CI validates — and the byte output is deterministic.
+
+use std::collections::BTreeMap;
+
+use crate::config::Json;
+use crate::coordinator::control::{Action, Event};
+use crate::sim::SimResult;
+
+/// Run identity stamped into trace headers.
+#[derive(Debug, Clone)]
+pub struct TraceMeta {
+    pub scenario: String,
+    pub policy: String,
+    pub rps: f64,
+    pub n_instances: usize,
+    pub n_stages: usize,
+}
+
+/// Render the human-readable trace (the `kevlarflow trace` text dump):
+/// failure-path exchanges verbatim, steady-state traffic summarized.
+pub fn render_text(meta: &TraceMeta, res: &SimResult) -> String {
+    use std::fmt::Write as _;
+
+    let mut out = String::new();
+    let mut dispatches = 0usize;
+    let mut flushes = 0usize;
+    let mut syncs = 0usize;
+    let _ = writeln!(
+        out,
+        "## control-plane trace — scenario {}, RPS {:.1} ({})\n",
+        meta.scenario, meta.rps, meta.policy
+    );
+    for (t, ev, actions) in &res.control_log {
+        match ev {
+            Event::RequestArrived { .. } | Event::RequestDisplaced { .. } => {
+                dispatches += actions.len();
+            }
+            Event::ReplicaSynced { .. } => syncs += 1,
+            Event::PassCompleted { .. } => {
+                flushes += actions
+                    .iter()
+                    .filter(|a| matches!(a, Action::FlushReplicas { .. }))
+                    .count();
+            }
+            Event::RequestCompleted { .. } => {}
+            // the failure path: print every exchange verbatim
+            _ => {
+                let _ = writeln!(out, "t={t:9.3}s  {ev:?}");
+                for a in actions {
+                    let _ = writeln!(out, "             -> {a:?}");
+                }
+            }
+        }
+    }
+    let _ = writeln!(
+        out,
+        "\n(plus {dispatches} dispatches, {flushes} replica-flush cadences, \
+         {syncs} replica syncs)"
+    );
+    let _ = writeln!(
+        out,
+        "served {} requests; recoveries: {}; incomplete: {}",
+        res.recorder.summary().n,
+        res.recovery.completed.len(),
+        res.incomplete
+    );
+    out
+}
+
+/// One trace event before serialization, carrying its sort key.
+struct TraceEvent {
+    pid: usize,
+    tid: usize,
+    ts_us: f64,
+    /// Capture order, the tie-breaker that keeps simultaneous events in
+    /// a stable (deterministic) order.
+    seq: usize,
+    json: Json,
+}
+
+struct TraceBuilder {
+    events: Vec<TraceEvent>,
+}
+
+impl TraceBuilder {
+    fn new() -> Self {
+        Self { events: Vec::new() }
+    }
+
+    fn meta(&mut self, pid: usize, tid: Option<usize>, which: &str, name: &str) {
+        let mut m = BTreeMap::new();
+        m.insert("ph".into(), Json::Str("M".into()));
+        m.insert("name".into(), Json::Str(which.into()));
+        m.insert("pid".into(), Json::Num(pid as f64));
+        m.insert("tid".into(), Json::Num(tid.unwrap_or(0) as f64));
+        m.insert("ts".into(), Json::Num(0.0));
+        let mut args = BTreeMap::new();
+        args.insert("name".into(), Json::Str(name.into()));
+        m.insert("args".into(), Json::Obj(args));
+        let seq = self.events.len();
+        self.events.push(TraceEvent {
+            pid,
+            tid: tid.unwrap_or(0),
+            ts_us: -1.0,
+            seq,
+            json: Json::Obj(m),
+        });
+    }
+
+    /// Complete slice (`ph: "X"`). Zero-length slices get a 1 µs floor so
+    /// viewers render them.
+    fn slice(
+        &mut self,
+        pid: usize,
+        tid: usize,
+        name: &str,
+        t0_s: f64,
+        t1_s: f64,
+        args: BTreeMap<String, Json>,
+    ) {
+        let ts = (t0_s * 1e6).round();
+        let dur = ((t1_s - t0_s) * 1e6).round().max(1.0);
+        let mut m = BTreeMap::new();
+        m.insert("ph".into(), Json::Str("X".into()));
+        m.insert("name".into(), Json::Str(name.into()));
+        m.insert("pid".into(), Json::Num(pid as f64));
+        m.insert("tid".into(), Json::Num(tid as f64));
+        m.insert("ts".into(), Json::Num(ts));
+        m.insert("dur".into(), Json::Num(dur));
+        if !args.is_empty() {
+            m.insert("args".into(), Json::Obj(args));
+        }
+        let seq = self.events.len();
+        self.events.push(TraceEvent { pid, tid, ts_us: ts, seq, json: Json::Obj(m) });
+    }
+
+    /// Thread-scoped instant event (`ph: "i"`, `s: "t"`).
+    fn instant(
+        &mut self,
+        pid: usize,
+        tid: usize,
+        name: &str,
+        t_s: f64,
+        args: BTreeMap<String, Json>,
+    ) {
+        let ts = (t_s * 1e6).round();
+        let mut m = BTreeMap::new();
+        m.insert("ph".into(), Json::Str("i".into()));
+        m.insert("s".into(), Json::Str("t".into()));
+        m.insert("name".into(), Json::Str(name.into()));
+        m.insert("pid".into(), Json::Num(pid as f64));
+        m.insert("tid".into(), Json::Num(tid as f64));
+        m.insert("ts".into(), Json::Num(ts));
+        if !args.is_empty() {
+            m.insert("args".into(), Json::Obj(args));
+        }
+        let seq = self.events.len();
+        self.events.push(TraceEvent { pid, tid, ts_us: ts, seq, json: Json::Obj(m) });
+    }
+
+    fn finish(mut self) -> Vec<Json> {
+        // per-track monotonic ts (metadata first via ts_us = -1), stable
+        // across captures: ties break on capture order
+        self.events.sort_by(|a, b| {
+            (a.pid, a.tid)
+                .cmp(&(b.pid, b.tid))
+                .then(a.ts_us.total_cmp(&b.ts_us))
+                .then(a.seq.cmp(&b.seq))
+        });
+        self.events.into_iter().map(|e| e.json).collect()
+    }
+}
+
+fn str_arg(k: &str, v: impl std::fmt::Display) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert(k.to_string(), Json::Str(v.to_string()));
+    m
+}
+
+/// Export the captured exchange as a Perfetto / chrome://tracing JSON
+/// document (see the module docs for the track model). Requires a run
+/// with `LogMode::Full` — an empty `control_log` yields a valid trace
+/// with recovery slices only.
+pub fn perfetto_json(meta: &TraceMeta, res: &SimResult) -> Json {
+    let mut b = TraceBuilder::new();
+
+    for i in 0..meta.n_instances {
+        let pid = i + 1;
+        b.meta(pid, None, "process_name", &format!("pipeline-{i}"));
+        b.meta(pid, Some(0), "thread_name", "control");
+        for s in 0..meta.n_stages {
+            b.meta(pid, Some(s + 1), "thread_name", &format!("stage-{s}"));
+        }
+    }
+
+    // recovery choreography: duration slices on the failed pipeline's
+    // control track
+    for rec in &res.recovery.completed {
+        let pid = rec.failed.instance + 1;
+        b.slice(pid, 0, "detect", rec.injected_s, rec.detected_s, str_arg("failed", rec.failed));
+        let mut cursor = rec.detected_s;
+        let mut any_phase = false;
+        for (phase, dur) in rec.phases() {
+            if dur > 0.0 {
+                any_phase = true;
+                b.slice(pid, 0, phase, cursor, cursor + dur, BTreeMap::new());
+                cursor += dur;
+            }
+        }
+        if !any_phase {
+            // a record with no phase breakdown still shows its outage
+            b.slice(pid, 0, "restore", rec.detected_s, rec.resumed_s, BTreeMap::new());
+        }
+        if rec.replacement_s > rec.resumed_s {
+            b.slice(
+                pid,
+                0,
+                &format!("degraded (donor {})", rec.donor),
+                rec.resumed_s,
+                rec.replacement_s,
+                str_arg("donor", rec.donor),
+            );
+        }
+    }
+
+    // fault signals and reroutes: instants from the captured exchange
+    for (t, ev, actions) in &res.control_log {
+        match ev {
+            Event::HeartbeatMissed { node } => {
+                let (pid, tid) = (node.instance + 1, node.stage + 1);
+                b.instant(pid, tid, "heartbeat_missed", *t, BTreeMap::new());
+            }
+            Event::StragglerDetected { node } => {
+                let (pid, tid) = (node.instance + 1, node.stage + 1);
+                b.instant(pid, tid, "straggler_detected", *t, BTreeMap::new());
+            }
+            Event::NodeRecovered { node } => {
+                b.instant(node.instance + 1, node.stage + 1, "node_recovered", *t, BTreeMap::new());
+            }
+            _ => {}
+        }
+        for a in actions {
+            match a {
+                Action::SpliceDonor { instance, donor, .. } => {
+                    b.instant(instance + 1, 0, "splice_donor", *t, str_arg("donor", donor));
+                }
+                Action::Evict { instance, .. } => {
+                    b.instant(instance + 1, 0, "evict", *t, BTreeMap::new());
+                }
+                Action::PromoteReplicas { instance, donor } => {
+                    b.instant(instance + 1, 0, "promote_replicas", *t, str_arg("donor", donor));
+                }
+                Action::ReleaseDonor { instance, fresh, .. } => {
+                    b.instant(instance + 1, 0, "release_donor", *t, str_arg("fresh", fresh));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("traceEvents".into(), Json::Arr(b.finish()));
+    doc.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+    let mut m = BTreeMap::new();
+    m.insert("scenario".into(), Json::Str(meta.scenario.clone()));
+    m.insert("policy".into(), Json::Str(meta.policy.clone()));
+    m.insert("rps".into(), Json::Num(meta.rps));
+    m.insert("recoveries".into(), Json::Num(res.recovery.completed.len() as f64));
+    doc.insert("metadata".into(), Json::Obj(m));
+    Json::Obj(doc)
+}
+
+/// Write the Perfetto document (compact JSON, trailing newline).
+pub fn write_perfetto(
+    path: &std::path::Path,
+    meta: &TraceMeta,
+    res: &SimResult,
+) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(perfetto_json(meta, res).to_string().as_bytes())?;
+    f.write_all(b"\n")
+}

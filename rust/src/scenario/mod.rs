@@ -172,6 +172,22 @@ impl Scenario {
             .run()
     }
 
+    /// Run with a windowed [`crate::obs::Recorder`] attached
+    /// (`SimResult::obs` populated) — the `--metrics-out` path.
+    /// Observation-only: the summary rows are identical to
+    /// [`Scenario::run`]'s.
+    pub fn run_observed(
+        &self,
+        rps: f64,
+        policy: PolicySpec,
+        queue: QueueKind,
+        window_s: f64,
+    ) -> SimResult {
+        ClusterSim::new(self.to_experiment_queued(rps, policy, queue))
+            .with_obs(window_s)
+            .run()
+    }
+
     /// The policy axis a sweep runs for this scenario: its own
     /// `policies` list, defaulting to the two presets.
     pub fn sweep_policies(&self) -> Vec<PolicySpec> {

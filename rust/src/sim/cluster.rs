@@ -13,6 +13,7 @@ use crate::coordinator::control::{
 use crate::coordinator::RecoveryManager;
 use crate::kvcache::NodeKv;
 use crate::metrics::Recorder;
+use crate::obs;
 use crate::workload::{generate_trace, Pcg32, WorkloadSpec};
 
 use super::events::{Event, EventQueue};
@@ -73,6 +74,9 @@ pub struct SimResult {
     /// Every control-plane exchange, in order (see [`ControlRecord`]).
     /// Empty unless the sim was built with [`LogMode::Full`].
     pub control_log: Vec<ControlRecord>,
+    /// Windowed metric recorder, populated when the sim was built with
+    /// [`ClusterSim::with_obs`] (already [`obs::Recorder::finish`]ed).
+    pub obs: Option<obs::Recorder>,
 }
 
 /// The simulator. Build with [`ClusterSim::new`], run with
@@ -96,6 +100,9 @@ pub struct ClusterSim {
     pub(crate) max_prefills: usize,
     pub(crate) log_mode: LogMode,
     pub(crate) control_log: Vec<ControlRecord>,
+    /// Windowed metric recorder (opt-in via [`ClusterSim::with_obs`];
+    /// observation-only, so enabling it never moves a result).
+    pub(crate) obs: Option<obs::Recorder>,
     /// Reusable action buffers for the control exchange (a small pool,
     /// not one buffer, because executing an `Evict` re-enters
     /// [`ClusterSim::control`] for each displaced request).
@@ -164,6 +171,7 @@ impl ClusterSim {
             max_prefills: PREFILL_PIPELINE_DEPTH,
             log_mode: LogMode::Off,
             control_log: Vec::new(),
+            obs: None,
             scratch: Vec::new(),
         }
     }
@@ -175,6 +183,15 @@ impl ClusterSim {
         self
     }
 
+    /// Attach a windowed [`obs::Recorder`] (builder style): the run
+    /// meters requests, control exchanges, recoveries and sampling ticks
+    /// into `SimResult::obs`, sealed every `window_s` seconds of sim
+    /// time. Must be set before [`ClusterSim::run`].
+    pub fn with_obs(mut self, window_s: f64) -> Self {
+        self.obs = Some(obs::Recorder::new(window_s));
+        self
+    }
+
     // -------------------------------------------------- control exchange
 
     /// Report one event to the control plane, log the exchange when
@@ -183,9 +200,20 @@ impl ClusterSim {
     /// steady-state exchange performs no allocation and no cloning.
     pub(crate) fn control(&mut self, ev: Ctl) {
         let mut actions = self.scratch.pop().unwrap_or_default();
-        if self.log_mode == LogMode::Full {
+        if self.log_mode == LogMode::Full || self.obs.is_some() {
+            // observed path: the event is cloned so the exchange can be
+            // metered/logged after the facade consumes it
+            let recovered_before = self.cp.recovery().completed.len();
             self.cp.handle_into(self.now, ev.clone(), &mut actions);
-            self.control_log.push((self.now, ev, actions.clone()));
+            if let Some(o) = self.obs.as_mut() {
+                o.exchange(self.now, &ev, &actions);
+                for rec in &self.cp.recovery().completed[recovered_before..] {
+                    o.recovery_completed(self.now, rec);
+                }
+            }
+            if self.log_mode == LogMode::Full {
+                self.control_log.push((self.now, ev, actions.clone()));
+            }
         } else {
             self.cp.handle_into(self.now, ev, &mut actions);
         }
@@ -467,6 +495,9 @@ impl ClusterSim {
             }
         }
         let incomplete = self.reqs.iter().filter(|r| !r.done).count();
+        if let Some(o) = self.obs.as_mut() {
+            o.finish(self.now);
+        }
         SimResult {
             recorder: self.recorder,
             recovery: self.cp.recovery().clone(),
@@ -478,6 +509,7 @@ impl ClusterSim {
             full_recomputes: self.full_recomputes,
             incomplete,
             control_log: self.control_log,
+            obs: self.obs,
         }
     }
 }

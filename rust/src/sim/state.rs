@@ -483,12 +483,18 @@ impl ClusterSim {
             instance,
         };
         let id = r.spec.id;
+        if let Some(o) = self.obs.as_mut() {
+            o.request_completed(self.now, &record);
+        }
         self.recorder.push(record);
         self.control(Ctl::RequestCompleted { req: id });
     }
 
     pub(crate) fn preempt(&mut self, instance: usize, req: usize) {
         self.preemptions += 1;
+        if let Some(o) = self.obs.as_mut() {
+            o.preemption(self.now);
+        }
         self.free_request_kv(instance, req);
         let r = &mut self.reqs[req];
         r.resume_ctx = r.context_tokens();
@@ -509,6 +515,21 @@ impl ClusterSim {
         }
         if n > 0 {
             self.util_samples.push((self.now, sum / n as f64));
+        }
+        if let Some(o) = self.obs.as_mut() {
+            for i in 0..self.cfg.cluster.n_instances {
+                o.sample_instance(
+                    self.now,
+                    i,
+                    self.instances.waiting[i].len(),
+                    self.instances.running[i].len(),
+                );
+            }
+            let serving =
+                (0..self.cfg.cluster.n_instances).filter(|&i| self.cp.state(i).serving()).count();
+            if n > 0 {
+                o.sample_cluster(self.now, sum / n as f64, serving, self.cfg.cluster.n_instances);
+            }
         }
         // stop sampling once all requests are done (lets the queue drain)
         if self.reqs.iter().any(|r| !r.done) {

@@ -1,0 +1,233 @@
+//! End-to-end byte-identity and validity pins for `--metrics-out` and
+//! `--perfetto`: metrics documents must be byte-identical across event
+//! queue backends (`--queue heap|wheel`), across repeat runs, and across
+//! sweep worker counts (`--jobs 1` vs `--jobs 4`); the Perfetto export
+//! must be a valid chrome://tracing document with monotonic timestamps
+//! per track and the recovery-phase slice vocabulary from DESIGN.md §7.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use kevlarflow::bench::sweep::{run_point_observed, run_sweep, run_sweep_observed, sweep_json};
+use kevlarflow::config::{Json, PolicySpec, QueueKind};
+use kevlarflow::obs::metrics_json;
+use kevlarflow::obs::trace::{perfetto_json, render_text, TraceMeta};
+use kevlarflow::scenario;
+
+const WINDOW_S: f64 = 150.0;
+const METRICS_WINDOW_S: f64 = 10.0;
+
+fn paper1() -> kevlarflow::scenario::Scenario {
+    let mut s = scenario::find("paper-1").expect("paper-1 is registered");
+    s.arrival_window_s = WINDOW_S;
+    s
+}
+
+fn metrics_bytes(queue: QueueKind) -> String {
+    let s = paper1();
+    let (_, point) =
+        run_point_observed(&s, s.default_rps, PolicySpec::kevlarflow(), queue, METRICS_WINDOW_S);
+    metrics_json(&[point]).to_string()
+}
+
+#[test]
+fn metrics_bytes_are_queue_backend_independent() {
+    let heap = metrics_bytes(QueueKind::Heap);
+    let wheel = metrics_bytes(QueueKind::Wheel);
+    assert!(!heap.is_empty());
+    assert_eq!(heap, wheel, "observation must not read the queue backend");
+}
+
+#[test]
+fn metrics_bytes_are_reproducible() {
+    assert_eq!(metrics_bytes(QueueKind::Heap), metrics_bytes(QueueKind::Heap));
+}
+
+#[test]
+fn observation_never_moves_sweep_rows() {
+    let names = vec!["paper-1".to_string()];
+    let plain = run_sweep(&names, false, Some(WINDOW_S), true, 1, &[], QueueKind::Heap).unwrap();
+    let (observed, points) = run_sweep_observed(
+        &names,
+        false,
+        Some(WINDOW_S),
+        true,
+        1,
+        &[],
+        QueueKind::Heap,
+        METRICS_WINDOW_S,
+    )
+    .unwrap();
+    assert_eq!(sweep_json(&plain).to_string(), sweep_json(&observed).to_string());
+    assert_eq!(points.len(), observed.len());
+}
+
+#[test]
+fn sweep_metrics_are_jobs_independent() {
+    let names = vec!["paper-1".to_string(), "flap".to_string()];
+    let doc = |jobs: usize| -> (String, String) {
+        let (rows, points) = run_sweep_observed(
+            &names,
+            false,
+            Some(WINDOW_S),
+            true,
+            jobs,
+            &[],
+            QueueKind::Heap,
+            METRICS_WINDOW_S,
+        )
+        .unwrap();
+        (sweep_json(&rows).to_string(), metrics_json(&points).to_string())
+    };
+    let (rows1, metrics1) = doc(1);
+    let (rows4, metrics4) = doc(4);
+    assert_eq!(rows1, rows4, "sweep rows must be --jobs independent");
+    assert_eq!(metrics1, metrics4, "metrics document must be --jobs independent");
+}
+
+#[test]
+fn metrics_document_shape() {
+    let s = paper1();
+    let (_, point) =
+        run_point_observed(&s, s.default_rps, PolicySpec::kevlarflow(), QueueKind::Heap, 10.0);
+    let doc = metrics_json(&[point]);
+    let parsed = Json::parse(&doc.to_string()).expect("metrics doc must parse");
+    assert_eq!(parsed.get("suite").and_then(Json::as_str), Some("kevlarflow-metrics"));
+    assert_eq!(parsed.get("version").and_then(Json::as_u64), Some(1));
+    assert_eq!(parsed.get("window_s").and_then(Json::as_f64), Some(10.0));
+    let points = parsed.get("points").and_then(Json::as_arr).expect("points array");
+    assert_eq!(points.len(), 1);
+    let p = &points[0];
+    assert_eq!(p.get("scenario").and_then(Json::as_str), Some("paper-1"));
+    assert_eq!(p.get("policy").and_then(Json::as_str), Some("kevlarflow"));
+    let metrics = p.get("metrics").expect("per-point metrics");
+    assert!(metrics.get("totals").is_some());
+    let windows = metrics.get("windows").and_then(Json::as_arr).expect("windows");
+    assert!(!windows.is_empty(), "a 150 s run with 10 s windows must seal windows");
+    // a fault scenario under kevlarflow must record recoveries
+    let totals = metrics.get("totals").unwrap();
+    let recov = totals
+        .get("kf_recoveries_total")
+        .and_then(|f| f.get("series"))
+        .and_then(Json::as_arr)
+        .expect("kf_recoveries_total series");
+    assert!(!recov.is_empty());
+    assert!(parsed.get("aggregate").is_some(), "cross-point aggregate present");
+}
+
+// ------------------------------------------------------------- perfetto
+
+fn paper1_trace() -> Json {
+    let s = paper1();
+    let policy = PolicySpec::kevlarflow();
+    let res = s.run_logged(s.default_rps, policy);
+    let meta = TraceMeta {
+        scenario: s.name.clone(),
+        policy: policy.label(),
+        rps: s.default_rps,
+        n_instances: s.n_instances,
+        n_stages: s.n_stages,
+    };
+    perfetto_json(&meta, &res)
+}
+
+#[test]
+fn perfetto_bytes_are_queue_backend_independent() {
+    let s = paper1();
+    let policy = PolicySpec::kevlarflow();
+    let meta = TraceMeta {
+        scenario: s.name.clone(),
+        policy: policy.label(),
+        rps: s.default_rps,
+        n_instances: s.n_instances,
+        n_stages: s.n_stages,
+    };
+    let render = |queue: QueueKind| {
+        perfetto_json(&meta, &s.run_logged_with_queue(s.default_rps, policy, queue)).to_string()
+    };
+    assert_eq!(render(QueueKind::Heap), render(QueueKind::Wheel));
+}
+
+#[test]
+fn perfetto_document_is_valid_chrome_tracing_json() {
+    let doc = paper1_trace();
+    let parsed = Json::parse(&doc.to_string()).expect("trace must parse");
+    assert_eq!(parsed.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    assert!(parsed.get("metadata").is_some());
+    let events = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+    assert!(!events.is_empty());
+
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    for e in events {
+        let ph = e.get("ph").and_then(Json::as_str).expect("every event has ph");
+        let pid = e.get("pid").and_then(Json::as_u64).expect("every event has pid");
+        let tid = e.get("tid").and_then(Json::as_u64).expect("every event has tid");
+        assert!(e.get("name").is_some());
+        if ph == "M" {
+            continue; // metadata events carry ts 0 by convention
+        }
+        assert!(matches!(ph, "X" | "i"), "unexpected phase {ph:?}");
+        let ts = e.get("ts").and_then(Json::as_f64).expect("timed events carry ts");
+        assert!(ts >= 0.0);
+        if ph == "X" {
+            let dur = e.get("dur").and_then(Json::as_f64).expect("slices carry dur");
+            assert!(dur >= 1.0, "slice durations have a 1 µs floor");
+        }
+        let prev = last_ts.insert((pid, tid), ts).unwrap_or(f64::NEG_INFINITY);
+        assert!(ts >= prev, "ts must be monotonic per (pid, tid) track: {prev} -> {ts}");
+    }
+}
+
+#[test]
+fn perfetto_trace_carries_recovery_phases_and_fault_instants() {
+    let doc = paper1_trace();
+    let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+    let mut slices: BTreeSet<&str> = BTreeSet::new();
+    let mut instants: BTreeSet<&str> = BTreeSet::new();
+    for e in events {
+        let name = e.get("name").and_then(Json::as_str).unwrap_or("");
+        match e.get("ph").and_then(Json::as_str) {
+            Some("X") => {
+                slices.insert(name);
+            }
+            Some("i") => {
+                instants.insert(name);
+            }
+            _ => {}
+        }
+    }
+    for phase in ["detect", "locate", "reform", "restore", "resume"] {
+        assert!(slices.contains(phase), "missing recovery slice {phase:?} in {slices:?}");
+    }
+    assert!(
+        slices.iter().any(|s| s.starts_with("degraded")),
+        "donor-splice recovery shows a degraded window: {slices:?}"
+    );
+    for inst in ["heartbeat_missed", "splice_donor", "promote_replicas"] {
+        assert!(instants.contains(inst), "missing instant {inst:?} in {instants:?}");
+    }
+}
+
+#[test]
+fn text_and_perfetto_render_the_same_exchange() {
+    let s = paper1();
+    let policy = PolicySpec::kevlarflow();
+    let res = s.run_logged(s.default_rps, policy);
+    let meta = TraceMeta {
+        scenario: s.name.clone(),
+        policy: policy.label(),
+        rps: s.default_rps,
+        n_instances: s.n_instances,
+        n_stages: s.n_stages,
+    };
+    let text = render_text(&meta, &res);
+    assert!(text.contains("paper-1"), "text renderer names the scenario");
+    assert!(text.contains("HeartbeatMissed"), "failure path appears verbatim");
+    let n_recoveries = res.recovery.completed.len();
+    assert!(n_recoveries > 0, "paper-1 must recover under kevlarflow");
+    let doc = perfetto_json(&meta, &res);
+    assert_eq!(
+        doc.get("metadata").and_then(|m| m.get("recoveries")).and_then(Json::as_u64),
+        Some(n_recoveries as u64),
+        "both renderers draw from the same captured exchange"
+    );
+}

@@ -1,0 +1,284 @@
+//! Property tests for the `obs` metric registry: label-set ordering
+//! determinism, histogram bucket-boundary edges (exact boundaries,
+//! +inf/NaN overflow, `total_cmp` on negative zero), and shard-merge
+//! associativity — `merge(a, merge(b, c)) == merge(merge(a, b), c)` and
+//! both equal to serial recording, the invariant that makes sweep
+//! metrics byte-identical across `--jobs`.
+
+use kevlarflow::config::NodeId;
+use kevlarflow::coordinator::prelude::{Action, Event};
+use kevlarflow::coordinator::recovery::RecoveryRecord;
+use kevlarflow::obs::{
+    exponential_buckets, latency_buckets_s, Histogram, LabelSet, Metric, Recorder, Registry,
+};
+
+// ------------------------------------------------------------ label sets
+
+#[test]
+fn label_sets_are_insertion_order_independent() {
+    let a = LabelSet::empty().with("instance", 3).with("stage", 1).with("kind", "x");
+    let b = LabelSet::empty().with("kind", "x").with("stage", 1).with("instance", 3);
+    assert_eq!(a, b);
+    let pairs: Vec<_> = a.pairs().collect();
+    // lexicographic by key, always
+    assert_eq!(pairs, [("instance", "3"), ("kind", "x"), ("stage", "1")]);
+}
+
+#[test]
+fn series_identity_ignores_insertion_order() {
+    let mut r1 = Registry::default();
+    let mut r2 = Registry::default();
+    let fwd = LabelSet::empty().with("a", 1).with("b", 2);
+    let rev = LabelSet::empty().with("b", 2).with("a", 1);
+    r1.counter("c", "h", &fwd, 5);
+    r2.counter("c", "h", &rev, 5);
+    assert_eq!(r1, r2);
+    assert_eq!(r1.to_json().to_string(), r2.to_json().to_string());
+}
+
+#[test]
+fn registry_json_is_deterministic_across_recording_orders() {
+    // the same series recorded in two different orders serialize
+    // identically: BTreeMaps all the way down
+    let series: Vec<LabelSet> =
+        (0..8).map(|i| LabelSet::empty().with("instance", i % 4).with("shard", i / 4)).collect();
+    let mut fwd = Registry::default();
+    for (i, l) in series.iter().enumerate() {
+        fwd.counter("events", "h", l, i as u64 + 1);
+    }
+    let mut rev = Registry::default();
+    for (i, l) in series.iter().enumerate().rev() {
+        rev.counter("events", "h", l, i as u64 + 1);
+    }
+    assert_eq!(fwd.to_json().to_string(), rev.to_json().to_string());
+}
+
+// ------------------------------------------------------------ histograms
+
+#[test]
+fn boundary_values_land_in_their_le_bucket() {
+    let mut h = Histogram::new(vec![1.0, 2.0, 4.0]);
+    h.observe(1.0); // exactly on the first bound → le=1 bucket
+    h.observe(2.0); // exactly on the second → le=2 bucket
+    h.observe(1.5);
+    assert_eq!(h.bucket_counts(), &[1, 2, 0, 0]);
+}
+
+#[test]
+fn overflow_bucket_catches_inf_and_nan() {
+    let mut h = Histogram::new(vec![1.0, 2.0]);
+    h.observe(f64::INFINITY);
+    h.observe(f64::NAN); // total_cmp puts NaN above +inf — no panic
+    h.observe(1e300);
+    assert_eq!(h.bucket_counts(), &[0, 0, 3]);
+    assert_eq!(h.count(), 3);
+}
+
+#[test]
+fn negative_zero_lands_at_the_zero_bound() {
+    // total_cmp orders -0.0 below +0.0, so a 0.0 bound is NOT "less
+    // than" -0.0 and the value stays in the first bucket
+    let mut h = Histogram::new(vec![0.0, 1.0]);
+    h.observe(-0.0);
+    h.observe(0.0);
+    assert_eq!(h.bucket_counts(), &[2, 0, 0]);
+}
+
+#[test]
+fn quantiles_are_monotone_and_bounded() {
+    let mut h = Histogram::new(exponential_buckets(0.01, 2.0, 16));
+    let mut v = 0.013;
+    for _ in 0..500 {
+        h.observe(v);
+        v = (v * 1.017) % 20.0 + 0.01;
+    }
+    let qs: Vec<f64> = [0.1, 0.5, 0.9, 0.99].iter().map(|&q| h.quantile(q)).collect();
+    assert!(qs.windows(2).all(|w| w[0] <= w[1]), "quantiles must be monotone: {qs:?}");
+    let last = *h.bounds().last().unwrap();
+    assert!(qs.iter().all(|&q| q >= 0.0 && q <= last));
+}
+
+// -------------------------------------------------------- merge algebra
+
+/// One recording operation, replayable into any registry.
+#[derive(Clone, Copy)]
+enum Op {
+    C(&'static str, u64),
+    G(&'static str, f64),
+    H(&'static str, f64),
+}
+
+fn apply(r: &mut Registry, ops: &[Op]) {
+    let buckets = latency_buckets_s();
+    for (i, op) in ops.iter().enumerate() {
+        let labels = LabelSet::empty().with("instance", i % 3);
+        match *op {
+            Op::C(name, v) => r.counter(name, "h", &labels, v),
+            Op::G(name, v) => r.gauge(name, "h", &labels, v),
+            Op::H(name, v) => r.observe(name, "h", &labels, &buckets, v),
+        }
+    }
+}
+
+fn op_stream() -> Vec<Op> {
+    let mut ops = Vec::new();
+    for i in 0..30u64 {
+        ops.push(Op::C("kf_events_total", i % 5 + 1));
+        ops.push(Op::G("kf_depth", (i as f64) * 0.5));
+        ops.push(Op::H("kf_latency_seconds", 0.01 * (i + 1) as f64));
+    }
+    ops
+}
+
+#[test]
+fn shard_merge_is_associative_and_equals_serial() {
+    let ops = op_stream();
+    let mut serial = Registry::default();
+    apply(&mut serial, &ops);
+
+    // three contiguous in-order shards, like three sweep workers
+    let chunk = ops.len() / 3;
+    let shards: Vec<Registry> = [&ops[..chunk], &ops[chunk..2 * chunk], &ops[2 * chunk..]]
+        .iter()
+        .map(|part| {
+            let mut r = Registry::default();
+            apply(&mut r, part);
+            r
+        })
+        .collect();
+
+    // left-associated: merge(merge(a, b), c)
+    let mut left = shards[0].clone();
+    left.merge_from(&shards[1]);
+    left.merge_from(&shards[2]);
+
+    // right-associated: merge(a, merge(b, c))
+    let mut bc = shards[1].clone();
+    bc.merge_from(&shards[2]);
+    let mut right = shards[0].clone();
+    right.merge_from(&bc);
+
+    assert_eq!(left, right, "merge must be associative");
+    assert_eq!(left, serial, "in-order shard merge must equal serial recording");
+    assert_eq!(left.to_json().to_string(), serial.to_json().to_string());
+}
+
+#[test]
+fn merge_semantics_per_kind() {
+    let l = LabelSet::empty();
+    let mut a = Registry::default();
+    let mut b = Registry::default();
+    a.counter("c", "h", &l, 2);
+    b.counter("c", "h", &l, 3);
+    a.gauge("g", "h", &l, 1.0);
+    b.gauge("g", "h", &l, 9.0);
+    a.observe("hist", "h", &l, &[1.0, 2.0], 0.5);
+    b.observe("hist", "h", &l, &[1.0, 2.0], 1.5);
+    a.merge_from(&b);
+    assert_eq!(a.get("c", &l), Some(&Metric::Counter(5)));
+    assert_eq!(a.get("g", &l), Some(&Metric::Gauge(9.0)), "gauge merge is right-biased");
+    match a.get("hist", &l) {
+        Some(Metric::Histogram(h)) => assert_eq!(h.bucket_counts(), &[1, 1, 0]),
+        other => panic!("expected histogram, got {other:?}"),
+    }
+}
+
+// --------------------------------------------------------- the recorder
+
+#[test]
+fn recorder_meters_exchanges_and_recoveries() {
+    let mut rec = Recorder::new(10.0);
+    let node = NodeId::new(0, 2);
+    let donor = NodeId::new(1, 2);
+    rec.exchange(
+        124.0,
+        &Event::HeartbeatMissed { node },
+        &[
+            Action::SpliceDonor { instance: 0, failed: node, donor },
+            Action::PromoteReplicas { instance: 0, donor },
+        ],
+    );
+    rec.recovery_completed(
+        155.0,
+        &RecoveryRecord {
+            failed: node,
+            donor,
+            injected_s: 120.0,
+            detected_s: 124.0,
+            resumed_s: 155.0,
+            replacement_s: 720.0,
+            phases_s: [3.0, 22.0, 3.0, 3.0],
+        },
+    );
+    rec.finish(155.0);
+
+    let r = rec.registry();
+    let ev = LabelSet::empty().with("event", "heartbeat_missed");
+    assert_eq!(r.get("kf_control_events_total", &ev), Some(&Metric::Counter(1)));
+    let splice = LabelSet::empty().with("kind", "splice");
+    assert_eq!(r.get("kf_reroutes_total", &splice), Some(&Metric::Counter(1)));
+    assert_eq!(
+        r.get("kf_recoveries_total", &LabelSet::empty()),
+        Some(&Metric::Counter(1))
+    );
+    let reform = LabelSet::empty().with("phase", "reform");
+    match r.get("kf_recovery_phase_seconds", &reform) {
+        Some(Metric::Histogram(h)) => {
+            assert_eq!(h.count(), 1);
+            assert!((h.sum() - 22.0).abs() < 1e-12);
+        }
+        other => panic!("expected phase histogram, got {other:?}"),
+    }
+    // activity at t=124 and t=155 with a 10 s window: two sealed windows
+    assert_eq!(rec.windows().len(), 2);
+    assert!(rec.windows()[0].t0_s <= 124.0 && 124.0 < rec.windows()[0].t1_s);
+}
+
+#[test]
+fn recorder_windows_partition_the_totals() {
+    let mut rec = Recorder::new(5.0);
+    for i in 0..40 {
+        rec.exchange(i as f64 * 0.9, &Event::SpareReady, &[]);
+    }
+    rec.finish(36.0);
+    let total = match rec.registry().get(
+        "kf_control_events_total",
+        &LabelSet::empty().with("event", "spare_ready"),
+    ) {
+        Some(&Metric::Counter(c)) => c,
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(total, 40);
+    let window_sum: u64 = rec
+        .windows()
+        .iter()
+        .map(|w| {
+            match w
+                .delta
+                .get("kf_control_events_total", &LabelSet::empty().with("event", "spare_ready"))
+            {
+                Some(&Metric::Counter(c)) => c,
+                _ => 0,
+            }
+        })
+        .sum();
+    assert_eq!(window_sum, total, "window deltas must partition the cumulative totals");
+    // windows tile the run without overlap
+    for w in rec.windows() {
+        assert!(w.t0_s < w.t1_s);
+    }
+    for pair in rec.windows().windows(2) {
+        assert!(pair[0].t1_s <= pair[1].t0_s + 1e-12);
+    }
+}
+
+#[test]
+fn recorder_json_round_trips() {
+    use kevlarflow::config::Json;
+    let mut rec = Recorder::new(10.0);
+    rec.exchange(1.0, &Event::SpareReady, &[]);
+    rec.finish(2.0);
+    let doc = rec.to_json();
+    assert_eq!(Json::parse(&doc.to_string()).unwrap(), doc);
+    assert!(doc.get("totals").is_some() && doc.get("windows").is_some());
+}
