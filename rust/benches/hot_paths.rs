@@ -10,9 +10,9 @@
 //!   events_per_sec}]}`; for micro rows `events_per_sec` is
 //!   iterations/s, for the `sim …` rows it is simulator events/s — the
 //!   headline throughput number; `mode` is `"quick"` or `"full"`).
-//!   The event-queue micro row and every `sim …` row appear once per
-//!   backend (`[heap]` / `[wheel]`), giving the measured comparison
-//!   that gates the default-`QueueKind` flip (EXPERIMENTS.md).
+//!   The event-queue micro row and every `sim …` / `fleet …` row appear
+//!   once per backend (`[heap]` / `[wheel]`), giving the measured
+//!   comparison that gates the default-`QueueKind` flip (EXPERIMENTS.md).
 //! * `--out FILE`   JSON output path (default `BENCH_hot_paths.json`)
 //! * `--quick`      ~20× fewer iterations + shortened sim windows (CI
 //!   schema check, not a stable measurement)
@@ -213,6 +213,45 @@ fn main() {
             rows.push(BenchRow {
                 name,
                 ns_per_iter: dt.as_nanos() as f64 / res.events_processed.max(1) as f64,
+                events_per_sec,
+            });
+        }
+    }
+
+    println!("\n== fleet simulation throughput ==");
+    // the fleet tier on both backends: one row per backend per scenario,
+    // same naming scheme as the `sim …` rows (the bench schema check in
+    // CI requires `fleet ` rows for both backends). `fleet-small` is the
+    // representative fleet; the regional-outage scene adds the drained
+    // front door. Runs shard over all cores — throughput is fleet
+    // events/s aggregated across clusters.
+    for fleet_name in ["fleet-small", "fleet-regional-outage"] {
+        let mut scn = kevlarflow::scenario::fleet_find(fleet_name).expect("registry entry");
+        if quick {
+            scn.arrival_window_s = scn.arrival_window_s.min(200.0);
+        }
+        for kind in [QueueKind::Heap, QueueKind::Wheel] {
+            let name = format!(
+                "fleet {fleet_name} [{}] ({})",
+                kind.label(),
+                if quick { "quick" } else { "full run" }
+            );
+            let t0 = Instant::now();
+            let res = scn.run(scn.default_rps, PolicySpec::kevlarflow(), kind, 0);
+            let dt = t0.elapsed();
+            let events = res.events_processed();
+            let events_per_sec = events as f64 / dt.as_secs_f64();
+            println!(
+                "{name:<52} {:>9.2?}   {:>9} events  {:>6.2} Mev/s  ({} reqs, {} clusters)",
+                dt,
+                events,
+                events_per_sec / 1e6,
+                res.merged_records().records.len(),
+                res.clusters.len(),
+            );
+            rows.push(BenchRow {
+                name,
+                ns_per_iter: dt.as_nanos() as f64 / events.max(1) as f64,
                 events_per_sec,
             });
         }

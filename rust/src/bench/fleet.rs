@@ -1,0 +1,301 @@
+//! Fleet sweep runner: execute a named fleet-scenario matrix across a
+//! policy axis and emit machine-readable JSON (`BENCH_fleet.json`)
+//! alongside comparison tables — the fleet-tier sibling of
+//! [`super::sweep`].
+//!
+//! One [`FleetRow`] is one `(fleet scenario, policy, rps)` fleet run:
+//! the fleet-wide [`Summary`] over every cluster's completions
+//! (concatenated in cluster order) plus the aggregated fault-path
+//! counters and the front-door drop count. The `--jobs` axis shards
+//! *inside* each fleet run (per-cluster execution, see
+//! [`crate::sim::FleetSim`]) while matrix points run serially — so the
+//! emitted bytes are independent of `--jobs` by construction, pinned by
+//! `rust/tests/sweep_golden.rs` and the CI `cmp` steps.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+
+use crate::config::{Json, PolicySpec, QueueKind};
+use crate::metrics::Summary;
+use crate::obs;
+use crate::scenario::{fleet_find, fleet_registry, FleetScenario, ScenarioError};
+use crate::sim::FleetResult;
+
+/// Results of one `(fleet scenario, policy, rps)` fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetRow {
+    pub scenario: String,
+    pub policy: PolicySpec,
+    pub rps: f64,
+    /// Cluster count of the fleet (the one fleet-specific row column).
+    pub clusters: usize,
+    /// Fleet-wide summary over every cluster's completions.
+    pub summary: Summary,
+    pub recoveries: usize,
+    pub mean_recovery_s: Option<f64>,
+    pub preemptions: u64,
+    pub full_recomputes: u64,
+    /// Per-cluster incompletes plus front-door drops.
+    pub incomplete: usize,
+    pub retries: u64,
+}
+
+fn row_from(s: &FleetScenario, rps: f64, policy: PolicySpec, res: &FleetResult) -> FleetRow {
+    let merged = res.merged_records();
+    let retries = merged.records.iter().map(|r| r.retries as u64).sum();
+    let times: Vec<f64> = res
+        .clusters
+        .iter()
+        .flat_map(|c| c.recovery.completed.iter().map(|r| r.recovery_time_s()))
+        .collect();
+    let mean_recovery_s = if times.is_empty() {
+        None
+    } else {
+        Some(times.iter().sum::<f64>() / times.len() as f64)
+    };
+    FleetRow {
+        scenario: s.name.clone(),
+        policy,
+        rps,
+        clusters: res.clusters.len(),
+        summary: merged.summary(),
+        recoveries: times.len(),
+        mean_recovery_s,
+        preemptions: res.preemptions(),
+        full_recomputes: res.full_recomputes(),
+        incomplete: res.incomplete(),
+        retries,
+    }
+}
+
+/// Run one matrix point; `jobs` shards the fleet's per-cluster
+/// execution (never the row content).
+pub fn run_fleet_point(
+    s: &FleetScenario,
+    rps: f64,
+    policy: PolicySpec,
+    queue: QueueKind,
+    jobs: usize,
+) -> FleetRow {
+    row_from(s, rps, policy, &s.run(rps, policy, queue, jobs))
+}
+
+/// [`run_fleet_point`] with a windowed [`obs::Recorder`] on every
+/// cluster, folded across the fleet in cluster order
+/// ([`FleetResult::merged_obs`]) into one [`obs::PointDoc`].
+pub fn run_fleet_point_observed(
+    s: &FleetScenario,
+    rps: f64,
+    policy: PolicySpec,
+    queue: QueueKind,
+    jobs: usize,
+    window_s: f64,
+) -> (FleetRow, obs::PointDoc) {
+    let res = s.run_observed(rps, policy, queue, window_s, jobs);
+    let row = row_from(s, rps, policy, &res);
+    let doc = obs::PointDoc {
+        scenario: s.name.clone(),
+        policy: policy.label(),
+        rps,
+        recorder: res.merged_obs().expect("run_observed attaches a recorder per cluster"),
+    };
+    (row, doc)
+}
+
+/// Execute fleet scenarios × policies × RPS. Same matrix semantics as
+/// [`super::sweep::run_sweep`]: `names` empty runs the whole fleet
+/// registry, `full_grid` sweeps each scenario's grid, `window_s`
+/// overrides arrival windows (CI uses a short one), `policies` empty
+/// uses each scenario's own axis. Points run serially; `jobs` shards
+/// each fleet run internally, so output bytes never depend on it.
+pub fn run_fleet_sweep(
+    names: &[String],
+    full_grid: bool,
+    window_s: Option<f64>,
+    quiet: bool,
+    jobs: usize,
+    policies: &[PolicySpec],
+    queue: QueueKind,
+) -> Result<Vec<FleetRow>, ScenarioError> {
+    let rows = run_fleet_matrix(names, full_grid, window_s, policies, |s, rps, p| {
+        run_fleet_point(s, rps, p, queue, jobs)
+    })?;
+    if !quiet {
+        print_fleet_rows(&rows);
+    }
+    Ok(rows)
+}
+
+/// [`run_fleet_sweep`] with a merged [`obs::Recorder`] per point (in
+/// matrix order, so [`obs::metrics_json`] is deterministic).
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_sweep_observed(
+    names: &[String],
+    full_grid: bool,
+    window_s: Option<f64>,
+    quiet: bool,
+    jobs: usize,
+    policies: &[PolicySpec],
+    queue: QueueKind,
+    metrics_window_s: f64,
+) -> Result<(Vec<FleetRow>, Vec<obs::PointDoc>), ScenarioError> {
+    let results = run_fleet_matrix(names, full_grid, window_s, policies, |s, rps, p| {
+        run_fleet_point_observed(s, rps, p, queue, jobs, metrics_window_s)
+    })?;
+    let (rows, points) = results.into_iter().unzip();
+    if !quiet {
+        print_fleet_rows(&rows);
+    }
+    Ok((rows, points))
+}
+
+/// Enumerate the fleet matrix in output order and run every point
+/// serially (parallelism lives inside each fleet run).
+fn run_fleet_matrix<R>(
+    names: &[String],
+    full_grid: bool,
+    window_s: Option<f64>,
+    policies: &[PolicySpec],
+    run: impl Fn(&FleetScenario, f64, PolicySpec) -> R,
+) -> Result<Vec<R>, ScenarioError> {
+    let mut scenarios: Vec<FleetScenario> = if names.is_empty() {
+        fleet_registry()
+    } else {
+        names
+            .iter()
+            .map(|n| fleet_find(n))
+            .collect::<Result<Vec<FleetScenario>, _>>()?
+    };
+    if let Some(w) = window_s {
+        for s in &mut scenarios {
+            s.arrival_window_s = w;
+        }
+    }
+    let mut out = Vec::new();
+    for s in &scenarios {
+        let grid: Vec<f64> = if full_grid { s.rps_grid.clone() } else { vec![s.default_rps] };
+        let axis: Vec<PolicySpec> =
+            if policies.is_empty() { s.sweep_policies() } else { policies.to_vec() };
+        for &rps in &grid {
+            for &policy in &axis {
+                out.push(run(s, rps, policy));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Markdown comparison table (one line per matrix point).
+pub fn print_fleet_rows(rows: &[FleetRow]) {
+    println!("\n## fleet sweep — policy comparison\n");
+    println!(
+        "| fleet scenario | clusters | policy | RPS | n | lat avg (s) | lat p99 (s) | \
+         TTFT p99 (s) | recoveries | retries | incomplete |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|---|---|");
+    for r in rows {
+        println!(
+            "| {} | {} | {} | {:.1} | {} | {:.2} | {:.2} | {:.2} | {} | {} | {} |",
+            r.scenario,
+            r.clusters,
+            r.policy.label(),
+            r.rps,
+            r.summary.n,
+            r.summary.latency_avg,
+            r.summary.latency_p99,
+            r.summary.ttft_p99,
+            r.recoveries,
+            r.retries,
+            r.incomplete,
+        );
+    }
+}
+
+fn row_json(r: &FleetRow) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("scenario".into(), Json::Str(r.scenario.clone()));
+    m.insert("policy".into(), Json::Str(r.policy.label()));
+    m.insert("rps".into(), Json::Num(r.rps));
+    m.insert("clusters".into(), Json::Num(r.clusters as f64));
+    m.insert("n".into(), Json::Num(r.summary.n as f64));
+    m.insert("latency_avg_s".into(), Json::Num(r.summary.latency_avg));
+    m.insert("latency_p99_s".into(), Json::Num(r.summary.latency_p99));
+    m.insert("ttft_avg_s".into(), Json::Num(r.summary.ttft_avg));
+    m.insert("ttft_p99_s".into(), Json::Num(r.summary.ttft_p99));
+    m.insert("tpot_avg_s".into(), Json::Num(r.summary.tpot_avg));
+    m.insert("tpot_p99_s".into(), Json::Num(r.summary.tpot_p99));
+    m.insert("recoveries".into(), Json::Num(r.recoveries as f64));
+    m.insert(
+        "mean_recovery_s".into(),
+        r.mean_recovery_s.map(Json::Num).unwrap_or(Json::Null),
+    );
+    m.insert("preemptions".into(), Json::Num(r.preemptions as f64));
+    m.insert("full_recomputes".into(), Json::Num(r.full_recomputes as f64));
+    m.insert("incomplete".into(), Json::Num(r.incomplete as f64));
+    m.insert("retries".into(), Json::Num(r.retries as f64));
+    Json::Obj(m)
+}
+
+/// The machine-readable fleet result document (schema in
+/// `EXPERIMENTS.md`).
+pub fn fleet_sweep_json(rows: &[FleetRow]) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("suite".into(), Json::Str("kevlarflow-fleet".into()));
+    m.insert("version".into(), Json::Num(1.0));
+    m.insert("rows".into(), Json::Arr(rows.iter().map(row_json).collect()));
+    Json::Obj(m)
+}
+
+/// Write the fleet sweep document (compact JSON, trailing newline).
+pub fn write_fleet_sweep(path: &std::path::Path, rows: &[FleetRow]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(fleet_sweep_json(rows).to_string().as_bytes())?;
+    f.write_all(b"\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_sweep_rejects_unknown_names() {
+        let err = run_fleet_sweep(
+            &["nope".to_string()],
+            false,
+            Some(50.0),
+            true,
+            1,
+            &[],
+            QueueKind::Heap,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ScenarioError::UnknownScenario(_)));
+    }
+
+    #[test]
+    fn fleet_json_document_shape() {
+        let row = FleetRow {
+            scenario: "fleet-small".into(),
+            policy: PolicySpec::kevlarflow(),
+            rps: 4.0,
+            clusters: 4,
+            summary: Summary::default(),
+            recoveries: 1,
+            mean_recovery_s: Some(31.5),
+            preemptions: 0,
+            full_recomputes: 2,
+            incomplete: 0,
+            retries: 0,
+        };
+        let doc = fleet_sweep_json(&[row]);
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("kevlarflow-fleet"));
+        assert_eq!(doc.get("version").unwrap().as_f64(), Some(1.0));
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("clusters").unwrap().as_f64(), Some(4.0));
+        assert_eq!(rows[0].get("policy").unwrap().as_str(), Some("kevlarflow"));
+        // round-trips through the parser
+        let text = doc.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+}

@@ -20,6 +20,7 @@
 //! assert!(bench::healthy(12, 2.0, PolicySpec::standard()).is_err());
 //! ```
 
+pub mod fleet;
 pub mod sweep;
 
 use crate::config::{ClusterConfig, ExperimentConfig, PolicySpec};

@@ -1,0 +1,170 @@
+//! Fleet tier of the hierarchical control plane: a deterministic
+//! cluster-level router in front of many per-cluster
+//! [`ControlPlane`](super::ControlPlane) facades.
+//!
+//! The global tier deliberately reuses the per-cluster [`Router`] and its
+//! [`InstanceView`] vocabulary at cluster granularity — a cluster is one
+//! "instance" of the fleet, and the same `rr`/`ll`/`p2c`
+//! [`RoutePolicy`] strategies apply unchanged. What differs is the load
+//! signal: a real fleet front door does not see per-request completions
+//! inside remote clusters (that would require cross-cluster
+//! synchronization on every completion), so the load view here is the
+//! count of assignments this router made to each cluster within a
+//! trailing window (`view_window_s`) — a pure function of the arrival
+//! stream prefix, which is what makes the fleet layer's per-cluster
+//! sharding embarrassingly parallel AND bit-deterministic: every worker
+//! can replay the identical global routing sequence from the seed alone
+//! (see [`crate::sim::FleetSim`]).
+//!
+//! Cluster-level availability at this tier is likewise front-door state,
+//! not inferred fault state: a [`crate::scenario::FleetScenario`] scripts
+//! explicit *drain windows* per cluster (a regional outage pulls the
+//! region from the global LB config), and the router skips drained
+//! clusters exactly as the per-cluster router skips dead instances.
+
+use std::collections::VecDeque;
+
+use crate::config::RoutePolicy;
+
+use super::router::{InstanceView, Router};
+
+/// Deterministic cluster-level router over per-cluster load views.
+#[derive(Debug, Clone)]
+pub struct GlobalRouter {
+    router: Router,
+    /// One view per cluster; `id` is the cluster index, `load` the
+    /// trailing-window assignment count, `serving` the drain state.
+    views: Vec<InstanceView>,
+    /// Assignment timestamps per cluster, expired off the front as the
+    /// trailing window advances.
+    window: Vec<VecDeque<f64>>,
+    view_window_s: f64,
+    /// Scripted `[start_s, end_s)` drain windows per cluster.
+    drains: Vec<Vec<(f64, f64)>>,
+}
+
+impl GlobalRouter {
+    pub fn new(
+        policy: RoutePolicy,
+        seed: u64,
+        n_clusters: usize,
+        view_window_s: f64,
+        drains: Vec<Vec<(f64, f64)>>,
+    ) -> Self {
+        assert_eq!(drains.len(), n_clusters, "one drain script per cluster");
+        assert!(view_window_s > 0.0, "load view needs a positive window");
+        Self {
+            router: Router::new(policy, seed),
+            views: (0..n_clusters)
+                .map(|id| InstanceView { id, serving: true, load: 0 })
+                .collect(),
+            window: (0..n_clusters).map(|_| VecDeque::new()).collect(),
+            view_window_s,
+            drains,
+        }
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.views.len()
+    }
+
+    /// Route the arrival at time `t` to a cluster, updating the load
+    /// views first (expire stale assignments, apply drain windows).
+    /// Returns `None` when every cluster is drained — the fleet layer
+    /// drops such arrivals at the front door (counted, never served).
+    ///
+    /// `t` must be nondecreasing across calls (arrival streams are).
+    pub fn route(&mut self, t: f64) -> Option<usize> {
+        let horizon = t - self.view_window_s;
+        for c in 0..self.views.len() {
+            while self.window[c].front().is_some_and(|&ts| ts <= horizon) {
+                self.window[c].pop_front();
+            }
+            self.views[c].load = self.window[c].len();
+            self.views[c].serving =
+                !self.drains[c].iter().any(|&(a, b)| t >= a && t < b);
+        }
+        let pick = self.router.pick(&self.views)?;
+        self.window[pick].push_back(t);
+        Some(pick)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rr(n: usize) -> GlobalRouter {
+        GlobalRouter::new(RoutePolicy::RoundRobin, 42, n, 60.0, vec![Vec::new(); n])
+    }
+
+    #[test]
+    fn round_robin_over_clusters() {
+        let mut g = rr(3);
+        let picks: Vec<_> = (0..6).map(|i| g.route(i as f64).unwrap()).collect();
+        assert_eq!(picks, [0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn fleet_of_one_always_routes_to_cluster_zero() {
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::PowerOfTwo]
+        {
+            let mut g =
+                GlobalRouter::new(policy, 7, 1, 60.0, vec![Vec::new()]);
+            assert!((0..50).all(|i| g.route(i as f64 * 0.1) == Some(0)), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn drain_window_pulls_cluster_from_rotation() {
+        let mut g = GlobalRouter::new(
+            RoutePolicy::RoundRobin,
+            1,
+            2,
+            60.0,
+            vec![Vec::new(), vec![(10.0, 20.0)]],
+        );
+        assert_eq!(g.route(9.0), Some(0));
+        assert_eq!(g.route(9.5), Some(1));
+        // cluster 1 drained on [10, 20)
+        assert!((0..5).all(|i| g.route(10.0 + i as f64) == Some(0)));
+        assert_eq!(g.route(20.0), Some(1), "drain end is exclusive");
+        // all clusters drained -> front-door drop
+        let mut g = GlobalRouter::new(
+            RoutePolicy::RoundRobin,
+            1,
+            2,
+            60.0,
+            vec![vec![(0.0, 5.0)], vec![(0.0, 5.0)]],
+        );
+        assert_eq!(g.route(1.0), None);
+        assert!(g.route(5.0).is_some());
+    }
+
+    #[test]
+    fn least_loaded_follows_trailing_window() {
+        let mut g =
+            GlobalRouter::new(RoutePolicy::LeastLoaded, 3, 2, 10.0, vec![Vec::new(); 2]);
+        // pile assignments onto whichever cluster is picked at t=0..3
+        let early: Vec<_> = (0..4).map(|i| g.route(i as f64).unwrap()).collect();
+        assert_eq!(early, [0, 1, 0, 1], "ties alternate via the cursor tiebreak");
+        // after the window expires all loads reset; cursor tiebreak resumes
+        let late = g.route(100.0).unwrap();
+        assert_eq!(late, 0);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let mut g = GlobalRouter::new(
+                RoutePolicy::PowerOfTwo,
+                9,
+                4,
+                30.0,
+                vec![Vec::new(); 4],
+            );
+            (0..200).map(|i| g.route(i as f64 * 0.25)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

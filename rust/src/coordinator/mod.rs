@@ -21,6 +21,7 @@
 //! | Background block-wise KV replication (ring) | [`replication`] |
 //! | Decoupled-init recovery (donor splice, 30 s MTTR) | [`recovery`] |
 //! | Recovery strategy arms (full-reinit / donor-splice / spare-pool / checkpoint-restore) | [`policy`] |
+//! | Fleet tier: cluster-level routing over front-door load views | [`global`] |
 //! | Policy configuration (route × recovery × replication axes) | [`crate::config::PolicySpec`] |
 //!
 //! The submodules below [`control`] are the facade's internals; they stay
@@ -28,6 +29,7 @@
 //! ever construct a [`ControlPlane`].
 
 pub mod control;
+pub mod global;
 pub mod membership;
 pub mod policy;
 pub mod recovery;
@@ -36,6 +38,7 @@ pub mod reroute;
 pub mod router;
 
 pub use control::ControlPlane;
+pub use global::GlobalRouter;
 pub use membership::Membership;
 pub use recovery::{RecoveryManager, RecoveryPhase, RecoveryPlan};
 pub use replication::ReplicationPlanner;

@@ -8,6 +8,7 @@
 //! Usage:
 //!   kevlarflow bench <fig3|fig4|fig6|fig7|fig8|fig9|table1|tpot|all> [--scene N]
 //!   kevlarflow scenarios list|run|sweep           the fault-scenario suite
+//!   kevlarflow fleet list|run|sweep               the fleet-scale suite
 //!   kevlarflow trace [--scenario NAME] [--rps R]  dump the control-plane log
 //!   kevlarflow generate [PROMPT] [--n TOKENS]     (requires --features pjrt)
 //!   kevlarflow inspect-artifacts                  (requires --features pjrt)
@@ -16,7 +17,7 @@ use anyhow::{bail, Context, Result};
 
 use kevlarflow::bench;
 use kevlarflow::config::{PolicySpec, QueueKind};
-use kevlarflow::scenario::{self, Scenario};
+use kevlarflow::scenario::{self, FleetScenario, Scenario};
 
 const USAGE: &str = "\
 kevlarflow — fault-tolerant LLM serving (KevlarFlow reproduction)
@@ -41,6 +42,24 @@ USAGE:
                                               --queue backend), write
                                               JSON results
                                               (default out: BENCH_scenarios.json)
+  kevlarflow fleet list                       show the fleet-scenario registry
+  kevlarflow fleet run <NAME> [--rps R] [--policy SPEC|both] [--window S]
+                      [--file SPEC.json] [--queue heap|wheel] [--jobs N]
+                      [--metrics-out FILE]
+                                              run one fleet scenario (many
+                                              clusters behind the global
+                                              router); --jobs shards the
+                                              per-cluster execution (0 = all
+                                              cores) without changing any
+                                              output byte
+  kevlarflow fleet sweep [--out FILE] [--only a,b] [--full] [--window S]
+                         [--jobs N] [--policies SPEC,SPEC,...]
+                         [--queue heap|wheel] [--metrics-out FILE]
+                                              run the fleet matrix, write JSON
+                                              results (default out:
+                                              BENCH_fleet.json); bytes are
+                                              identical for any --jobs and any
+                                              --queue backend
   kevlarflow trace [--scenario NAME | --scene N] [--rps R] [--policy SPEC]
                    [--queue heap|wheel] [--perfetto FILE]
                                               run a failure scenario and print
@@ -80,6 +99,15 @@ fn main() -> Result<()> {
                 "run" => scenarios_run(&args),
                 "sweep" => scenarios_sweep(&args),
                 other => bail!("unknown scenarios subcommand '{other}' (list, run, sweep)"),
+            }
+        }
+        Some("fleet") => {
+            let sub = args.get(1).cloned().unwrap_or_else(|| "list".into());
+            match sub.as_str() {
+                "list" => fleet_list(),
+                "run" => fleet_run(&args),
+                "sweep" => fleet_sweep(&args),
+                other => bail!("unknown fleet subcommand '{other}' (list, run, sweep)"),
             }
         }
         Some("trace") => {
@@ -343,6 +371,148 @@ fn scenarios_sweep(args: &[String]) -> Result<()> {
         bench::sweep::run_sweep(&names, full, window, false, jobs, &policies, queue)?
     };
     bench::sweep::write_sweep(std::path::Path::new(out), &rows)
+        .with_context(|| format!("writing {out}"))?;
+    println!("\nwrote {} rows to {out}", rows.len());
+    Ok(())
+}
+
+fn fleet_list() -> Result<()> {
+    println!("## registered fleet scenarios (kevlarflow fleet run <NAME>)\n");
+    println!(
+        "| name | clusters | cluster shape | route | faults | drains | \
+         first fault (s) | default RPS | summary |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|");
+    for s in scenario::fleet_registry() {
+        let first = s
+            .first_fault_s()
+            .map(|t| format!("{t:.0}"))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "| {} | {} | {}x{} | {} | {} | {} | {} | {:.1} | {} |",
+            s.name,
+            s.n_clusters,
+            s.n_instances,
+            s.n_stages,
+            s.route.label(),
+            s.faults.len(),
+            s.drains.len(),
+            first,
+            s.default_rps,
+            s.summary,
+        );
+    }
+    Ok(())
+}
+
+/// Resolve the fleet scenario a `fleet run` invocation names: `--file`
+/// loads a JSON spec, otherwise the positional NAME hits the registry.
+fn resolve_fleet(args: &[String]) -> Result<FleetScenario> {
+    if let Some(path) = flag_value(args, "--file") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fleet spec {path}"))?;
+        return Ok(FleetScenario::from_json_str(&text)?);
+    }
+    let Some(name) = args.get(2).filter(|a| !a.starts_with("--")) else {
+        bail!("fleet run needs a fleet scenario NAME or --file SPEC.json");
+    };
+    Ok(scenario::fleet_find(name)?)
+}
+
+fn fleet_run(args: &[String]) -> Result<()> {
+    let mut s = resolve_fleet(args)?;
+    if let Some(w) = flag_value(args, "--window") {
+        s.arrival_window_s = w.parse::<f64>()?;
+    }
+    let rps = flag_value(args, "--rps")
+        .map(|v| v.parse::<f64>())
+        .transpose()?
+        .unwrap_or(s.default_rps);
+    let policies: Vec<PolicySpec> = match flag_value(args, "--policy") {
+        None | Some("both") => s.sweep_policies(),
+        Some(p) => vec![parse_policy(p)?],
+    };
+    let queue = parse_queue(args)?;
+    let jobs = flag_value(args, "--jobs")
+        .map(|v| v.parse::<usize>())
+        .transpose()?
+        .unwrap_or(0);
+    let metrics_out = flag_value(args, "--metrics-out");
+    println!(
+        "## fleet {} — {} ({} clusters, route {}, RPS {rps:.1})",
+        s.name,
+        s.summary,
+        s.n_clusters,
+        s.route.label()
+    );
+    println!("   stresses: {}\n", s.stresses);
+    let rows: Vec<_> = if let Some(path) = metrics_out {
+        let (rows, points): (Vec<_>, Vec<_>) = policies
+            .iter()
+            .map(|&p| {
+                bench::fleet::run_fleet_point_observed(
+                    &s,
+                    rps,
+                    p,
+                    queue,
+                    jobs,
+                    bench::sweep::METRICS_WINDOW_S,
+                )
+            })
+            .unzip();
+        kevlarflow::obs::write_metrics(std::path::Path::new(path), &points)
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote metrics for {} points to {path}\n", points.len());
+        rows
+    } else {
+        policies
+            .iter()
+            .map(|&p| bench::fleet::run_fleet_point(&s, rps, p, queue, jobs))
+            .collect()
+    };
+    bench::fleet::print_fleet_rows(&rows);
+    Ok(())
+}
+
+fn fleet_sweep(args: &[String]) -> Result<()> {
+    let names: Vec<String> = flag_value(args, "--only")
+        .map(|v| v.split(',').map(str::to_string).collect())
+        .unwrap_or_default();
+    let full = args.iter().any(|a| a == "--full");
+    let window = flag_value(args, "--window")
+        .map(|v| v.parse::<f64>())
+        .transpose()?;
+    let jobs = flag_value(args, "--jobs")
+        .map(|v| v.parse::<usize>())
+        .transpose()?
+        .unwrap_or(0);
+    let policies: Vec<PolicySpec> = match flag_value(args, "--policies") {
+        None => Vec::new(),
+        Some(list) => PolicySpec::parse_list(list).map_err(|bad| {
+            anyhow::anyhow!("unknown policy '{bad}' in --policies (see usage for the spec grammar)")
+        })?,
+    };
+    let queue = parse_queue(args)?;
+    let out = flag_value(args, "--out").unwrap_or("BENCH_fleet.json");
+    let rows = if let Some(metrics_out) = flag_value(args, "--metrics-out") {
+        let (rows, points) = bench::fleet::run_fleet_sweep_observed(
+            &names,
+            full,
+            window,
+            false,
+            jobs,
+            &policies,
+            queue,
+            bench::sweep::METRICS_WINDOW_S,
+        )?;
+        kevlarflow::obs::write_metrics(std::path::Path::new(metrics_out), &points)
+            .with_context(|| format!("writing {metrics_out}"))?;
+        println!("\nwrote metrics for {} points to {metrics_out}", points.len());
+        rows
+    } else {
+        bench::fleet::run_fleet_sweep(&names, full, window, false, jobs, &policies, queue)?
+    };
+    bench::fleet::write_fleet_sweep(std::path::Path::new(out), &rows)
         .with_context(|| format!("writing {out}"))?;
     println!("\nwrote {} rows to {out}", rows.len());
     Ok(())

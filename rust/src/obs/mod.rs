@@ -549,6 +549,56 @@ impl Recorder {
         self.prev = self.cum.clone();
     }
 
+    /// Fold another (finished) recorder into this one — the fleet layer's
+    /// cross-cluster merge. Cumulative registries fold via
+    /// [`Registry::merge_from`]; window lists linear-merge by start time
+    /// (both are sorted — seals only move forward), and windows sharing a
+    /// `t0_s` merge their deltas, keeping the later `t1_s` (full windows
+    /// agree exactly; only trailing partials can differ). Associative, so
+    /// folding per-cluster recorders in cluster order is independent of
+    /// how the fleet run was sharded (`--jobs`).
+    ///
+    /// Same-labeled series collide across clusters under registry
+    /// semantics: counters and histograms sum (the fleet-wide reading),
+    /// gauges right-bias (the merged value is the last cluster's sample,
+    /// a representative — per-cluster gauges are in each cluster's own
+    /// `SimResult::obs`).
+    pub fn merge_from(&mut self, other: &Recorder) {
+        assert_eq!(
+            self.window_s, other.window_s,
+            "recorder merge across different window cadences"
+        );
+        self.cum.merge_from(&other.cum);
+        let mut a = std::mem::take(&mut self.windows).into_iter().peekable();
+        let mut b = other.windows.iter().cloned().peekable();
+        let mut out = Vec::new();
+        loop {
+            let take_a = match (a.peek(), b.peek()) {
+                (Some(x), Some(y)) => match x.t0_s.total_cmp(&y.t0_s) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Greater => false,
+                    std::cmp::Ordering::Equal => {
+                        let mut w = a.next().unwrap();
+                        let y = b.next().unwrap();
+                        w.t1_s = if w.t1_s.total_cmp(&y.t1_s).is_lt() { y.t1_s } else { w.t1_s };
+                        w.delta.merge_from(&y.delta);
+                        out.push(w);
+                        continue;
+                    }
+                },
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            out.push(if take_a { a.next().unwrap() } else { b.next().unwrap() });
+        }
+        self.windows = out;
+        if other.window_start > self.window_start {
+            self.window_start = other.window_start;
+        }
+        self.prev = self.cum.clone();
+    }
+
     // ------------------------------------------------- recording surface
 
     /// Record one control-plane exchange `(event, actions)` — the hook
@@ -932,6 +982,42 @@ mod tests {
         assert_eq!(rec.windows()[1].delta.get("x", &l), Some(&Metric::Counter(4)));
         assert_eq!(rec.registry().get("x", &l), Some(&Metric::Counter(5)));
         assert_eq!(rec.windows()[1].t1_s, 15.0);
+    }
+
+    #[test]
+    fn recorder_merge_matches_serial_and_is_associative() {
+        let shard = |offsets: &[f64]| {
+            let mut r = Recorder::new(10.0);
+            for &t in offsets {
+                r.preemption(t);
+            }
+            r.finish(offsets.last().copied().unwrap_or(0.0));
+            r
+        };
+        // serial recording of the union of activity
+        let mut all: Vec<f64> = vec![1.0, 3.0, 12.0, 14.0, 21.0];
+        all.sort_by(f64::total_cmp);
+        let serial = shard(&all);
+        // shard it two ways and fold in order
+        let (a, b, c) = (shard(&[1.0, 12.0]), shard(&[3.0, 21.0]), shard(&[14.0]));
+        let mut left = a.clone();
+        left.merge_from(&b);
+        left.merge_from(&c);
+        let mut bc = b.clone();
+        bc.merge_from(&c);
+        let mut right = a.clone();
+        right.merge_from(&bc);
+        assert_eq!(left, right, "merge must be associative");
+        assert_eq!(left.registry(), serial.registry(), "totals must match serial");
+        assert_eq!(
+            left.windows().len(),
+            serial.windows().len(),
+            "same sealed windows as serial"
+        );
+        for (m, s) in left.windows().iter().zip(serial.windows()) {
+            assert_eq!(m.t0_s, s.t0_s);
+            assert_eq!(m.delta, s.delta);
+        }
     }
 
     #[test]

@@ -1,0 +1,517 @@
+//! Declarative fleet scenarios: a [`FleetScenario`] spec (cluster count
+//! and shape, global routing tier, fleet-wide workload, faults addressed
+//! as `(cluster, node)`, scripted regional drains) buildable in code and
+//! loadable from JSON, plus the registry behind
+//! `kevlarflow fleet list|run|sweep`.
+//!
+//! A fleet scenario lowers into a [`FleetSpec`] —
+//! one [`ExperimentConfig`] per cluster (seed `fleet seed + cluster
+//! index`, faults filtered to the cluster) plus the global stream and
+//! routing parameters — and runs through [`FleetSim`]. A fleet of one
+//! cluster lowers to exactly the config [`Scenario::to_experiment_queued`]
+//! produces, which is what makes the fleet ≡ cluster differential proof
+//! in `rust/tests/fleet_props.rs` a bit-exactness statement rather than a
+//! statistical one.
+
+use crate::config::{
+    ClusterConfig, ExperimentConfig, Json, PolicySpec, QueueKind, RoutePolicy,
+};
+use crate::sim::{FleetResult, FleetSim, FleetSpec};
+use crate::workload::{ArrivalProcess, WorkloadSpec};
+
+use super::{
+    fault_from_json, fault_json, field, num_field, str_field, workload_from_json,
+    workload_json, FaultOp, Scenario, ScenarioError, FAULT_T,
+};
+
+/// Default trailing window of the global router's front-door load views.
+pub const DEFAULT_VIEW_WINDOW_S: f64 = 60.0;
+
+/// A complete, declarative fleet experiment: how many clusters of what
+/// shape, how the global tier routes over them, what traffic the fleet
+/// front door offers, and which `(cluster, node)` faults and regional
+/// drains to script.
+#[derive(Debug, Clone)]
+pub struct FleetScenario {
+    /// Registry key (kebab-case, no whitespace).
+    pub name: String,
+    /// One-line description for `fleet list` / EXPERIMENTS.md.
+    pub summary: String,
+    /// Which fleet-tier mechanism the scenario stresses.
+    pub stresses: String,
+    pub n_clusters: usize,
+    /// Per-cluster shape (every cluster is uniform).
+    pub n_instances: usize,
+    pub n_stages: usize,
+    /// Fleet-wide workload: one stream feeds the global router.
+    pub workload: WorkloadSpec,
+    pub arrival_window_s: f64,
+    /// Fleet-wide RPS used by `fleet run` and quick sweeps.
+    pub default_rps: f64,
+    /// Fleet-wide RPS grid for sweeps.
+    pub rps_grid: Vec<f64>,
+    /// Cluster-level routing strategy of the global tier.
+    pub route: RoutePolicy,
+    /// Trailing window of the global load views.
+    pub view_window_s: f64,
+    /// Scripted faults, addressed as `(cluster, node fault)`.
+    pub faults: Vec<(usize, FaultOp)>,
+    /// Scripted regional outages: `(cluster, start_s, end_s)` drain
+    /// windows at the global LB (end exclusive).
+    pub drains: Vec<(usize, f64, f64)>,
+    pub seed: u64,
+    /// Per-scenario policy override for sweeps; empty = the two presets.
+    pub policies: Vec<PolicySpec>,
+}
+
+impl FleetScenario {
+    /// Wrap a single-cluster [`Scenario`] into an `n_clusters`-wide fleet
+    /// (faults land in cluster 0, no drains). With `n_clusters == 1`
+    /// this is the fleet-of-one spec the differential proof runs: the
+    /// lowered cluster 0 config equals `s.to_experiment_queued(..)`
+    /// field for field.
+    pub fn from_scenario(s: &Scenario, n_clusters: usize, route: RoutePolicy) -> FleetScenario {
+        FleetScenario {
+            name: format!("fleet-{}", s.name),
+            summary: format!("{} (fleet of {n_clusters})", s.summary),
+            stresses: s.stresses.clone(),
+            n_clusters,
+            n_instances: s.n_instances,
+            n_stages: s.n_stages,
+            workload: s.workload,
+            arrival_window_s: s.arrival_window_s,
+            default_rps: s.default_rps,
+            rps_grid: s.rps_grid.clone(),
+            route,
+            view_window_s: DEFAULT_VIEW_WINDOW_S,
+            faults: s.faults.iter().map(|&op| (0, op)).collect(),
+            drains: Vec::new(),
+            seed: s.seed,
+            policies: s.policies.clone(),
+        }
+    }
+
+    /// Lower into a runnable [`FleetSpec`] at fleet-wide `rps`: one
+    /// [`ExperimentConfig`] per cluster (seed `self.seed + c`, faults
+    /// filtered to cluster `c`, every cluster on `policy` and `queue`)
+    /// plus the global stream/routing parameters.
+    pub fn to_fleet_spec(&self, rps: f64, policy: PolicySpec, queue: QueueKind) -> FleetSpec {
+        let mut clusters = Vec::with_capacity(self.n_clusters);
+        for c in 0..self.n_clusters {
+            let mut cfg =
+                ExperimentConfig::new(ClusterConfig::custom(self.n_instances, self.n_stages), rps)
+                    .with_policy(policy);
+            cfg.timing.queue = queue;
+            cfg.workload = self.workload;
+            cfg.arrival_window_s = self.arrival_window_s;
+            cfg.seed = self.seed + c as u64;
+            cfg.faults = self
+                .faults
+                .iter()
+                .filter(|&&(fc, _)| fc == c)
+                .map(|&(_, op)| op)
+                .collect();
+            clusters.push(cfg);
+        }
+        let mut drains = vec![Vec::new(); self.n_clusters];
+        for &(c, a, b) in &self.drains {
+            drains[c].push((a, b));
+        }
+        FleetSpec {
+            workload: self.workload,
+            rps,
+            window_s: self.arrival_window_s,
+            seed: self.seed,
+            route: self.route,
+            view_window_s: self.view_window_s,
+            drains,
+            clusters,
+        }
+    }
+
+    /// Run the fleet at `rps`, sharding per-cluster execution over
+    /// `jobs` workers (output independent of `jobs`).
+    pub fn run(&self, rps: f64, policy: PolicySpec, queue: QueueKind, jobs: usize) -> FleetResult {
+        FleetSim::new(self.to_fleet_spec(rps, policy, queue)).run(jobs)
+    }
+
+    /// [`FleetScenario::run`] with a windowed [`crate::obs::Recorder`]
+    /// attached to every cluster (fold with
+    /// [`FleetResult::merged_obs`]). Observation-only.
+    pub fn run_observed(
+        &self,
+        rps: f64,
+        policy: PolicySpec,
+        queue: QueueKind,
+        window_s: f64,
+        jobs: usize,
+    ) -> FleetResult {
+        FleetSim::new(self.to_fleet_spec(rps, policy, queue))
+            .with_obs(window_s)
+            .run(jobs)
+    }
+
+    /// The policy axis a fleet sweep runs: the override list, defaulting
+    /// to the two presets.
+    pub fn sweep_policies(&self) -> Vec<PolicySpec> {
+        if self.policies.is_empty() {
+            PolicySpec::presets().to_vec()
+        } else {
+            self.policies.clone()
+        }
+    }
+
+    /// Earliest scripted disturbance (fault or drain), for list display.
+    pub fn first_fault_s(&self) -> Option<f64> {
+        self.faults
+            .iter()
+            .map(|(_, op)| op.start_s())
+            .chain(self.drains.iter().map(|&(_, a, _)| a))
+            .reduce(f64::min)
+    }
+
+    /// Check the spec for self-consistency.
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        let bad = |msg: String| Err(ScenarioError::Invalid(msg));
+        if self.name.is_empty() || self.name.contains(char::is_whitespace) {
+            return bad(format!("name '{}' must be a non-empty token", self.name));
+        }
+        if self.n_clusters == 0 {
+            return bad("a fleet needs at least one cluster".into());
+        }
+        if self.view_window_s <= 0.0 {
+            return bad("global load view window must be positive".into());
+        }
+        for &(c, a, b) in &self.drains {
+            if c >= self.n_clusters {
+                return bad(format!("drain cluster {c} outside the fleet"));
+            }
+            if !(a >= 0.0 && b > a) {
+                return bad(format!("drain window [{a}, {b}) must be ordered and non-negative"));
+            }
+        }
+        for &(c, _) in &self.faults {
+            if c >= self.n_clusters {
+                return bad(format!("fault cluster {c} outside the fleet"));
+            }
+        }
+        // per-cluster checks (shapes, fault nodes/params, arrivals,
+        // grids) ride on the single-cluster validator over cluster 0's
+        // projection plus every fault re-homed there
+        let proxy = Scenario {
+            name: self.name.clone(),
+            summary: String::new(),
+            stresses: String::new(),
+            expected_winner: String::new(),
+            n_instances: self.n_instances,
+            n_stages: self.n_stages,
+            workload: self.workload,
+            arrival_window_s: self.arrival_window_s,
+            default_rps: self.default_rps,
+            rps_grid: self.rps_grid.clone(),
+            faults: self.faults.iter().map(|&(_, op)| op).collect(),
+            seed: self.seed,
+            policies: self.policies.clone(),
+        };
+        proxy.validate()
+    }
+
+    // ------------------------------------------------------------- JSON
+
+    /// Serialize the spec (inverse of [`FleetScenario::from_json`]).
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let num = Json::Num;
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("summary".into(), Json::Str(self.summary.clone()));
+        m.insert("stresses".into(), Json::Str(self.stresses.clone()));
+        let mut fleet = BTreeMap::new();
+        fleet.insert("clusters".into(), num(self.n_clusters as f64));
+        fleet.insert("route".into(), Json::Str(self.route.label().into()));
+        fleet.insert("view_window_s".into(), num(self.view_window_s));
+        m.insert("fleet".into(), Json::Obj(fleet));
+        let mut cluster = BTreeMap::new();
+        cluster.insert("instances".into(), num(self.n_instances as f64));
+        cluster.insert("stages".into(), num(self.n_stages as f64));
+        m.insert("cluster".into(), Json::Obj(cluster));
+        m.insert("workload".into(), workload_json(&self.workload));
+        m.insert("arrival_window_s".into(), num(self.arrival_window_s));
+        m.insert("default_rps".into(), num(self.default_rps));
+        m.insert("rps_grid".into(), Json::Arr(self.rps_grid.iter().map(|&r| num(r)).collect()));
+        m.insert("seed".into(), num(self.seed as f64));
+        m.insert(
+            "faults".into(),
+            Json::Arr(
+                self.faults
+                    .iter()
+                    .map(|&(c, ref op)| match fault_json(op) {
+                        Json::Obj(mut f) => {
+                            f.insert("cluster".into(), num(c as f64));
+                            Json::Obj(f)
+                        }
+                        other => other,
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "drains".into(),
+            Json::Arr(
+                self.drains
+                    .iter()
+                    .map(|&(c, a, b)| {
+                        let mut d = BTreeMap::new();
+                        d.insert("cluster".into(), num(c as f64));
+                        d.insert("start_s".into(), num(a));
+                        d.insert("end_s".into(), num(b));
+                        Json::Obj(d)
+                    })
+                    .collect(),
+            ),
+        );
+        if !self.policies.is_empty() {
+            m.insert(
+                "policies".into(),
+                Json::Arr(self.policies.iter().map(PolicySpec::to_json).collect()),
+            );
+        }
+        Json::Obj(m)
+    }
+
+    /// Parse and validate a fleet spec from a JSON document.
+    pub fn from_json(v: &Json) -> Result<FleetScenario, ScenarioError> {
+        let fleet = field(v, "fleet")?;
+        let cluster = field(v, "cluster")?;
+        let route_label = str_field(fleet, "route")?;
+        let s = FleetScenario {
+            name: str_field(v, "name")?,
+            summary: str_field(v, "summary").unwrap_or_default(),
+            stresses: str_field(v, "stresses").unwrap_or_default(),
+            n_clusters: num_field(fleet, "clusters")? as usize,
+            n_instances: num_field(cluster, "instances")? as usize,
+            n_stages: num_field(cluster, "stages")? as usize,
+            workload: workload_from_json(field(v, "workload")?)?,
+            arrival_window_s: num_field(v, "arrival_window_s")?,
+            default_rps: num_field(v, "default_rps")?,
+            rps_grid: field(v, "rps_grid")?
+                .as_arr()
+                .ok_or_else(|| ScenarioError::Parse("'rps_grid' must be an array".into()))?
+                .iter()
+                .map(|x| {
+                    x.as_f64().ok_or_else(|| {
+                        ScenarioError::Parse("rps grid entries must be numbers".into())
+                    })
+                })
+                .collect::<Result<Vec<f64>, _>>()?,
+            route: RoutePolicy::parse(&route_label)
+                .ok_or_else(|| ScenarioError::Parse(format!("bad route '{route_label}'")))?,
+            view_window_s: num_field(fleet, "view_window_s")?,
+            faults: field(v, "faults")?
+                .as_arr()
+                .ok_or_else(|| ScenarioError::Parse("'faults' must be an array".into()))?
+                .iter()
+                .map(|x| Ok((num_field(x, "cluster")? as usize, fault_from_json(x)?)))
+                .collect::<Result<Vec<(usize, FaultOp)>, ScenarioError>>()?,
+            drains: field(v, "drains")?
+                .as_arr()
+                .ok_or_else(|| ScenarioError::Parse("'drains' must be an array".into()))?
+                .iter()
+                .map(|x| {
+                    Ok((
+                        num_field(x, "cluster")? as usize,
+                        num_field(x, "start_s")?,
+                        num_field(x, "end_s")?,
+                    ))
+                })
+                .collect::<Result<Vec<(usize, f64, f64)>, ScenarioError>>()?,
+            seed: num_field(v, "seed")? as u64,
+            policies: match v.get("policies") {
+                None => Vec::new(),
+                Some(p) => p
+                    .as_arr()
+                    .ok_or_else(|| {
+                        ScenarioError::Parse("'policies' must be an array of spec labels".into())
+                    })?
+                    .iter()
+                    .map(|x| {
+                        PolicySpec::from_json(x).ok_or_else(|| {
+                            ScenarioError::Parse(format!("bad policy spec {}", x.to_string()))
+                        })
+                    })
+                    .collect::<Result<Vec<PolicySpec>, _>>()?,
+            },
+        };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Parse a fleet spec from JSON text.
+    pub fn from_json_str(text: &str) -> Result<FleetScenario, ScenarioError> {
+        let v = Json::parse(text).map_err(|e| ScenarioError::Parse(e.to_string()))?;
+        FleetScenario::from_json(&v)
+    }
+}
+
+// ------------------------------------------------------------ registry
+
+/// All registered fleet scenarios. Every entry passes
+/// [`FleetScenario::validate`] (pinned by a test) and is deterministic
+/// given its seed.
+pub fn fleet_registry() -> Vec<FleetScenario> {
+    let kill = |c: usize, t_s: f64, i: usize, s: usize| {
+        (c, FaultOp::Kill { t_s, node: crate::config::NodeId::new(i, s) })
+    };
+
+    let base = |name: &str, summary: &str, stresses: &str, n_clusters: usize| FleetScenario {
+        name: name.into(),
+        summary: summary.into(),
+        stresses: stresses.into(),
+        n_clusters,
+        n_instances: 2,
+        n_stages: 4,
+        workload: WorkloadSpec::sharegpt_like(),
+        arrival_window_s: 400.0,
+        default_rps: 4.0,
+        rps_grid: vec![2.0, 4.0, 8.0],
+        route: RoutePolicy::RoundRobin,
+        view_window_s: DEFAULT_VIEW_WINDOW_S,
+        faults: Vec::new(),
+        drains: Vec::new(),
+        seed: 42,
+        policies: Vec::new(),
+    };
+
+    let mut small = base(
+        "fleet-small",
+        "4 clusters of 8 nodes, one fail-stop kill inside cluster 1",
+        "a local failure stays local: only cluster 1's facade recovers",
+        4,
+    );
+    small.faults = vec![kill(1, FAULT_T, 0, 2)];
+
+    let mut regional = base(
+        "fleet-regional-outage",
+        "6 clusters; clusters 4-5 drain from the global LB on [120, 300) with a kill inside the outage",
+        "regional outage: the front door sheds two clusters and the survivors absorb the traffic",
+        6,
+    );
+    regional.default_rps = 6.0;
+    regional.rps_grid = vec![3.0, 6.0, 12.0];
+    regional.drains = vec![(4, FAULT_T, 300.0), (5, FAULT_T, 300.0)];
+    regional.faults = vec![kill(4, 150.0, 0, 2)];
+
+    let mut hotspot = base(
+        "fleet-hotspot",
+        "4 clusters under heavy-tail (Pareto) arrivals, least-loaded global routing",
+        "arrival clumps vs the trailing-window load view: ll spreads what rr would pile",
+        4,
+    );
+    hotspot.workload =
+        hotspot.workload.with_arrival(ArrivalProcess::HeavyTail { alpha: 1.6 });
+    hotspot.route = RoutePolicy::LeastLoaded;
+
+    let mut million = base(
+        "fleet-million",
+        "20 clusters, tiny-model workload at 120 RPS for 1050 s (~126k requests), streaming end to end",
+        "fleet scale: O(inflight) memory via streaming arrivals, jobs-sharded execution",
+        20,
+    );
+    million.n_stages = 2;
+    million.workload = WorkloadSpec::tiny_model();
+    million.arrival_window_s = 1050.0;
+    million.default_rps = 120.0;
+    million.rps_grid = vec![60.0, 120.0];
+
+    vec![small, regional, hotspot, million]
+}
+
+/// Look up a registered fleet scenario by name.
+pub fn fleet_find(name: &str) -> Result<FleetScenario, ScenarioError> {
+    fleet_registry()
+        .into_iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| ScenarioError::UnknownScenario(name.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario;
+
+    #[test]
+    fn fleet_registry_is_valid_and_unique() {
+        let all = fleet_registry();
+        assert!(all.len() >= 4, "only {} fleet scenarios registered", all.len());
+        for s in &all {
+            s.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+        }
+        let mut names: Vec<&str> = all.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), all.len(), "duplicate fleet scenario names");
+        assert!(fleet_find("fleet-regional-outage").is_ok());
+        assert!(matches!(
+            fleet_find("no-such-fleet"),
+            Err(ScenarioError::UnknownScenario(_))
+        ));
+    }
+
+    #[test]
+    fn json_roundtrip_every_fleet_scenario() {
+        for s in fleet_registry() {
+            let text = s.to_json().to_string();
+            let back = FleetScenario::from_json_str(&text)
+                .unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            assert_eq!(back.name, s.name);
+            assert_eq!(back.n_clusters, s.n_clusters);
+            assert_eq!(back.route, s.route);
+            assert_eq!(back.faults, s.faults);
+            assert_eq!(back.drains, s.drains);
+            assert_eq!(back.rps_grid, s.rps_grid);
+            assert_eq!(back.workload.arrival, s.workload.arrival);
+            assert_eq!(back.seed, s.seed);
+            // full fixed point: serialize again, byte-identical
+            assert_eq!(back.to_json().to_string(), text);
+        }
+    }
+
+    #[test]
+    fn fleet_of_one_lowers_to_the_scenario_config() {
+        for sc in scenario::registry() {
+            let fleet = FleetScenario::from_scenario(&sc, 1, RoutePolicy::RoundRobin);
+            fleet.validate().unwrap_or_else(|e| panic!("{}: {e}", fleet.name));
+            let spec = fleet.to_fleet_spec(2.0, PolicySpec::kevlarflow(), QueueKind::Heap);
+            let solo = sc.to_experiment_queued(2.0, PolicySpec::kevlarflow(), QueueKind::Heap);
+            assert_eq!(spec.clusters.len(), 1);
+            let c0 = &spec.clusters[0];
+            assert_eq!(c0.seed, solo.seed, "{}", sc.name);
+            assert_eq!(c0.faults, solo.faults, "{}", sc.name);
+            assert_eq!(c0.arrival_window_s, solo.arrival_window_s, "{}", sc.name);
+            assert_eq!(c0.cluster.n_nodes(), solo.cluster.n_nodes(), "{}", sc.name);
+            assert_eq!(c0.rps, solo.rps, "{}", sc.name);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_fleet_specs() {
+        let mut s = fleet_find("fleet-small").unwrap();
+        s.faults = vec![(9, FaultOp::Kill { t_s: 10.0, node: crate::config::NodeId::new(0, 0) })];
+        assert!(matches!(s.validate(), Err(ScenarioError::Invalid(_))));
+
+        let mut s = fleet_find("fleet-regional-outage").unwrap();
+        s.drains = vec![(7, 120.0, 300.0)];
+        assert!(s.validate().is_err());
+        let mut s = fleet_find("fleet-regional-outage").unwrap();
+        s.drains = vec![(0, 300.0, 120.0)];
+        assert!(s.validate().is_err());
+
+        let mut s = fleet_find("fleet-small").unwrap();
+        s.view_window_s = 0.0;
+        assert!(s.validate().is_err());
+
+        let mut s = fleet_find("fleet-small").unwrap();
+        s.n_clusters = 0;
+        assert!(s.validate().is_err());
+    }
+}

@@ -44,7 +44,10 @@ use crate::config::Json;
 use crate::sim::{ClusterSim, LogMode, SimResult};
 use crate::workload::{ArrivalProcess, LenDist, WorkloadSpec};
 
+mod fleet;
+
 pub use crate::config::FaultOp;
+pub use fleet::{fleet_find, fleet_registry, FleetScenario, DEFAULT_VIEW_WINDOW_S};
 
 /// Typed failure of scenario lookup, validation or JSON parsing.
 #[derive(Debug, Clone, PartialEq)]

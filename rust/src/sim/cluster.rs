@@ -14,7 +14,7 @@ use crate::coordinator::RecoveryManager;
 use crate::kvcache::NodeKv;
 use crate::metrics::Recorder;
 use crate::obs;
-use crate::workload::{generate_trace, Pcg32, WorkloadSpec};
+use crate::workload::{generate_trace, Pcg32, Request, TraceStream, WorkloadSpec};
 
 use super::events::{Event, EventQueue};
 use super::state::{InstanceTable, NodeTable, Pass, ReqState, SAMPLE_INTERVAL_S};
@@ -71,6 +71,12 @@ pub struct SimResult {
     /// or replication disabled).
     pub full_recomputes: u64,
     pub incomplete: usize,
+    /// Max event-queue occupancy observed at event-handling boundaries.
+    /// Eager builds start at O(trace) (the whole arrival script is
+    /// queued up front); streaming builds stay O(inflight) because only
+    /// one pending arrival lives in the queue at a time — the memory
+    /// claim `rust/tests/fleet_props.rs` regresses against.
+    pub peak_queue_len: usize,
     /// Every control-plane exchange, in order (see [`ControlRecord`]).
     /// Empty unless the sim was built with [`LogMode::Full`].
     pub control_log: Vec<ControlRecord>,
@@ -107,6 +113,14 @@ pub struct ClusterSim {
     /// not one buffer, because executing an `Evict` re-enters
     /// [`ClusterSim::control`] for each displaced request).
     scratch: Vec<Vec<Action>>,
+    /// Total arrivals of the run. Equals `reqs.len()` in eager mode; in
+    /// streaming mode `reqs` grows lazily toward it.
+    pub(crate) n_total: usize,
+    /// Streaming arrival source: `Some` puts the sim in streaming mode —
+    /// exactly one pending [`Event::Arrival`] sits in the queue, and
+    /// handling it injects the next one from this iterator.
+    stream: Option<Box<dyn Iterator<Item = Request> + Send>>,
+    pub(crate) peak_queue_len: usize,
 }
 
 impl ClusterSim {
@@ -143,6 +157,72 @@ impl ClusterSim {
         q.push(SAMPLE_INTERVAL_S, Event::Sample);
 
         let reqs: Vec<ReqState> = trace.into_iter().map(ReqState::new).collect();
+        let n_total = reqs.len();
+        Self::assemble(cfg, q, reqs, n_total, None)
+    }
+
+    /// Build in streaming-arrival mode: the trace is never materialized.
+    /// A counting pass (O(1) memory) learns the arrival count, then the
+    /// run pulls arrivals lazily from a fresh [`TraceStream`]. Proven
+    /// pop-for-pop — and therefore result-for-result — identical to
+    /// [`ClusterSim::new`] by `rust/tests/fleet_props.rs`.
+    pub fn new_streaming(cfg: ExperimentConfig) -> Self {
+        let count =
+            TraceStream::new(&cfg.workload, cfg.rps, cfg.arrival_window_s, cfg.seed).count();
+        let stream = TraceStream::new(&cfg.workload, cfg.rps, cfg.arrival_window_s, cfg.seed);
+        Self::from_arrivals(cfg, Box::new(stream), count)
+    }
+
+    /// Streaming-mode core: arrivals come from `arrivals` (which must
+    /// yield dense ids `0..n_total` at nondecreasing times — the fleet
+    /// layer's per-cluster routed streams and [`TraceStream`] both do).
+    ///
+    /// Bit-exactness with the eager build rests on two invariants:
+    /// seqs `0..n_total` are reserved for the arrivals (arrival `i`
+    /// carries seq `i`, so the fault/sample pushes below get the very
+    /// seqs the eager build hands them), and only ONE pending arrival is
+    /// queued at a time — every not-yet-injected arrival has a strictly
+    /// greater `(t, seq)` key than the pending one (nondecreasing times,
+    /// increasing seqs), so it can never be the queue minimum and the
+    /// pop order matches the eager build exactly, ties included.
+    pub fn from_arrivals(
+        cfg: ExperimentConfig,
+        mut arrivals: Box<dyn Iterator<Item = Request> + Send>,
+        n_total: usize,
+    ) -> Self {
+        let mut q =
+            EventQueue::with_capacity_kind(cfg.timing.queue, 2 * cfg.faults.len() + 64);
+        q.reserve_seqs(n_total as u64);
+        for op in &cfg.faults {
+            match *op {
+                FaultOp::Kill { t_s, node } => q.push(t_s, Event::FailureInject { node }),
+                FaultOp::Flap { t_s, node, down_s } => {
+                    q.push(t_s, Event::FailureInject { node });
+                    q.push(t_s + down_s, Event::NodeRejoin { node });
+                }
+                FaultOp::Slow { t_s, node, factor, duration_s } => {
+                    q.push(t_s, Event::SlowStart { node, factor });
+                    q.push(t_s + duration_s, Event::SlowEnd { node });
+                }
+            }
+        }
+        q.push(SAMPLE_INTERVAL_S, Event::Sample);
+        let mut reqs = Vec::new();
+        if let Some(r) = arrivals.next() {
+            debug_assert_eq!(r.id as usize, reqs.len(), "streamed ids must be dense");
+            q.push_with_seq(r.arrival_s, r.id, Event::Arrival { req: r.id as usize });
+            reqs.push(ReqState::new(r));
+        }
+        Self::assemble(cfg, q, reqs, n_total, Some(arrivals))
+    }
+
+    fn assemble(
+        cfg: ExperimentConfig,
+        q: EventQueue,
+        reqs: Vec<ReqState>,
+        n_total: usize,
+        stream: Option<Box<dyn Iterator<Item = Request> + Send>>,
+    ) -> Self {
         let nodes = NodeTable::new(
             cfg.cluster.nodes(),
             cfg.serving.kv_capacity_blocks,
@@ -150,7 +230,7 @@ impl ClusterSim {
         );
         let instances = InstanceTable::new(cfg.cluster.n_instances);
         let mut cp = ControlPlane::new(&cfg.cluster, &cfg.serving, &cfg.timing, cfg.seed);
-        cp.reserve_requests(reqs.len());
+        cp.reserve_requests(n_total);
         let rng = Pcg32::with_stream(cfg.seed, 0x5e0);
 
         Self {
@@ -173,6 +253,9 @@ impl ClusterSim {
             control_log: Vec::new(),
             obs: None,
             scratch: Vec::new(),
+            n_total,
+            stream,
+            peak_queue_len: 0,
         }
     }
 
@@ -459,6 +542,8 @@ impl ClusterSim {
     /// Run to completion (all requests served, or `max_sim_time_s`).
     pub fn run(mut self) -> SimResult {
         while let Some((t, ev)) = self.q.pop() {
+            // +1 counts the entry being popped this iteration
+            self.peak_queue_len = self.peak_queue_len.max(self.q.len() + 1);
             debug_assert!(t >= self.now - 1e-9, "time went backwards");
             self.now = t;
             if self.now > self.cfg.max_sim_time_s {
@@ -466,6 +551,25 @@ impl ClusterSim {
             }
             match ev {
                 Event::Arrival { req } => {
+                    // streaming mode: replace the consumed pending
+                    // arrival with the next one before handling (its
+                    // (t, seq) is strictly greater, so this cannot
+                    // perturb the pop order)
+                    if let Some(stream) = self.stream.as_mut() {
+                        if let Some(r) = stream.next() {
+                            debug_assert_eq!(
+                                r.id as usize,
+                                self.reqs.len(),
+                                "streamed ids must be dense"
+                            );
+                            self.q.push_with_seq(
+                                r.arrival_s,
+                                r.id,
+                                Event::Arrival { req: r.id as usize },
+                            );
+                            self.reqs.push(ReqState::new(r));
+                        }
+                    }
                     let id = self.reqs[req].spec.id;
                     self.control(Ctl::RequestArrived { req: id });
                 }
@@ -494,7 +598,11 @@ impl ClusterSim {
                 Event::Sample => self.sample_util(),
             }
         }
-        let incomplete = self.reqs.iter().filter(|r| !r.done).count();
+        // streaming mode: arrivals the stream never injected (run hit
+        // max_sim_time_s first) are incomplete too; eager mode has
+        // reqs.len() == n_total, so the first term is zero there
+        let incomplete = (self.n_total - self.reqs.len())
+            + self.reqs.iter().filter(|r| !r.done).count();
         if let Some(o) = self.obs.as_mut() {
             o.finish(self.now);
         }
@@ -508,6 +616,7 @@ impl ClusterSim {
             replica_stalls: self.replica_stalls,
             full_recomputes: self.full_recomputes,
             incomplete,
+            peak_queue_len: self.peak_queue_len,
             control_log: self.control_log,
             obs: self.obs,
         }

@@ -179,6 +179,38 @@ impl EventQueue {
         }
     }
 
+    /// Reserve the seq numbers `0..n` for entries that will be pushed
+    /// later via [`Self::push_with_seq`]. Must be called on a fresh
+    /// queue (before any ordinary `push`): the streaming-arrival path
+    /// reserves one seq per trace arrival so that faults and samples
+    /// pushed afterwards get exactly the seqs they would have gotten had
+    /// the whole trace been pushed eagerly first — the tie-order
+    /// contract `(t, seq)` is then bit-identical between the eager and
+    /// streaming builds.
+    pub(crate) fn reserve_seqs(&mut self, n: u64) {
+        assert_eq!(self.seq, 0, "seq reservation only on a fresh queue");
+        self.seq = n;
+    }
+
+    /// Push with an explicit (previously reserved) seq, leaving the
+    /// running counter untouched. Same finiteness/causality guards as
+    /// [`Self::push`].
+    pub(crate) fn push_with_seq(&mut self, t: f64, seq: u64, ev: Event) {
+        assert!(t.is_finite(), "non-finite event timestamp {t}");
+        debug_assert!(
+            t >= self.last_t,
+            "causality violation: push at t={t} before last pop at t={}",
+            self.last_t
+        );
+        let t = if t < self.last_t { self.last_t } else { t };
+        let e = Entry { t, seq, ev };
+        self.len += 1;
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(e),
+            Backend::Wheel(w) => w.push(e),
+        }
+    }
+
     pub fn pop(&mut self) -> Option<(f64, Event)> {
         let e = match &mut self.backend {
             Backend::Heap(h) => h.pop(),
@@ -315,5 +347,31 @@ mod tests {
     fn rejects_non_finite_time() {
         let mut q = EventQueue::new();
         q.push(f64::NAN, Event::Sample);
+    }
+
+    #[test]
+    fn reserved_seqs_interleave_like_eager_pushes() {
+        // streaming build: reserve 3 arrival seqs, push a fault, then
+        // trickle arrivals in — pop order must equal the eager build
+        // where all 3 arrivals were pushed before the fault
+        for kind in kinds() {
+            let mut eager = EventQueue::new_kind(kind);
+            eager.push(1.0, Event::Arrival { req: 0 });
+            eager.push(1.0, Event::Arrival { req: 1 });
+            eager.push(2.0, Event::Arrival { req: 2 });
+            eager.push(1.0, Event::Sample); // fault-script stand-in
+
+            let mut lazy = EventQueue::new_kind(kind);
+            lazy.reserve_seqs(3);
+            lazy.push(1.0, Event::Sample); // gets seq 3, as in the eager build
+            lazy.push_with_seq(1.0, 0, Event::Arrival { req: 0 });
+            assert_eq!(lazy.pop(), eager.pop(), "{kind:?}");
+            lazy.push_with_seq(1.0, 1, Event::Arrival { req: 1 });
+            assert_eq!(lazy.pop(), eager.pop(), "{kind:?}");
+            assert_eq!(lazy.pop(), eager.pop(), "{kind:?}");
+            lazy.push_with_seq(2.0, 2, Event::Arrival { req: 2 });
+            assert_eq!(lazy.pop(), eager.pop(), "{kind:?}");
+            assert!(lazy.pop().is_none() && eager.pop().is_none(), "{kind:?}");
+        }
     }
 }

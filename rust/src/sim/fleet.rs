@@ -1,0 +1,382 @@
+//! Fleet tier of the simulator: many clusters behind the hierarchical
+//! control plane (DESIGN.md §8).
+//!
+//! One seeded arrival stream feeds a deterministic
+//! [`GlobalRouter`] that assigns every request to a cluster; each
+//! cluster then runs the unchanged single-cluster simulation
+//! ([`ClusterSim`]) over its share of the stream, driving its own
+//! [`ControlPlane`](crate::coordinator::ControlPlane) facade. Faults are
+//! addressed as `(cluster, node)` by lowering them into the per-cluster
+//! configs (see [`crate::scenario::FleetScenario`]).
+//!
+//! ## Determinism under sharding
+//!
+//! The global router's load view is a pure function of the arrival
+//! stream prefix (trailing-window assignment counts — see
+//! [`GlobalRouter`]), so the full routing sequence is reproducible from
+//! the fleet seed alone. That makes per-cluster execution embarrassingly
+//! parallel: every worker replays the *whole* global stream through a
+//! fresh router and filters to its own cluster ([`RoutedStream`]) —
+//! no shared state, no cross-thread communication — and results
+//! reassemble in cluster order. Bytes out are therefore identical for
+//! any `--jobs` by construction (pinned by `rust/tests/sweep_golden.rs`).
+//!
+//! ## Memory under scale
+//!
+//! Arrivals stream lazily end to end: the global trace is never
+//! materialized (a counting pass learns per-cluster arrival counts in
+//! O(1) memory), and each cluster runs in streaming mode
+//! ([`ClusterSim::from_arrivals`]) holding one pending arrival at a
+//! time. Peak event-queue occupancy of a million-request fleet run is
+//! O(inflight), not O(trace) — regressed by `rust/tests/fleet_props.rs`
+//! via [`SimResult::peak_queue_len`].
+//!
+//! ## Fleet ≡ cluster
+//!
+//! A fleet of one cluster routes every arrival to cluster 0 (all three
+//! route policies degenerate to the identity on one serving view) and
+//! re-iding is the identity, so the routed stream equals the plain
+//! [`TraceStream`] bit-for-bit and the single member result is
+//! bit-exact with [`ClusterSim::new`] on the same config — the
+//! differential proof `rust/tests/fleet_props.rs` pins across every
+//! registry scenario × policy preset × queue backend.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::config::{ExperimentConfig, RoutePolicy};
+use crate::coordinator::GlobalRouter;
+use crate::metrics;
+use crate::obs;
+use crate::workload::{Request, TraceStream, WorkloadSpec};
+
+use super::cluster::{ClusterSim, LogMode, SimResult};
+
+/// A fully lowered fleet run: the global arrival stream + routing tier,
+/// and one [`ExperimentConfig`] per cluster (faults already local,
+/// per-cluster seeds already derived). Everything needed to replay the
+/// fleet deterministically from scratch — which is exactly what every
+/// shard worker does.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    /// Fleet-wide workload shape (one stream feeds all clusters).
+    pub workload: WorkloadSpec,
+    /// Fleet-wide arrival rate (requests/s into the front door).
+    pub rps: f64,
+    /// Arrival window in seconds.
+    pub window_s: f64,
+    /// Fleet seed: seeds the global stream and the global router.
+    pub seed: u64,
+    /// Cluster-level routing strategy of the global tier.
+    pub route: RoutePolicy,
+    /// Trailing window of the router's front-door load views.
+    pub view_window_s: f64,
+    /// Scripted `[start_s, end_s)` drain windows per cluster (regional
+    /// outages at the global LB).
+    pub drains: Vec<Vec<(f64, f64)>>,
+    /// Per-cluster experiment configs. `workload`/`rps`/`window_s`
+    /// mirror the fleet fields for reference, but arrivals come from the
+    /// routed stream, not from these.
+    pub clusters: Vec<ExperimentConfig>,
+}
+
+impl FleetSpec {
+    pub fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    fn stream(&self) -> TraceStream {
+        TraceStream::new(&self.workload, self.rps, self.window_s, self.seed)
+    }
+
+    fn router(&self) -> GlobalRouter {
+        GlobalRouter::new(
+            self.route,
+            self.seed,
+            self.clusters.len(),
+            self.view_window_s,
+            self.drains.clone(),
+        )
+    }
+
+    /// The arrivals routed to `cluster`, re-idded densely from 0 — the
+    /// iterator a shard worker feeds [`ClusterSim::from_arrivals`].
+    pub fn routed(&self, cluster: usize) -> RoutedStream {
+        assert!(cluster < self.clusters.len());
+        RoutedStream { stream: self.stream(), router: self.router(), cluster, next_id: 0 }
+    }
+
+    /// Counting pass: replay the routing in O(1) memory to learn each
+    /// cluster's arrival count plus the front-door drop count (arrivals
+    /// landing while every cluster was drained).
+    pub fn count_assignments(&self) -> (Vec<usize>, usize) {
+        let mut counts = vec![0usize; self.clusters.len()];
+        let mut dropped = 0usize;
+        let mut router = self.router();
+        for r in self.stream() {
+            match router.route(r.arrival_s) {
+                Some(c) => counts[c] += 1,
+                None => dropped += 1,
+            }
+        }
+        (counts, dropped)
+    }
+}
+
+/// Lazy per-cluster arrival source: replays the full global stream
+/// through a fresh [`GlobalRouter`] and yields only the requests routed
+/// to `cluster`, re-idded densely (the per-cluster sim's request ids are
+/// local). For a fleet of one this is the identity over the plain
+/// [`TraceStream`].
+pub struct RoutedStream {
+    stream: TraceStream,
+    router: GlobalRouter,
+    cluster: usize,
+    next_id: u64,
+}
+
+impl Iterator for RoutedStream {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        loop {
+            let mut r = self.stream.next()?;
+            if self.router.route(r.arrival_s) == Some(self.cluster) {
+                r.id = self.next_id;
+                self.next_id += 1;
+                return Some(r);
+            }
+        }
+    }
+}
+
+/// Outputs of one fleet run: the per-cluster results in cluster order
+/// plus the global tier's own accounting.
+#[derive(Debug)]
+pub struct FleetResult {
+    pub clusters: Vec<SimResult>,
+    /// Arrivals routed to each cluster.
+    pub assigned: Vec<usize>,
+    /// Arrivals dropped at the front door (every cluster drained).
+    pub dropped: usize,
+    /// Total arrivals of the global stream (`assigned` sum + `dropped`).
+    pub n_total: usize,
+}
+
+impl FleetResult {
+    /// All completion records, concatenated in cluster order (the
+    /// deterministic fleet-wide [`metrics::Recorder`]).
+    pub fn merged_records(&self) -> metrics::Recorder {
+        let mut out = metrics::Recorder::default();
+        for c in &self.clusters {
+            out.records.extend(c.recorder.records.iter().cloned());
+        }
+        out
+    }
+
+    /// Fold every cluster's windowed [`obs::Recorder`] in cluster order
+    /// (see [`obs::Recorder::merge_from`]). `None` unless the run was
+    /// built with [`FleetSim::with_obs`].
+    pub fn merged_obs(&self) -> Option<obs::Recorder> {
+        let mut it = self.clusters.iter().filter_map(|c| c.obs.as_ref());
+        let mut out = it.next()?.clone();
+        for o in it {
+            out.merge_from(o);
+        }
+        Some(out)
+    }
+
+    /// Requests that never finished: per-cluster incompletes plus the
+    /// front-door drops.
+    pub fn incomplete(&self) -> usize {
+        self.dropped + self.clusters.iter().map(|c| c.incomplete).sum::<usize>()
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        self.clusters.iter().map(|c| c.preemptions).sum()
+    }
+
+    pub fn full_recomputes(&self) -> u64 {
+        self.clusters.iter().map(|c| c.full_recomputes).sum()
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.clusters.iter().map(|c| c.events_processed).sum()
+    }
+
+    /// Latest per-cluster sim clock (the fleet finishes when its slowest
+    /// cluster does).
+    pub fn sim_time_s(&self) -> f64 {
+        self.clusters.iter().map(|c| c.sim_time_s).fold(0.0, f64::max)
+    }
+
+    /// Largest per-cluster event-queue occupancy — the fleet's memory
+    /// high-water observable (streaming keeps it O(inflight)).
+    pub fn peak_queue_len(&self) -> usize {
+        self.clusters.iter().map(|c| c.peak_queue_len).max().unwrap_or(0)
+    }
+}
+
+/// The fleet runner. Build with [`FleetSim::new`], shard with `jobs` at
+/// [`FleetSim::run`].
+pub struct FleetSim {
+    spec: FleetSpec,
+    log_mode: LogMode,
+    obs_window_s: Option<f64>,
+}
+
+impl FleetSim {
+    pub fn new(spec: FleetSpec) -> Self {
+        assert!(!spec.clusters.is_empty(), "a fleet needs at least one cluster");
+        assert_eq!(spec.drains.len(), spec.clusters.len(), "one drain script per cluster");
+        Self { spec, log_mode: LogMode::Off, obs_window_s: None }
+    }
+
+    /// Control-log mode for every cluster sim (builder style).
+    pub fn with_log(mut self, mode: LogMode) -> Self {
+        self.log_mode = mode;
+        self
+    }
+
+    /// Attach a windowed [`obs::Recorder`] to every cluster sim (builder
+    /// style); fold the shards with [`FleetResult::merged_obs`].
+    pub fn with_obs(mut self, window_s: f64) -> Self {
+        self.obs_window_s = Some(window_s);
+        self
+    }
+
+    pub fn spec(&self) -> &FleetSpec {
+        &self.spec
+    }
+
+    fn run_cluster(&self, cluster: usize, count: usize) -> SimResult {
+        let mut sim = ClusterSim::from_arrivals(
+            self.spec.clusters[cluster].clone(),
+            Box::new(self.spec.routed(cluster)),
+            count,
+        )
+        .with_log(self.log_mode);
+        if let Some(w) = self.obs_window_s {
+            sim = sim.with_obs(w);
+        }
+        sim.run()
+    }
+
+    /// Run the fleet, sharding per-cluster execution over `jobs` worker
+    /// threads (`0` = all available cores; clamped to the cluster
+    /// count). Results reassemble in cluster order, so the output is
+    /// identical for every `jobs` value.
+    pub fn run(&self, jobs: usize) -> FleetResult {
+        let (assigned, dropped) = self.spec.count_assignments();
+        let n_total = assigned.iter().sum::<usize>() + dropped;
+        let n = self.spec.clusters.len();
+        let jobs = effective_jobs(jobs, n);
+        let clusters: Vec<SimResult> = if jobs <= 1 {
+            (0..n).map(|c| self.run_cluster(c, assigned[c])).collect()
+        } else {
+            let cursor = AtomicUsize::new(0);
+            let mut slots: Vec<Option<SimResult>> = (0..n).map(|_| None).collect();
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..jobs)
+                    .map(|_| {
+                        s.spawn(|| {
+                            let mut done = Vec::new();
+                            loop {
+                                let c = cursor.fetch_add(1, Ordering::Relaxed);
+                                if c >= n {
+                                    break;
+                                }
+                                done.push((c, self.run_cluster(c, assigned[c])));
+                            }
+                            done
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    for (c, r) in h.join().expect("fleet worker panicked") {
+                        slots[c] = Some(r);
+                    }
+                }
+            });
+            slots.into_iter().map(|r| r.expect("every cluster ran")).collect()
+        };
+        FleetResult { clusters, assigned, dropped, n_total }
+    }
+}
+
+/// Clamp a requested worker count to something sane: `0` means "all
+/// cores", and more workers than clusters is waste.
+fn effective_jobs(requested: usize, n_clusters: usize) -> usize {
+    let available = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let requested = if requested == 0 { available } else { requested };
+    requested.clamp(1, n_clusters.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, PolicySpec};
+    use crate::workload::WorkloadSpec;
+
+    fn spec(n_clusters: usize) -> FleetSpec {
+        let workload = WorkloadSpec::tiny_model();
+        let mut clusters = Vec::new();
+        for c in 0..n_clusters {
+            let mut cfg = ExperimentConfig::new(ClusterConfig::custom(2, 2), 4.0)
+                .with_policy(PolicySpec::kevlarflow());
+            cfg.workload = workload;
+            cfg.arrival_window_s = 60.0;
+            cfg.seed = 42 + c as u64;
+            clusters.push(cfg);
+        }
+        FleetSpec {
+            workload,
+            rps: 4.0,
+            window_s: 60.0,
+            seed: 42,
+            route: RoutePolicy::RoundRobin,
+            view_window_s: 60.0,
+            drains: vec![Vec::new(); n_clusters],
+            clusters,
+        }
+    }
+
+    #[test]
+    fn fleet_of_one_routed_stream_is_the_plain_trace() {
+        let s = spec(1);
+        let routed: Vec<Request> = s.routed(0).collect();
+        let plain: Vec<Request> =
+            TraceStream::new(&s.workload, s.rps, s.window_s, s.seed).collect();
+        assert_eq!(routed.len(), plain.len());
+        for (a, b) in routed.iter().zip(&plain) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+            assert_eq!((a.prompt_len, a.output_len), (b.prompt_len, b.output_len));
+        }
+    }
+
+    #[test]
+    fn counting_pass_partitions_the_stream() {
+        let s = spec(3);
+        let (counts, dropped) = s.count_assignments();
+        let total = TraceStream::new(&s.workload, s.rps, s.window_s, s.seed).count();
+        assert_eq!(counts.iter().sum::<usize>() + dropped, total);
+        assert_eq!(dropped, 0);
+        for (c, &n) in counts.iter().enumerate() {
+            assert_eq!(s.routed(c).count(), n, "routed stream disagrees for cluster {c}");
+        }
+    }
+
+    #[test]
+    fn sharding_is_jobs_invariant() {
+        let s = spec(4);
+        let serial = FleetSim::new(s.clone()).run(1);
+        let sharded = FleetSim::new(s).run(4);
+        assert_eq!(serial.assigned, sharded.assigned);
+        assert_eq!(serial.n_total, sharded.n_total);
+        for (a, b) in serial.clusters.iter().zip(&sharded.clusters) {
+            assert_eq!(a.events_processed, b.events_processed);
+            assert_eq!(a.recorder.records.len(), b.recorder.records.len());
+            assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
+        }
+    }
+}

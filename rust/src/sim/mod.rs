@@ -59,10 +59,25 @@
 //! service time until the monitoring layer's windowed signal reports a
 //! `StragglerDetected`.
 
+//!
+//! ## Fleet tier
+//!
+//! [`FleetSim`] scales the same machinery to many clusters behind a
+//! hierarchical control plane: a deterministic cluster-level router
+//! ([`crate::coordinator::GlobalRouter`]) shards one seeded arrival
+//! stream across per-cluster simulations, each driving its own facade.
+//! Arrivals stream lazily end to end ([`ClusterSim::new_streaming`] /
+//! [`ClusterSim::from_arrivals`]) so million-request fleets hold
+//! O(inflight) events, not O(trace), and per-cluster execution shards
+//! over worker threads with bit-identical output for any `--jobs`. See
+//! [`fleet`] and DESIGN.md §8.
+
 mod cluster;
 mod events;
+mod fleet;
 mod state;
 mod timeq;
 
 pub use cluster::{ClusterSim, ControlRecord, LogMode, SimResult};
 pub use events::{Event, EventQueue};
+pub use fleet::{FleetResult, FleetSim, FleetSpec, RoutedStream};

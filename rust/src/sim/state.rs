@@ -531,8 +531,12 @@ impl ClusterSim {
                 o.sample_cluster(self.now, sum / n as f64, serving, self.cfg.cluster.n_instances);
             }
         }
-        // stop sampling once all requests are done (lets the queue drain)
-        if self.reqs.iter().any(|r| !r.done) {
+        // stop sampling once all requests are done (lets the queue
+        // drain). In streaming mode not-yet-injected arrivals count as
+        // outstanding work (`reqs` only holds the injected prefix); in
+        // eager mode the first disjunct is always false, so the
+        // condition — and the Sample event stream — is unchanged.
+        if self.reqs.len() < self.n_total || self.reqs.iter().any(|r| !r.done) {
             self.q.push(self.now + SAMPLE_INTERVAL_S, Event::Sample);
         }
     }

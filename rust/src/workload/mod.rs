@@ -133,37 +133,81 @@ fn next_gap(process: ArrivalProcess, rps: f64, t: f64, rng: &mut Pcg32) -> f64 {
     }
 }
 
+/// Lazy, seeded arrival stream: yields exactly the requests
+/// [`generate_trace`] materializes, one at a time, without holding the
+/// trace in memory. `generate_trace` is literally `TraceStream::collect`,
+/// so the two paths cannot drift — and the equivalence is additionally
+/// pinned bit-exact (times, lengths, ids) per arrival-process × seed by
+/// `rust/tests/fleet_props.rs`.
+///
+/// This is what makes million-request fleet runs feasible: the fleet
+/// layer replays the stream per cluster with O(1) memory for arrival
+/// generation, materializing only in-flight state.
+#[derive(Debug, Clone)]
+pub struct TraceStream {
+    spec: WorkloadSpec,
+    rps: f64,
+    window_s: f64,
+    rng: Pcg32,
+    t: f64,
+    id: u64,
+}
+
+impl TraceStream {
+    pub fn new(spec: &WorkloadSpec, rps: f64, window_s: f64, seed: u64) -> Self {
+        Self { spec: *spec, rps, window_s, rng: Pcg32::new(seed), t: 0.0, id: 0 }
+    }
+}
+
+impl Iterator for TraceStream {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        // identical draw order to the historical generate_trace loop:
+        // gap, then prompt length, then output length
+        self.t += next_gap(self.spec.arrival, self.rps, self.t, &mut self.rng);
+        if self.t > self.window_s {
+            return None;
+        }
+        let r = Request {
+            id: self.id,
+            arrival_s: self.t,
+            prompt_len: self.spec.prompt.sample(&mut self.rng),
+            output_len: self.spec.output.sample(&mut self.rng),
+        };
+        self.id += 1;
+        Some(r)
+    }
+}
+
 /// Generate a request trace at average rate `rps` over `window_s`
-/// seconds, with gaps drawn from the spec's [`ArrivalProcess`].
+/// seconds, with gaps drawn from the spec's [`ArrivalProcess`] — the
+/// materialized form of [`TraceStream`].
 pub fn generate_trace(
     spec: &WorkloadSpec,
     rps: f64,
     window_s: f64,
     seed: u64,
 ) -> Vec<Request> {
-    let mut rng = Pcg32::new(seed);
-    let mut t = 0.0f64;
-    let mut out = Vec::new();
-    let mut id = 0u64;
-    loop {
-        t += next_gap(spec.arrival, rps, t, &mut rng);
-        if t > window_s {
-            break;
-        }
-        out.push(Request {
-            id,
-            arrival_s: t,
-            prompt_len: spec.prompt.sample(&mut rng),
-            output_len: spec.output.sample(&mut rng),
-        });
-        id += 1;
-    }
-    out
+    TraceStream::new(spec, rps, window_s, seed).collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stream_is_lazy_and_resumable() {
+        // pulling half the stream then the rest matches the whole trace
+        let spec = WorkloadSpec::sharegpt_like();
+        let eager = generate_trace(&spec, 3.0, 200.0, 13);
+        let mut stream = TraceStream::new(&spec, 3.0, 200.0, 13);
+        let head: Vec<Request> = stream.by_ref().take(eager.len() / 2).collect();
+        let tail: Vec<Request> = stream.collect();
+        assert_eq!(head.len() + tail.len(), eager.len());
+        assert_eq!(&eager[..head.len()], &head[..]);
+        assert_eq!(&eager[head.len()..], &tail[..]);
+    }
 
     #[test]
     fn trace_deterministic() {

@@ -4,8 +4,9 @@
 //! are simulator outputs and are asserted for sanity, not bit-for-bit
 //! (they are already covered by the calibration tests).
 
-use kevlarflow::bench::sweep;
+use kevlarflow::bench::{fleet, sweep};
 use kevlarflow::config::{Json, PolicySpec, QueueKind};
+use kevlarflow::obs;
 
 /// Every key a sweep row must carry, in the writer's (sorted) order.
 const ROW_KEYS: [&str; 16] = [
@@ -166,4 +167,147 @@ fn policy_matrix_rows_share_schema_and_diverge_in_results() {
         Some(0.0),
         "checkpoint restore preserves emitted progress"
     );
+}
+
+// ------------------------------------------------------------ fleet tier
+
+/// Every key a fleet sweep row must carry, in the writer's (sorted)
+/// order: the 16 scenario-row keys plus `clusters`.
+const FLEET_ROW_KEYS: [&str; 17] = [
+    "clusters",
+    "full_recomputes",
+    "incomplete",
+    "latency_avg_s",
+    "latency_p99_s",
+    "mean_recovery_s",
+    "n",
+    "policy",
+    "preemptions",
+    "recoveries",
+    "retries",
+    "rps",
+    "scenario",
+    "tpot_avg_s",
+    "tpot_p99_s",
+    "ttft_avg_s",
+    "ttft_p99_s",
+];
+
+#[test]
+fn fleet_sweep_json_matches_golden_schema() {
+    let names = vec!["fleet-small".to_string()];
+    let rows =
+        fleet::run_fleet_sweep(&names, false, Some(150.0), true, 1, &[], QueueKind::Heap).unwrap();
+    let doc = fleet::fleet_sweep_json(&rows);
+    let text = doc.to_string();
+
+    // byte-determinism: an identical fleet sweep serializes identically
+    let rows2 =
+        fleet::run_fleet_sweep(&names, false, Some(150.0), true, 1, &[], QueueKind::Heap).unwrap();
+    assert_eq!(text, fleet::fleet_sweep_json(&rows2).to_string());
+
+    let parsed = Json::parse(&text).unwrap();
+    assert_eq!(parsed.get("suite").unwrap().as_str(), Some("kevlarflow-fleet"));
+    assert_eq!(parsed.get("version").unwrap().as_f64(), Some(1.0));
+
+    // one row per policy at the scenario's default RPS, standard first
+    let out = parsed.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(out.len(), 2);
+    for (row, policy) in out.iter().zip(["standard", "kevlarflow"]) {
+        let obj = row.as_obj().unwrap();
+        let keys: Vec<&str> = obj.keys().map(String::as_str).collect();
+        assert_eq!(keys, FLEET_ROW_KEYS, "fleet row schema drifted");
+        assert_eq!(row.get("scenario").unwrap().as_str(), Some("fleet-small"));
+        assert_eq!(row.get("policy").unwrap().as_str(), Some(policy));
+        assert_eq!(row.get("clusters").unwrap().as_f64(), Some(4.0));
+        assert_eq!(row.get("rps").unwrap().as_f64(), Some(4.0));
+        assert!(row.get("n").unwrap().as_f64().unwrap() > 100.0, "too few served");
+        for metric in ["latency_avg_s", "latency_p99_s", "ttft_avg_s", "ttft_p99_s"] {
+            let v = row.get(metric).unwrap().as_f64().unwrap();
+            assert!(v.is_finite() && v > 0.0, "{metric} = {v}");
+        }
+    }
+    // the kill inside cluster 1 recovers under KevlarFlow only
+    assert_eq!(out[0].get("recoveries").unwrap().as_f64(), Some(0.0));
+    assert_eq!(out[1].get("recoveries").unwrap().as_f64(), Some(1.0));
+    assert!(out[1].get("mean_recovery_s").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn fleet_sweep_bytes_identical_across_thread_counts_and_backends() {
+    // `--jobs` shards inside each fleet run and the backend is a pure
+    // throughput knob: neither may move a byte of the emitted document
+    let names = vec!["fleet-small".to_string(), "fleet-regional-outage".to_string()];
+    let serial =
+        fleet::run_fleet_sweep(&names, false, Some(120.0), true, 1, &[], QueueKind::Heap).unwrap();
+    let text = fleet::fleet_sweep_json(&serial).to_string();
+    let sharded =
+        fleet::run_fleet_sweep(&names, false, Some(120.0), true, 8, &[], QueueKind::Heap).unwrap();
+    assert_eq!(
+        text,
+        fleet::fleet_sweep_json(&sharded).to_string(),
+        "fleet sweep output must not depend on the worker-thread count"
+    );
+    let wheel =
+        fleet::run_fleet_sweep(&names, false, Some(120.0), true, 8, &[], QueueKind::Wheel).unwrap();
+    assert_eq!(
+        text,
+        fleet::fleet_sweep_json(&wheel).to_string(),
+        "fleet sweep output must not depend on the event-queue backend"
+    );
+}
+
+#[test]
+fn fleet_metrics_docs_are_jobs_invariant() {
+    // the per-cluster obs recorders fold in cluster order, so the merged
+    // metrics document is as jobs-independent as the sweep rows
+    let names = vec!["fleet-small".to_string()];
+    let (rows1, points1) = fleet::run_fleet_sweep_observed(
+        &names,
+        false,
+        Some(120.0),
+        true,
+        1,
+        &[],
+        QueueKind::Heap,
+        sweep::METRICS_WINDOW_S,
+    )
+    .unwrap();
+    let (rows8, points8) = fleet::run_fleet_sweep_observed(
+        &names,
+        false,
+        Some(120.0),
+        true,
+        8,
+        &[],
+        QueueKind::Heap,
+        sweep::METRICS_WINDOW_S,
+    )
+    .unwrap();
+    assert_eq!(
+        fleet::fleet_sweep_json(&rows1).to_string(),
+        fleet::fleet_sweep_json(&rows8).to_string(),
+        "observed fleet sweep rows must match the unobserved bytes contract"
+    );
+    assert_eq!(
+        obs::metrics_json(&points1).to_string(),
+        obs::metrics_json(&points8).to_string(),
+        "merged fleet metrics docs must not depend on the worker-thread count"
+    );
+}
+
+#[test]
+fn fleet_sweep_file_roundtrip() {
+    let names = vec!["fleet-small".to_string()];
+    let rows =
+        fleet::run_fleet_sweep(&names, false, Some(60.0), true, 2, &[], QueueKind::Heap).unwrap();
+    let dir = std::path::PathBuf::from(env!("CARGO_TARGET_TMPDIR"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_fleet.json");
+    fleet::write_fleet_sweep(&path, &rows).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.ends_with('\n'));
+    let parsed = Json::parse(text.trim_end()).unwrap();
+    assert_eq!(parsed, fleet::fleet_sweep_json(&rows));
+    std::fs::remove_file(&path).ok();
 }
