@@ -25,7 +25,7 @@ use kevlarflow::config::{
     ClusterConfig, ExperimentConfig, Json, NodeId, PolicySpec, QueueKind, RoutePolicy,
 };
 use kevlarflow::coordinator::router::{InstanceView, Router};
-use kevlarflow::coordinator::ReplicationPlanner;
+use kevlarflow::coordinator::{GlobalRouter, ReplicationPlanner};
 use kevlarflow::kvcache::NodeKv;
 use kevlarflow::metrics::rolling_series;
 use kevlarflow::sim::{ClusterSim, Event, EventQueue};
@@ -152,6 +152,29 @@ fn main() {
         });
     }
 
+    // global routing decision — the per-arrival cost of the fleet
+    // tier's single route-once pass (trailing-window expiry + view
+    // update + pick). Routing never touches the event queue, so the
+    // measurement is backend-independent; it is still emitted once per
+    // backend label so every fleet row family carries the uniform
+    // [heap]/[wheel] pair the bench schema check keys on.
+    for kind in [QueueKind::Heap, QueueKind::Wheel] {
+        let mut g = GlobalRouter::new(
+            RoutePolicy::LeastLoaded,
+            42,
+            8,
+            60.0,
+            vec![Vec::new(); 8],
+        )
+        .with_expected_rps(120.0);
+        let mut t = 0.0f64;
+        let name = format!("fleet route ll (8 clusters) [{}]", kind.label());
+        bench(&mut rows, &name, 2_000_000 / scale, || {
+            t += 1.0 / 120.0; // 120 RPS of nondecreasing arrivals
+            g.route(black_box(t)).unwrap() as u64
+        });
+    }
+
     // workload generation
     let spec = WorkloadSpec::sharegpt_like();
     bench(&mut rows, "trace generation (1200s @ 8 RPS)", 200 / scale.min(10), || {
@@ -223,8 +246,9 @@ fn main() {
     // same naming scheme as the `sim …` rows (the bench schema check in
     // CI requires `fleet ` rows for both backends). `fleet-small` is the
     // representative fleet; the regional-outage scene adds the drained
-    // front door. Runs shard over all cores — throughput is fleet
-    // events/s aggregated across clusters.
+    // front door. Runs go through the route-once path (one routing pass
+    // on a dedicated router thread, bounded handoff, workers on all
+    // cores) — throughput is fleet events/s aggregated across clusters.
     for fleet_name in ["fleet-small", "fleet-regional-outage"] {
         let mut scn = kevlarflow::scenario::fleet_find(fleet_name).expect("registry entry");
         if quick {

@@ -7,7 +7,8 @@
 //! the fleet-wide [`Summary`] over every cluster's completions
 //! (concatenated in cluster order) plus the aggregated fault-path
 //! counters and the front-door drop count. The `--jobs` axis shards
-//! *inside* each fleet run (per-cluster execution, see
+//! *inside* each fleet run (route-once: one routing pass feeds
+//! per-cluster workers over bounded handoff queues, see
 //! [`crate::sim::FleetSim`]) while matrix points run serially — so the
 //! emitted bytes are independent of `--jobs` by construction, pinned by
 //! `rust/tests/sweep_golden.rs` and the CI `cmp` steps.

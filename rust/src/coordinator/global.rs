@@ -11,10 +11,11 @@
 //! synchronization on every completion), so the load view here is the
 //! count of assignments this router made to each cluster within a
 //! trailing window (`view_window_s`) — a pure function of the arrival
-//! stream prefix, which is what makes the fleet layer's per-cluster
-//! sharding embarrassingly parallel AND bit-deterministic: every worker
-//! can replay the identical global routing sequence from the seed alone
-//! (see [`crate::sim::FleetSim`]).
+//! stream prefix, which is what makes the fleet layer's route-once
+//! sharding bit-deterministic: the single routing pass is reproducible
+//! from the seed alone, independent of how cluster execution is
+//! scheduled, and the replay oracle can regenerate the identical
+//! sequence for the differential proof (see [`crate::sim::FleetSim`]).
 //!
 //! Cluster-level availability at this tier is likewise front-door state,
 //! not inferred fault state: a [`crate::scenario::FleetScenario`] scripts
@@ -62,6 +63,30 @@ impl GlobalRouter {
             view_window_s,
             drains,
         }
+    }
+
+    /// Pre-size the trailing-window deques for an expected arrival rate
+    /// (builder style): a window can hold at most ~`rps ·
+    /// view_window_s` timestamps, so reserving that up front removes
+    /// every regrowth from the hot routing pass. Purely an allocation
+    /// hint — routing decisions are bit-identical with or without it
+    /// (pinned by `presizing_never_moves_a_route` below). A bucketed
+    /// count ring was considered instead and rejected: collapsing
+    /// timestamps into buckets changes which assignments a given `t`
+    /// expires at bucket boundaries, which provably moves `ll`/`p2c`
+    /// decisions, and exact timestamps are already amortized O(1) per
+    /// route (each is pushed and popped once).
+    pub fn with_expected_rps(mut self, rps: f64) -> Self {
+        if rps > 0.0 {
+            // cap the hint: a pathological rps·window product must not
+            // pre-allocate unbounded memory for timestamps that may
+            // never coexist
+            let per_cluster = ((rps * self.view_window_s).ceil() as usize).min(1 << 22);
+            for w in &mut self.window {
+                w.reserve(per_cluster);
+            }
+        }
+        self
     }
 
     pub fn n_clusters(&self) -> usize {
@@ -151,6 +176,39 @@ mod tests {
         // after the window expires all loads reset; cursor tiebreak resumes
         let late = g.route(100.0).unwrap();
         assert_eq!(late, 0);
+    }
+
+    #[test]
+    fn presizing_never_moves_a_route() {
+        // with_expected_rps is an allocation hint only: the routing
+        // sequence must be bit-identical with and without it, for every
+        // policy, including under drains and window churn
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::PowerOfTwo]
+        {
+            let drains = vec![Vec::new(), vec![(5.0, 9.0)], Vec::new()];
+            let mut plain = GlobalRouter::new(policy, 11, 3, 10.0, drains.clone());
+            let mut sized =
+                GlobalRouter::new(policy, 11, 3, 10.0, drains).with_expected_rps(40.0);
+            for i in 0..2000 {
+                let t = i as f64 * 0.025;
+                assert_eq!(plain.route(t), sized.route(t), "{policy:?} diverged at t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_window_expiry_is_boundary_exact() {
+        // the ll load view must drop an assignment exactly when it ages
+        // past the window (ts <= t - window), not a bucket early or
+        // late — the property that rules out bucketed compaction
+        let mut g =
+            GlobalRouter::new(RoutePolicy::LeastLoaded, 3, 2, 10.0, vec![Vec::new(); 2]);
+        assert_eq!(g.route(0.0), Some(0)); // cursor tiebreak on empty loads
+        // at t=9.99 the t=0 assignment still counts: cluster 1 is lighter
+        assert_eq!(g.route(9.99), Some(1));
+        // at t=10.0 it expires (0 <= 10 - 10): cluster 0 is now lighter
+        // than cluster 1 (which still holds the t=9.99 assignment)
+        assert_eq!(g.route(10.0), Some(0));
     }
 
     #[test]

@@ -48,7 +48,8 @@ USAGE:
                       [--metrics-out FILE]
                                               run one fleet scenario (many
                                               clusters behind the global
-                                              router); --jobs shards the
+                                              router; the trace is routed
+                                              once); --jobs shards the
                                               per-cluster execution (0 = all
                                               cores) without changing any
                                               output byte

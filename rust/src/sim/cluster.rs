@@ -54,6 +54,20 @@ const STRAGGLER_FACTOR: f64 = 2.0;
 /// pipeline reaches `Degraded`).
 const REJOIN_RETRY_S: f64 = 5.0;
 
+/// Seq block reserved for arrivals when the streaming build does NOT
+/// know the trace length up front ([`ClusterSim::from_arrivals_unsized`]
+/// — the route-once fleet path, where counting would mean replaying the
+/// whole global routing pass). Seq values never appear in results; only
+/// their ORDER does, and the `(t, seq)` tie contract needs exactly one
+/// property from the eager build: every arrival seq sorts below every
+/// fault/sample/run-time seq (arrivals are pushed first eagerly).
+/// Reserving a block far above any realistic trace length preserves that
+/// property — arrival `i` still carries seq `i`, everything else starts
+/// at the base in identical push order — so the pop stream is
+/// bit-identical to the counted build (pinned by
+/// `rust/tests/fleet_props.rs`).
+const STREAM_SEQ_BASE: u64 = 1 << 48;
+
 /// Outputs of one simulation run.
 #[derive(Debug)]
 pub struct SimResult {
@@ -113,9 +127,12 @@ pub struct ClusterSim {
     /// not one buffer, because executing an `Evict` re-enters
     /// [`ClusterSim::control`] for each displaced request).
     scratch: Vec<Vec<Action>>,
-    /// Total arrivals of the run. Equals `reqs.len()` in eager mode; in
-    /// streaming mode `reqs` grows lazily toward it.
-    pub(crate) n_total: usize,
+    /// Total arrivals of the run, when known up front. Equals
+    /// `reqs.len()` in eager mode; in counted streaming mode `reqs`
+    /// grows lazily toward it. `None` in unsized streaming mode
+    /// ([`ClusterSim::from_arrivals_unsized`]): the count is resolved at
+    /// end of run by draining whatever the stream never injected.
+    pub(crate) total: Option<usize>,
     /// Streaming arrival source: `Some` puts the sim in streaming mode —
     /// exactly one pending [`Event::Arrival`] sits in the queue, and
     /// handling it injects the next one from this iterator.
@@ -158,7 +175,7 @@ impl ClusterSim {
 
         let reqs: Vec<ReqState> = trace.into_iter().map(ReqState::new).collect();
         let n_total = reqs.len();
-        Self::assemble(cfg, q, reqs, n_total, None)
+        Self::assemble(cfg, q, reqs, Some(n_total), None)
     }
 
     /// Build in streaming-arrival mode: the trace is never materialized.
@@ -187,12 +204,38 @@ impl ClusterSim {
     /// pop order matches the eager build exactly, ties included.
     pub fn from_arrivals(
         cfg: ExperimentConfig,
-        mut arrivals: Box<dyn Iterator<Item = Request> + Send>,
+        arrivals: Box<dyn Iterator<Item = Request> + Send>,
         n_total: usize,
+    ) -> Self {
+        Self::build_streaming(cfg, arrivals, Some(n_total))
+    }
+
+    /// Streaming-mode build WITHOUT an up-front arrival count — the
+    /// route-once fleet path, where the only way to count a cluster's
+    /// share would be to replay the whole global routing pass. Arrivals
+    /// take seqs `0..` via `EventQueue::push_with_seq` exactly as in
+    /// [`ClusterSim::from_arrivals`]; everything else starts at
+    /// `STREAM_SEQ_BASE` (`1 << 48`) instead of at the count, which preserves the
+    /// only ordering property the tie contract needs (see the constant's
+    /// doc). The total is resolved at end of run by draining the
+    /// remainder of the stream — which doubles as the guarantee that a
+    /// handoff producer blocked on this cluster's queue is always
+    /// unblocked, even when the run stops early at `max_sim_time_s`.
+    pub fn from_arrivals_unsized(
+        cfg: ExperimentConfig,
+        arrivals: Box<dyn Iterator<Item = Request> + Send>,
+    ) -> Self {
+        Self::build_streaming(cfg, arrivals, None)
+    }
+
+    fn build_streaming(
+        cfg: ExperimentConfig,
+        mut arrivals: Box<dyn Iterator<Item = Request> + Send>,
+        total: Option<usize>,
     ) -> Self {
         let mut q =
             EventQueue::with_capacity_kind(cfg.timing.queue, 2 * cfg.faults.len() + 64);
-        q.reserve_seqs(n_total as u64);
+        q.reserve_seqs(total.map_or(STREAM_SEQ_BASE, |n| n as u64));
         for op in &cfg.faults {
             match *op {
                 FaultOp::Kill { t_s, node } => q.push(t_s, Event::FailureInject { node }),
@@ -208,19 +251,25 @@ impl ClusterSim {
         }
         q.push(SAMPLE_INTERVAL_S, Event::Sample);
         let mut reqs = Vec::new();
-        if let Some(r) = arrivals.next() {
-            debug_assert_eq!(r.id as usize, reqs.len(), "streamed ids must be dense");
-            q.push_with_seq(r.arrival_s, r.id, Event::Arrival { req: r.id as usize });
-            reqs.push(ReqState::new(r));
-        }
-        Self::assemble(cfg, q, reqs, n_total, Some(arrivals))
+        // an empty stream is dropped immediately: `stream.is_some()`
+        // doubles as "more arrivals may come" for the sampling loop
+        let stream = match arrivals.next() {
+            Some(r) => {
+                debug_assert_eq!(r.id as usize, reqs.len(), "streamed ids must be dense");
+                q.push_with_seq(r.arrival_s, r.id, Event::Arrival { req: r.id as usize });
+                reqs.push(ReqState::new(r));
+                Some(arrivals)
+            }
+            None => None,
+        };
+        Self::assemble(cfg, q, reqs, total, stream)
     }
 
     fn assemble(
         cfg: ExperimentConfig,
         q: EventQueue,
         reqs: Vec<ReqState>,
-        n_total: usize,
+        total: Option<usize>,
         stream: Option<Box<dyn Iterator<Item = Request> + Send>>,
     ) -> Self {
         let nodes = NodeTable::new(
@@ -230,7 +279,10 @@ impl ClusterSim {
         );
         let instances = InstanceTable::new(cfg.cluster.n_instances);
         let mut cp = ControlPlane::new(&cfg.cluster, &cfg.serving, &cfg.timing, cfg.seed);
-        cp.reserve_requests(n_total);
+        // with no count, the facade's request table grows on demand —
+        // proven reservation-equivalent (route() resizes, get_mut and
+        // set_synced treat missing exactly like reserved-UNASSIGNED)
+        cp.reserve_requests(total.unwrap_or(0));
         let rng = Pcg32::with_stream(cfg.seed, 0x5e0);
 
         Self {
@@ -253,10 +305,17 @@ impl ClusterSim {
             control_log: Vec::new(),
             obs: None,
             scratch: Vec::new(),
-            n_total,
+            total,
             stream,
             peak_queue_len: 0,
         }
+    }
+
+    /// Whether the arrival stream may still yield requests (streaming
+    /// modes only; the run loop drops the stream the moment it runs
+    /// dry). The unsized build's stand-in for `reqs.len() < total`.
+    pub(crate) fn stream_live(&self) -> bool {
+        self.stream.is_some()
     }
 
     /// Select the control-log mode (builder style; default
@@ -556,18 +615,24 @@ impl ClusterSim {
                     // (t, seq) is strictly greater, so this cannot
                     // perturb the pop order)
                     if let Some(stream) = self.stream.as_mut() {
-                        if let Some(r) = stream.next() {
-                            debug_assert_eq!(
-                                r.id as usize,
-                                self.reqs.len(),
-                                "streamed ids must be dense"
-                            );
-                            self.q.push_with_seq(
-                                r.arrival_s,
-                                r.id,
-                                Event::Arrival { req: r.id as usize },
-                            );
-                            self.reqs.push(ReqState::new(r));
+                        match stream.next() {
+                            Some(r) => {
+                                debug_assert_eq!(
+                                    r.id as usize,
+                                    self.reqs.len(),
+                                    "streamed ids must be dense"
+                                );
+                                self.q.push_with_seq(
+                                    r.arrival_s,
+                                    r.id,
+                                    Event::Arrival { req: r.id as usize },
+                                );
+                                self.reqs.push(ReqState::new(r));
+                            }
+                            // exhausted: drop it so `stream.is_some()`
+                            // means "more arrivals may come" (the
+                            // sampling loop's unsized-mode condition)
+                            None => self.stream = None,
                         }
                     }
                     let id = self.reqs[req].spec.id;
@@ -601,8 +666,15 @@ impl ClusterSim {
         // streaming mode: arrivals the stream never injected (run hit
         // max_sim_time_s first) are incomplete too; eager mode has
         // reqs.len() == n_total, so the first term is zero there
-        let incomplete = (self.n_total - self.reqs.len())
-            + self.reqs.iter().filter(|r| !r.done).count();
+        // In unsized mode the total is resolved now by draining the
+        // stream remainder — which also unblocks a handoff producer
+        // still parked on this cluster's queue after an early stop.
+        let n_total = match self.total {
+            Some(n) => n,
+            None => self.reqs.len() + self.stream.take().map_or(0, |s| s.count()),
+        };
+        let incomplete =
+            (n_total - self.reqs.len()) + self.reqs.iter().filter(|r| !r.done).count();
         if let Some(o) = self.obs.as_mut() {
             o.finish(self.now);
         }

@@ -9,27 +9,44 @@
 //! addressed as `(cluster, node)` by lowering them into the per-cluster
 //! configs (see [`crate::scenario::FleetScenario`]).
 //!
+//! ## Route once, shard everywhere
+//!
+//! [`FleetSim::run`] generates and routes the global trace exactly
+//! once: a single router thread drives one [`GlobalRouter`] over one
+//! [`TraceStream`] pass, assigns dense per-cluster ids on the fly, and
+//! partitions the arrivals into per-cluster bounded chunk queues
+//! ([`super::handoff`]). Shard workers claim clusters and consume only
+//! their own queue via [`ClusterSim::from_arrivals_unsized`] — O(N)
+//! arrival sampling and routing total, where the old replay design did
+//! O(N·(C+1)) (every worker replayed the whole stream through a fresh
+//! router and filtered, plus one more counting replay). The replay path
+//! survives as [`FleetSim::run_replay`], the differential oracle.
+//!
 //! ## Determinism under sharding
 //!
 //! The global router's load view is a pure function of the arrival
 //! stream prefix (trailing-window assignment counts — see
-//! [`GlobalRouter`]), so the full routing sequence is reproducible from
-//! the fleet seed alone. That makes per-cluster execution embarrassingly
-//! parallel: every worker replays the *whole* global stream through a
-//! fresh router and filters to its own cluster ([`RoutedStream`]) —
-//! no shared state, no cross-thread communication — and results
-//! reassemble in cluster order. Bytes out are therefore identical for
-//! any `--jobs` by construction (pinned by `rust/tests/sweep_golden.rs`).
+//! [`GlobalRouter`]), never of cluster execution, so the single routing
+//! pass is reproducible from the fleet seed alone and is oblivious to
+//! how workers are scheduled: a cluster's arrival sequence is fixed
+//! before any worker touches it, handoff queues preserve order, and
+//! results reassemble in cluster order. Bytes out are therefore
+//! identical for any `--jobs` and both `--queue` backends by
+//! construction — pinned against the replay oracle by
+//! `rust/tests/fleet_props.rs` and against re-runs by
+//! `rust/tests/sweep_golden.rs`.
 //!
 //! ## Memory under scale
 //!
 //! Arrivals stream lazily end to end: the global trace is never
-//! materialized (a counting pass learns per-cluster arrival counts in
-//! O(1) memory), and each cluster runs in streaming mode
-//! ([`ClusterSim::from_arrivals`]) holding one pending arrival at a
-//! time. Peak event-queue occupancy of a million-request fleet run is
-//! O(inflight), not O(trace) — regressed by `rust/tests/fleet_props.rs`
-//! via [`SimResult::peak_queue_len`].
+//! materialized, each cluster sim holds one pending arrival at a time,
+//! and the handoff bounds every claimed queue at a few chunks
+//! (backpressure on the router thread — see the claim rule in
+//! [`super::handoff`]). Peak event-queue occupancy of a
+//! million-request fleet run is O(inflight) and handoff occupancy is
+//! O(chunk·C) once every cluster is claimed — regressed by
+//! `rust/tests/fleet_props.rs` via [`SimResult::peak_queue_len`] and
+//! [`FleetResult::handoff_high_water`].
 //!
 //! ## Fleet ≡ cluster
 //!
@@ -42,6 +59,7 @@
 //! registry scenario × policy preset × queue backend.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::config::{ExperimentConfig, RoutePolicy};
 use crate::coordinator::GlobalRouter;
@@ -50,6 +68,7 @@ use crate::obs;
 use crate::workload::{Request, TraceStream, WorkloadSpec};
 
 use super::cluster::{ClusterSim, LogMode, SimResult};
+use super::handoff;
 
 /// A fully lowered fleet run: the global arrival stream + routing tier,
 /// and one [`ExperimentConfig`] per cluster (faults already local,
@@ -96,10 +115,15 @@ impl FleetSpec {
             self.view_window_s,
             self.drains.clone(),
         )
+        .with_expected_rps(self.rps)
     }
 
-    /// The arrivals routed to `cluster`, re-idded densely from 0 — the
-    /// iterator a shard worker feeds [`ClusterSim::from_arrivals`].
+    /// The arrivals routed to `cluster`, re-idded densely from 0, by
+    /// replaying the WHOLE global stream through a fresh router and
+    /// filtering — O(N) work per call. The production path
+    /// ([`FleetSim::run`]) routes once instead; this replay survives as
+    /// the independent oracle the route-once differential
+    /// (`rust/tests/fleet_props.rs`) compares against.
     pub fn routed(&self, cluster: usize) -> RoutedStream {
         assert!(cluster < self.clusters.len());
         RoutedStream { stream: self.stream(), router: self.router(), cluster, next_id: 0 }
@@ -107,7 +131,9 @@ impl FleetSpec {
 
     /// Counting pass: replay the routing in O(1) memory to learn each
     /// cluster's arrival count plus the front-door drop count (arrivals
-    /// landing while every cluster was drained).
+    /// landing while every cluster was drained). Oracle-only, like
+    /// [`FleetSpec::routed`] — [`FleetSim::run`] learns the counts from
+    /// its single routing pass.
     pub fn count_assignments(&self) -> (Vec<usize>, usize) {
         let mut counts = vec![0usize; self.clusters.len()];
         let mut dropped = 0usize;
@@ -126,7 +152,7 @@ impl FleetSpec {
 /// through a fresh [`GlobalRouter`] and yields only the requests routed
 /// to `cluster`, re-idded densely (the per-cluster sim's request ids are
 /// local). For a fleet of one this is the identity over the plain
-/// [`TraceStream`].
+/// [`TraceStream`]. Test-oracle only — see [`FleetSpec::routed`].
 pub struct RoutedStream {
     stream: TraceStream,
     router: GlobalRouter,
@@ -160,6 +186,11 @@ pub struct FleetResult {
     pub dropped: usize,
     /// Total arrivals of the global stream (`assigned` sum + `dropped`).
     pub n_total: usize,
+    /// Largest number of requests any cluster's handoff queue ever held
+    /// during the route-once pass — the handoff memory high-water (see
+    /// the claim rule in [`super::handoff`]). `0` on the replay-oracle
+    /// path, which has no handoff.
+    pub handoff_high_water: usize,
 }
 
 impl FleetResult {
@@ -248,12 +279,17 @@ impl FleetSim {
         &self.spec
     }
 
-    fn run_cluster(&self, cluster: usize, count: usize) -> SimResult {
-        let mut sim = ClusterSim::from_arrivals(
-            self.spec.clusters[cluster].clone(),
-            Box::new(self.spec.routed(cluster)),
-            count,
-        )
+    fn build_cluster(
+        &self,
+        cluster: usize,
+        arrivals: Box<dyn Iterator<Item = Request> + Send>,
+        count: Option<usize>,
+    ) -> SimResult {
+        let cfg = self.spec.clusters[cluster].clone();
+        let mut sim = match count {
+            Some(n) => ClusterSim::from_arrivals(cfg, arrivals, n),
+            None => ClusterSim::from_arrivals_unsized(cfg, arrivals),
+        }
         .with_log(self.log_mode);
         if let Some(w) = self.obs_window_s {
             sim = sim.with_obs(w);
@@ -261,17 +297,109 @@ impl FleetSim {
         sim.run()
     }
 
-    /// Run the fleet, sharding per-cluster execution over `jobs` worker
-    /// threads (`0` = all available cores; clamped to the cluster
-    /// count). Results reassemble in cluster order, so the output is
-    /// identical for every `jobs` value.
+    /// Run the fleet: route once, shard everywhere.
+    ///
+    /// One router thread makes the single pass over the global stream —
+    /// routing every arrival, assigning dense per-cluster ids, counting
+    /// assignments and front-door drops, and feeding the per-cluster
+    /// handoff queues — while `jobs` workers (`0` = all available
+    /// cores; clamped to the cluster count) claim clusters and run
+    /// their sims off their own queue, pipelined with the routing.
+    /// Results reassemble in cluster order, so the output is identical
+    /// for every `jobs` value and byte-identical to the replay oracle
+    /// [`FleetSim::run_replay`] (`rust/tests/fleet_props.rs`).
     pub fn run(&self, jobs: usize) -> FleetResult {
+        let n = self.spec.clusters.len();
+        let jobs = effective_jobs(jobs, n);
+        let (tx, rxs, mon) = handoff::channel(n);
+        let receivers: Vec<Mutex<Option<handoff::Receiver>>> =
+            rxs.into_iter().map(|r| Mutex::new(Some(r))).collect();
+        let cursor = AtomicUsize::new(0);
+        let mut slots: Vec<Option<SimResult>> = (0..n).map(|_| None).collect();
+        let (assigned, dropped) = std::thread::scope(|s| {
+            let router_thread = s.spawn(|| {
+                // THE routing pass: the only place the global trace is
+                // generated or routed in a production run
+                let mut tx = tx;
+                let mut router = self.spec.router();
+                let mut assigned = vec![0usize; n];
+                let mut next_id = vec![0u64; n];
+                let mut dropped = 0usize;
+                for mut r in self.spec.stream() {
+                    match router.route(r.arrival_s) {
+                        Some(c) => {
+                            r.id = next_id[c];
+                            next_id[c] += 1;
+                            assigned[c] += 1;
+                            tx.send(c, r);
+                        }
+                        None => dropped += 1,
+                    }
+                }
+                tx.finish();
+                (assigned, dropped)
+            });
+            let workers: Vec<_> = (0..jobs)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut done = Vec::new();
+                        loop {
+                            let c = cursor.fetch_add(1, Ordering::Relaxed);
+                            if c >= n {
+                                break;
+                            }
+                            let rx = receivers[c]
+                                .lock()
+                                .unwrap()
+                                .take()
+                                .expect("cluster claimed twice");
+                            done.push((c, self.build_cluster(c, Box::new(rx), None)));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            // Join the router first: workers drain the queues
+            // concurrently, so this cannot deadlock, and a router panic
+            // closes the queues (Sender drop) before propagating here.
+            let routed = router_thread.join().expect("fleet router panicked");
+            for h in workers {
+                for (c, r) in h.join().expect("fleet worker panicked") {
+                    slots[c] = Some(r);
+                }
+            }
+            routed
+        });
+        let clusters: Vec<SimResult> =
+            slots.into_iter().map(|r| r.expect("every cluster ran")).collect();
+        let n_total = assigned.iter().sum::<usize>() + dropped;
+        FleetResult {
+            clusters,
+            assigned,
+            dropped,
+            n_total,
+            handoff_high_water: mon.high_water(),
+        }
+    }
+
+    /// The pre-route-once execution path, kept alive as the independent
+    /// differential oracle: a counting replay learns per-cluster arrival
+    /// counts, then every shard worker replays the whole global stream
+    /// through its own fresh router and filters to its cluster
+    /// ([`RoutedStream`]) — O(N·(C+1)) routing work, no handoff, no
+    /// cross-thread communication. `rust/tests/fleet_props.rs` pins
+    /// [`FleetSim::run`] bit-exact against this for every registry fleet
+    /// scenario × policy × queue backend × jobs.
+    pub fn run_replay(&self, jobs: usize) -> FleetResult {
         let (assigned, dropped) = self.spec.count_assignments();
         let n_total = assigned.iter().sum::<usize>() + dropped;
         let n = self.spec.clusters.len();
         let jobs = effective_jobs(jobs, n);
+        let replay = |c: usize| {
+            self.build_cluster(c, Box::new(self.spec.routed(c)), Some(assigned[c]))
+        };
         let clusters: Vec<SimResult> = if jobs <= 1 {
-            (0..n).map(|c| self.run_cluster(c, assigned[c])).collect()
+            (0..n).map(replay).collect()
         } else {
             let cursor = AtomicUsize::new(0);
             let mut slots: Vec<Option<SimResult>> = (0..n).map(|_| None).collect();
@@ -285,7 +413,7 @@ impl FleetSim {
                                 if c >= n {
                                     break;
                                 }
-                                done.push((c, self.run_cluster(c, assigned[c])));
+                                done.push((c, replay(c)));
                             }
                             done
                         })
@@ -299,7 +427,7 @@ impl FleetSim {
             });
             slots.into_iter().map(|r| r.expect("every cluster ran")).collect()
         };
-        FleetResult { clusters, assigned, dropped, n_total }
+        FleetResult { clusters, assigned, dropped, n_total, handoff_high_water: 0 }
     }
 }
 

@@ -1,0 +1,321 @@
+//! The route-once handoff layer: bounded per-cluster chunk queues
+//! between the single global-routing thread and the per-cluster shard
+//! workers (DESIGN.md §8).
+//!
+//! One [`Sender`] (owned by the router thread) partitions the routed
+//! arrival stream into per-cluster chunks of [`CHUNK`] requests; one
+//! [`Receiver`] per cluster replays its chunks as a plain
+//! `Iterator<Item = Request>` for [`ClusterSim`](super::ClusterSim)'s
+//! streaming build. The queues are SPSC by construction — exactly one
+//! producer (the router thread) and exactly one consumer per cluster (the
+//! worker that claimed it) — implemented with a std `Mutex`/`Condvar`
+//! pair per cluster, locked once per *chunk*, not once per request.
+//!
+//! ## Backpressure and the claim rule
+//!
+//! A queue whose receiver is actively consuming (*claimed*, set on the
+//! receiver's first pull) holds at most [`DEPTH`] chunks: the producer
+//! blocks until the consumer drains one, so a fast router cannot run
+//! unboundedly ahead of slow cluster sims. A queue that is *unclaimed*
+//! (its cluster's worker has not started — `--jobs` smaller than the
+//! cluster count) buffers without bound instead, because blocking on it
+//! would deadlock: the single global pass must emit later clusters'
+//! arrivals before earlier clusters finish, and those arrivals cannot be
+//! regenerated without re-routing (which is exactly the replay the
+//! route-once design removes). With `jobs >= n_clusters` every queue is
+//! claimed almost immediately and handoff memory is O(CHUNK · DEPTH ·
+//! n_clusters); with fewer workers the unclaimed tail buffers at most
+//! its own share of the trace — still a strict improvement over the
+//! replay path's O(N · C) routing work. [`Monitor::high_water`] exposes
+//! the realized maximum so tests can regress the bound
+//! (`rust/tests/fleet_props.rs`).
+//!
+//! ## Failure safety
+//!
+//! Dropping a [`Receiver`] (worker panic, early exit) marks its queue
+//! disconnected: the producer discards further chunks for that cluster
+//! instead of blocking forever. Dropping the [`Sender`] (router panic)
+//! closes every queue, so consumers see end-of-stream instead of
+//! hanging; the panic then propagates through the thread-scope join.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::workload::Request;
+
+/// Requests per handoff chunk (one lock round-trip per chunk).
+pub const CHUNK: usize = 256;
+
+/// Maximum chunks queued per *claimed* cluster before the producer
+/// blocks.
+pub const DEPTH: usize = 4;
+
+#[derive(Default)]
+struct QueueState {
+    chunks: VecDeque<Vec<Request>>,
+    /// Requests currently queued (sum of chunk lengths).
+    queued: usize,
+    /// Max `queued` ever observed (at push time).
+    high_water: usize,
+    /// Producer finished: no more chunks will arrive.
+    closed: bool,
+    /// Consumer has started pulling; the [`DEPTH`] bound applies.
+    claimed: bool,
+    /// Consumer is gone; discard instead of blocking.
+    disconnected: bool,
+}
+
+struct Queue {
+    state: Mutex<QueueState>,
+    /// Consumers wait here for data or close.
+    data: Condvar,
+    /// The producer waits here for space on a claimed queue.
+    space: Condvar,
+}
+
+impl Queue {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(QueueState::default()),
+            data: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+}
+
+/// Build the handoff for `n_clusters`: the router thread keeps the
+/// [`Sender`], each shard worker claims one [`Receiver`], and the
+/// coordinator keeps the [`Monitor`] to read occupancy stats after the
+/// run.
+pub fn channel(n_clusters: usize) -> (Sender, Vec<Receiver>, Monitor) {
+    let queues: Vec<Arc<Queue>> = (0..n_clusters).map(|_| Arc::new(Queue::new())).collect();
+    let receivers = queues
+        .iter()
+        .map(|q| Receiver { queue: Arc::clone(q), current: Vec::new().into_iter() })
+        .collect();
+    let sender = Sender { queues: queues.clone(), pending: vec![Vec::new(); n_clusters] };
+    (sender, receivers, Monitor { queues })
+}
+
+/// Producer half: owned by the router thread, one per fleet run.
+pub struct Sender {
+    queues: Vec<Arc<Queue>>,
+    /// Per-cluster partial chunk, flushed at [`CHUNK`] requests.
+    pending: Vec<Vec<Request>>,
+}
+
+impl Sender {
+    /// Hand `req` (already re-idded by the router pass) to `cluster`.
+    /// Blocks while the cluster's claimed queue is at [`DEPTH`] chunks.
+    pub fn send(&mut self, cluster: usize, req: Request) {
+        let buf = &mut self.pending[cluster];
+        buf.push(req);
+        if buf.len() >= CHUNK {
+            let chunk = std::mem::replace(buf, Vec::with_capacity(CHUNK));
+            push_chunk(&self.queues[cluster], chunk);
+        }
+    }
+
+    /// Flush every partial chunk and close all queues: consumers drain
+    /// what is buffered and then see end-of-stream.
+    pub fn finish(mut self) {
+        for (cluster, buf) in std::mem::take(&mut self.pending).into_iter().enumerate() {
+            if !buf.is_empty() {
+                push_chunk(&self.queues[cluster], buf);
+            }
+        }
+        // Drop closes the queues.
+    }
+}
+
+impl Drop for Sender {
+    fn drop(&mut self) {
+        // close on every exit path — including a router-thread panic —
+        // so no consumer blocks on a stream that will never end
+        for q in &self.queues {
+            q.state.lock().unwrap().closed = true;
+            q.data.notify_all();
+        }
+    }
+}
+
+fn push_chunk(q: &Queue, chunk: Vec<Request>) {
+    let mut st = q.state.lock().unwrap();
+    while st.claimed && !st.disconnected && st.chunks.len() >= DEPTH {
+        st = q.space.wait(st).unwrap();
+    }
+    if st.disconnected {
+        return; // consumer gone; the router's own counters keep the totals
+    }
+    st.queued += chunk.len();
+    st.high_water = st.high_water.max(st.queued);
+    st.chunks.push_back(chunk);
+    drop(st);
+    q.data.notify_one();
+}
+
+/// Consumer half: one per cluster, a plain blocking iterator over the
+/// requests the global router assigned to it (dense ids, nondecreasing
+/// arrival times — exactly what
+/// [`ClusterSim::from_arrivals_unsized`](super::ClusterSim::from_arrivals_unsized)
+/// requires).
+pub struct Receiver {
+    queue: Arc<Queue>,
+    current: std::vec::IntoIter<Request>,
+}
+
+impl Iterator for Receiver {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        loop {
+            if let Some(r) = self.current.next() {
+                return Some(r);
+            }
+            let mut st = self.queue.state.lock().unwrap();
+            st.claimed = true; // first pull activates the DEPTH bound
+            loop {
+                if let Some(chunk) = st.chunks.pop_front() {
+                    st.queued -= chunk.len();
+                    drop(st);
+                    self.queue.space.notify_one();
+                    self.current = chunk.into_iter();
+                    break;
+                }
+                if st.closed {
+                    return None;
+                }
+                st = self.queue.data.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+impl Drop for Receiver {
+    fn drop(&mut self) {
+        let mut st = self.queue.state.lock().unwrap();
+        st.disconnected = true;
+        drop(st);
+        self.queue.space.notify_one();
+    }
+}
+
+/// Occupancy observer kept by the fleet runner: reads the realized
+/// chunk-queue high-water after the router and all workers joined.
+pub struct Monitor {
+    queues: Vec<Arc<Queue>>,
+}
+
+impl Monitor {
+    /// Largest number of requests any cluster's queue ever held —
+    /// the handoff memory high-water observable
+    /// ([`FleetResult::handoff_high_water`](super::FleetResult::handoff_high_water)).
+    pub fn high_water(&self) -> usize {
+        self.queues
+            .iter()
+            .map(|q| q.state.lock().unwrap().high_water)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request { id, arrival_s: id as f64, prompt_len: 8, output_len: 4 }
+    }
+
+    #[test]
+    fn chunks_round_trip_in_order() {
+        let (mut tx, mut rxs, _mon) = channel(2);
+        for i in 0..(3 * CHUNK as u64 + 5) {
+            tx.send((i % 2) as usize, req(i));
+        }
+        tx.finish();
+        for (c, rx) in rxs.iter_mut().enumerate() {
+            let got: Vec<u64> = rx.by_ref().map(|r| r.id).collect();
+            let want: Vec<u64> =
+                (0..(3 * CHUNK as u64 + 5)).filter(|i| (i % 2) as usize == c).collect();
+            assert_eq!(got, want, "cluster {c}");
+        }
+    }
+
+    #[test]
+    fn claimed_queue_blocks_the_producer_at_depth() {
+        // deterministic backpressure proof: once a queue is claimed, a
+        // stalled consumer caps it at DEPTH chunks, so the producer's
+        // high-water is bounded no matter how far the stream runs ahead
+        let (mut tx, mut rxs, mon) = channel(1);
+        let rx = &mut rxs[0];
+        let total = (8 * DEPTH * CHUNK) as u64;
+        // flush one chunk while unclaimed, then claim it — so the claim
+        // is in place BEFORE the producer thread starts
+        for i in 0..CHUNK as u64 {
+            tx.send(0, req(i));
+        }
+        assert_eq!(rx.next().unwrap().id, 0);
+        let producer_done = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let done = &producer_done;
+            let h = s.spawn(move || {
+                for i in CHUNK as u64..total {
+                    tx.send(0, req(i));
+                }
+                tx.finish();
+                done.store(true, std::sync::atomic::Ordering::SeqCst);
+            });
+            // stall the consumer: the producer must block at DEPTH chunks
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            assert!(
+                !producer_done.load(std::sync::atomic::Ordering::SeqCst),
+                "producer ran 8×DEPTH chunks ahead of a stalled claimed consumer"
+            );
+            // drain; the producer unblocks and finishes
+            let rest = rx.by_ref().count();
+            assert_eq!(rest as u64, total - 1);
+            h.join().unwrap();
+        });
+        assert!(
+            mon.high_water() <= DEPTH * CHUNK,
+            "claimed high-water {} exceeds the DEPTH bound",
+            mon.high_water()
+        );
+    }
+
+    #[test]
+    fn unclaimed_queue_buffers_without_blocking() {
+        let (mut tx, mut rxs, mon) = channel(1);
+        let n = (4 * DEPTH * CHUNK) as u64;
+        for i in 0..n {
+            tx.send(0, req(i)); // never blocks: the queue is unclaimed
+        }
+        tx.finish();
+        assert_eq!(mon.high_water() as u64, n);
+        assert_eq!(rxs[0].by_ref().count() as u64, n);
+    }
+
+    #[test]
+    fn dropped_receiver_unblocks_the_producer() {
+        let (mut tx, mut rxs, _mon) = channel(1);
+        // fill to the claimed bound, claim by pulling one request…
+        for i in 0..(DEPTH * CHUNK) as u64 {
+            tx.send(0, req(i));
+        }
+        assert_eq!(rxs[0].next().unwrap().id, 0);
+        // …then disconnect: further sends discard instead of blocking
+        drop(rxs);
+        for i in 0..(4 * DEPTH * CHUNK) as u64 {
+            tx.send(0, req(i));
+        }
+        tx.finish();
+    }
+
+    #[test]
+    fn dropped_sender_closes_the_stream() {
+        let (tx, mut rxs, _mon) = channel(1);
+        drop(tx); // simulated router panic: Drop closes without flush
+        assert!(rxs[0].next().is_none(), "consumer must see end-of-stream, not block");
+    }
+}

@@ -63,18 +63,24 @@
 //! ## Fleet tier
 //!
 //! [`FleetSim`] scales the same machinery to many clusters behind a
-//! hierarchical control plane: a deterministic cluster-level router
-//! ([`crate::coordinator::GlobalRouter`]) shards one seeded arrival
-//! stream across per-cluster simulations, each driving its own facade.
-//! Arrivals stream lazily end to end ([`ClusterSim::new_streaming`] /
-//! [`ClusterSim::from_arrivals`]) so million-request fleets hold
-//! O(inflight) events, not O(trace), and per-cluster execution shards
-//! over worker threads with bit-identical output for any `--jobs`. See
-//! [`fleet`] and DESIGN.md §8.
+//! hierarchical control plane: one router thread makes a single pass
+//! over one seeded arrival stream, routes every request through the
+//! deterministic cluster-level router
+//! ([`crate::coordinator::GlobalRouter`]), and hands each cluster its
+//! share over bounded chunk queues ([`handoff`]); shard workers run the
+//! per-cluster simulations off their own queue, pipelined with the
+//! routing. Arrivals stream lazily end to end
+//! ([`ClusterSim::new_streaming`] /
+//! [`ClusterSim::from_arrivals_unsized`]) so million-request fleets
+//! hold O(inflight) events, not O(trace), routing work is O(N) total
+//! (not O(N·(C+1)) as under the old replay-per-worker design, which
+//! survives as the [`FleetSim::run_replay`] test oracle), and output is
+//! bit-identical for any `--jobs`. See [`fleet`] and DESIGN.md §8.
 
 mod cluster;
 mod events;
 mod fleet;
+pub mod handoff;
 mod state;
 mod timeq;
 

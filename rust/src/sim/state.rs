@@ -535,8 +535,17 @@ impl ClusterSim {
         // drain). In streaming mode not-yet-injected arrivals count as
         // outstanding work (`reqs` only holds the injected prefix); in
         // eager mode the first disjunct is always false, so the
-        // condition — and the Sample event stream — is unchanged.
-        if self.reqs.len() < self.n_total || self.reqs.iter().any(|r| !r.done) {
+        // condition — and the Sample event stream — is unchanged. In
+        // unsized mode "the stream is still live" is the equivalent
+        // signal: it can only disagree with `reqs.len() < total` while
+        // the final arrival is pending — where that arrival's own
+        // `!done` already keeps the condition true — so the Sample
+        // stream is bit-identical to the counted build.
+        let more_arrivals = match self.total {
+            Some(n) => self.reqs.len() < n,
+            None => self.stream_live(),
+        };
+        if more_arrivals || self.reqs.iter().any(|r| !r.done) {
             self.q.push(self.now + SAMPLE_INTERVAL_S, Event::Sample);
         }
     }

@@ -141,8 +141,9 @@ fn next_gap(process: ArrivalProcess, rps: f64, t: f64, rng: &mut Pcg32) -> f64 {
 /// `rust/tests/fleet_props.rs`.
 ///
 /// This is what makes million-request fleet runs feasible: the fleet
-/// layer replays the stream per cluster with O(1) memory for arrival
-/// generation, materializing only in-flight state.
+/// layer makes a single O(1)-memory pass over the stream, routing and
+/// splitting it into per-cluster handoff queues
+/// ([`crate::sim::handoff`]), materializing only in-flight state.
 #[derive(Debug, Clone)]
 pub struct TraceStream {
     spec: WorkloadSpec,

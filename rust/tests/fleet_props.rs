@@ -9,7 +9,14 @@
 //! 2. A streaming-mode single-cluster sim ([`ClusterSim::new_streaming`])
 //!    matches the eager build on every registry scenario × policy preset,
 //!    completion-by-completion — while its peak event-queue occupancy is
-//!    O(inflight), not O(trace).
+//!    O(inflight), not O(trace). The count-free streaming build
+//!    ([`ClusterSim::from_arrivals_unsized`], the route-once fleet
+//!    path's seq-base scheme) matches both.
+//! 2b. Route-once sharding ([`FleetSim::run`]: one routing pass, bounded
+//!    handoff) is bit-exact with the replay-per-worker oracle
+//!    ([`FleetSim::run_replay`]) on every registry fleet scenario ×
+//!    policy preset × queue backend × jobs — the proof that the
+//!    O(N·(C+1)) → O(N) routing rewrite moved no result.
 //! 3. A fleet of ONE cluster ([`FleetScenario::from_scenario`]) is
 //!    bit-exact with [`Scenario::run_with_queue`] on every registry
 //!    scenario × policy preset × queue backend, under every global route
@@ -29,7 +36,7 @@ use std::collections::BTreeSet;
 
 use kevlarflow::config::{PolicySpec, QueueKind, RoutePolicy};
 use kevlarflow::coordinator::control::{Action, ControlPlane, Event as Ctl};
-use kevlarflow::scenario::{fleet_find, registry, FleetScenario, Scenario};
+use kevlarflow::scenario::{fleet_find, fleet_registry, registry, FleetScenario, Scenario};
 use kevlarflow::sim::{ClusterSim, FleetResult, FleetSim, LogMode, SimResult};
 use kevlarflow::workload::{generate_trace, ArrivalProcess, TraceStream, WorkloadSpec};
 
@@ -122,9 +129,16 @@ fn streaming_sim_matches_eager_on_every_scenario() {
             s.arrival_window_s = s.arrival_window_s.min(150.0);
             let cfg = s.to_experiment(s.default_rps, policy);
             let eager = ClusterSim::new(cfg.clone()).run();
-            let streamed = ClusterSim::new_streaming(cfg).run();
+            let streamed = ClusterSim::new_streaming(cfg.clone()).run();
             let tag = format!("{} ({}) eager-vs-streaming", s.name, policy.label());
             assert_results_identical(&eager, &streamed, &tag);
+            // the count-free build (route-once fleet path): arrival seqs
+            // still 0.., everything else from the reserved high base —
+            // pop order, and therefore every result, must not move
+            let stream = TraceStream::new(&cfg.workload, cfg.rps, cfg.arrival_window_s, cfg.seed);
+            let unbounded = ClusterSim::from_arrivals_unsized(cfg, Box::new(stream)).run();
+            let tag = format!("{} ({}) eager-vs-unsized", s.name, policy.label());
+            assert_results_identical(&eager, &unbounded, &tag);
             // the memory claim: the eager build's queue peaks at the whole
             // trace, the streaming build's at the in-flight working set
             assert!(
@@ -176,6 +190,44 @@ fn fleet_of_one_is_route_policy_independent() {
     for route in [RoutePolicy::LeastLoaded, RoutePolicy::PowerOfTwo] {
         let other = fleet_of_one(&s, route).run(2.0, policy, QueueKind::Heap, 1);
         assert_fleets_identical(&rr, &other, &format!("paper-1 via {route:?}"));
+    }
+}
+
+// ------------------------------------- route-once ≡ replay oracle
+
+#[test]
+fn route_once_matches_the_replay_oracle_on_every_fleet_scenario() {
+    // THE proof obligation of the route-once rewrite: one routing pass
+    // feeding bounded handoff queues must reproduce the replay-per-
+    // worker path bit-for-bit — per-cluster ids, completion times,
+    // assignment counts, front-door drops — for every registry fleet
+    // scenario × policy preset × queue backend × jobs
+    for scn in fleet_registry() {
+        let mut scn = scn.clone();
+        // clamp for debug CI; fleet-million still runs ~3.6k arrivals
+        scn.arrival_window_s =
+            scn.arrival_window_s.min(if scn.name == "fleet-million" { 30.0 } else { 150.0 });
+        for policy in PolicySpec::presets() {
+            for queue in [QueueKind::Heap, QueueKind::Wheel] {
+                let spec = scn.to_fleet_spec(scn.default_rps, policy, queue);
+                let sim = FleetSim::new(spec);
+                let oracle = sim.run_replay(1);
+                for jobs in [1usize, 8] {
+                    let routed = sim.run(jobs);
+                    let tag = format!(
+                        "{} ({}) [{}] route-once jobs {jobs}",
+                        scn.name,
+                        policy.label(),
+                        queue.label()
+                    );
+                    assert_fleets_identical(&oracle, &routed, &tag);
+                    assert!(
+                        routed.handoff_high_water > 0,
+                        "{tag}: the handoff must actually carry the stream"
+                    );
+                }
+            }
+        }
     }
 }
 
@@ -279,7 +331,10 @@ fn fleet_scale_streaming_keeps_queue_occupancy_o_inflight() {
 #[cfg_attr(debug_assertions, ignore = "~126k-request fleet run: release-mode only (CI runs it)")]
 fn fleet_million_full_window_runs_streaming_end_to_end() {
     let scn = fleet_find("fleet-million").unwrap();
-    let res = scn.run(scn.default_rps, PolicySpec::kevlarflow(), QueueKind::Heap, 0);
+    // jobs = cluster count: every handoff queue is claimed from the
+    // start, so the DEPTH backpressure bound applies fleet-wide
+    let jobs = scn.n_clusters;
+    let res = scn.run(scn.default_rps, PolicySpec::kevlarflow(), QueueKind::Heap, jobs);
     assert!(res.n_total > 100_000, "fleet-million must exceed 100k arrivals: {}", res.n_total);
     assert_eq!(res.incomplete(), 0);
     let per_cluster = res.n_total / res.clusters.len();
@@ -287,6 +342,15 @@ fn fleet_million_full_window_runs_streaming_end_to_end() {
         res.peak_queue_len() * 10 < per_cluster,
         "peak queue occupancy {} must stay O(inflight), per-cluster trace ~{per_cluster}",
         res.peak_queue_len()
+    );
+    // the route-once memory claim: the single routing pass never runs
+    // unboundedly ahead of cluster execution — chunk-queue high-water
+    // stays far below the total (and the per-cluster) arrival count
+    assert!(
+        res.handoff_high_water * 10 < res.n_total,
+        "handoff high-water {} must stay bounded, total arrivals {}",
+        res.handoff_high_water,
+        res.n_total
     );
 }
 
