@@ -22,11 +22,12 @@ use std::hint::black_box;
 use std::time::Instant;
 
 use kevlarflow::config::{
-    ClusterConfig, ExperimentConfig, Json, NodeId, PolicySpec, QueueKind, RoutePolicy,
+    ClusterConfig, ExperimentConfig, Json, KvTier, NodeId, PolicySpec, QueueKind, RoutePolicy,
 };
 use kevlarflow::coordinator::router::{InstanceView, Router};
 use kevlarflow::coordinator::{GlobalRouter, ReplicationPlanner};
 use kevlarflow::kvcache::NodeKv;
+use kevlarflow::kvtier::KvTierStore;
 use kevlarflow::metrics::rolling_series;
 use kevlarflow::sim::{ClusterSim, Event, EventQueue};
 use kevlarflow::workload::{generate_trace, Pcg32, WorkloadSpec};
@@ -148,6 +149,36 @@ fn main() {
             while q.pop().is_some() {
                 n += 1;
             }
+            n
+        });
+    }
+
+    // tiered-KV flush round-trip, one row per backend: reserve the
+    // host-tier channel, schedule the completion on the event queue,
+    // drain it, and commit the watermark — the per-flush cost a
+    // `ReplicationPolicy::Stream` run pays on every flush cadence
+    for kind in [QueueKind::Heap, QueueKind::Wheel] {
+        let name = format!("kv flush cycle (64 reqs @ 8 Gbps) [{}]", kind.label());
+        bench(&mut rows, &name, 20_000 / scale, || {
+            let mut store = KvTierStore::new(204_800.0);
+            let mut q = EventQueue::with_capacity_kind(kind, 64);
+            for req in 0..64u64 {
+                if store.try_start_flush(KvTier::Host, req) {
+                    let done = store.begin_transfer(KvTier::Host, 0.0, 128, 8.0);
+                    q.push(
+                        done,
+                        Event::KvFlushDone { req: req as usize, tokens: 128, started_s: 0.0 },
+                    );
+                }
+            }
+            let mut n = 0u64;
+            while let Some((t, ev)) = q.pop() {
+                if let Event::KvFlushDone { req, tokens, .. } = ev {
+                    store.commit_flush(KvTier::Host, req as u64, tokens, t);
+                    n += 1;
+                }
+            }
+            black_box(store.total_bytes_streamed());
             n
         });
     }

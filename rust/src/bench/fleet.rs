@@ -39,6 +39,14 @@ pub struct FleetRow {
     /// Per-cluster incompletes plus front-door drops.
     pub incomplete: usize,
     pub retries: u64,
+    /// KV bytes moved into the stream tiers, summed over clusters.
+    pub kv_bytes_streamed: u64,
+    /// Watermark-replayed tokens, summed over clusters.
+    pub kv_replay_tokens: u64,
+    /// Max per-cluster host-tier peak occupancy (tokens).
+    pub kv_tier_peak_host: u64,
+    /// Max per-cluster remote-tier peak occupancy (tokens).
+    pub kv_tier_peak_remote: u64,
 }
 
 fn row_from(s: &FleetScenario, rps: f64, policy: PolicySpec, res: &FleetResult) -> FleetRow {
@@ -66,6 +74,15 @@ fn row_from(s: &FleetScenario, rps: f64, policy: PolicySpec, res: &FleetResult) 
         full_recomputes: res.full_recomputes(),
         incomplete: res.incomplete(),
         retries,
+        kv_bytes_streamed: res.clusters.iter().map(|c| c.kv_bytes_streamed).sum(),
+        kv_replay_tokens: res.clusters.iter().map(|c| c.kv_replay_tokens).sum(),
+        kv_tier_peak_host: res.clusters.iter().map(|c| c.kv_tier_peak_host).max().unwrap_or(0),
+        kv_tier_peak_remote: res
+            .clusters
+            .iter()
+            .map(|c| c.kv_tier_peak_remote)
+            .max()
+            .unwrap_or(0),
     }
 }
 
@@ -234,6 +251,10 @@ fn row_json(r: &FleetRow) -> Json {
     m.insert("full_recomputes".into(), Json::Num(r.full_recomputes as f64));
     m.insert("incomplete".into(), Json::Num(r.incomplete as f64));
     m.insert("retries".into(), Json::Num(r.retries as f64));
+    m.insert("kv_bytes_streamed".into(), Json::Num(r.kv_bytes_streamed as f64));
+    m.insert("kv_replay_tokens".into(), Json::Num(r.kv_replay_tokens as f64));
+    m.insert("kv_tier_peak_host".into(), Json::Num(r.kv_tier_peak_host as f64));
+    m.insert("kv_tier_peak_remote".into(), Json::Num(r.kv_tier_peak_remote as f64));
     Json::Obj(m)
 }
 
@@ -287,6 +308,10 @@ mod tests {
             full_recomputes: 2,
             incomplete: 0,
             retries: 0,
+            kv_bytes_streamed: 0,
+            kv_replay_tokens: 0,
+            kv_tier_peak_host: 0,
+            kv_tier_peak_remote: 0,
         };
         let doc = fleet_sweep_json(&[row]);
         assert_eq!(doc.get("suite").unwrap().as_str(), Some("kevlarflow-fleet"));

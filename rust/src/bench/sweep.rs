@@ -49,6 +49,15 @@ pub struct SweepRow {
     /// Total request restarts (progress loss under full re-init and
     /// spare swaps).
     pub retries: u64,
+    /// KV bytes moved into the stream tiers (0 unless the policy
+    /// streams or the shape is disaggregated).
+    pub kv_bytes_streamed: u64,
+    /// Context tokens resumed from the stream watermark on failover.
+    pub kv_replay_tokens: u64,
+    /// Peak host-tier occupancy (tokens).
+    pub kv_tier_peak_host: u64,
+    /// Peak remote-tier occupancy (tokens).
+    pub kv_tier_peak_remote: u64,
 }
 
 /// Run one point of the matrix on the default event-queue backend.
@@ -103,6 +112,10 @@ fn row_from(s: &Scenario, rps: f64, policy: PolicySpec, res: &SimResult) -> Swee
         full_recomputes: res.full_recomputes,
         incomplete: res.incomplete,
         retries,
+        kv_bytes_streamed: res.kv_bytes_streamed,
+        kv_replay_tokens: res.kv_replay_tokens,
+        kv_tier_peak_host: res.kv_tier_peak_host,
+        kv_tier_peak_remote: res.kv_tier_peak_remote,
     }
 }
 
@@ -291,6 +304,10 @@ fn row_json(r: &SweepRow) -> Json {
     m.insert("full_recomputes".into(), Json::Num(r.full_recomputes as f64));
     m.insert("incomplete".into(), Json::Num(r.incomplete as f64));
     m.insert("retries".into(), Json::Num(r.retries as f64));
+    m.insert("kv_bytes_streamed".into(), Json::Num(r.kv_bytes_streamed as f64));
+    m.insert("kv_replay_tokens".into(), Json::Num(r.kv_replay_tokens as f64));
+    m.insert("kv_tier_peak_host".into(), Json::Num(r.kv_tier_peak_host as f64));
+    m.insert("kv_tier_peak_remote".into(), Json::Num(r.kv_tier_peak_remote as f64));
     Json::Obj(m)
 }
 
@@ -344,6 +361,10 @@ mod tests {
             full_recomputes: 2,
             incomplete: 0,
             retries: 0,
+            kv_bytes_streamed: 4096,
+            kv_replay_tokens: 128,
+            kv_tier_peak_host: 512,
+            kv_tier_peak_remote: 0,
         };
         let doc = sweep_json(&[row]);
         assert_eq!(doc.get("suite").unwrap().as_str(), Some("kevlarflow-scenarios"));
@@ -353,6 +374,9 @@ mod tests {
         let r = &rows[0];
         assert_eq!(r.get("policy").unwrap().as_str(), Some("kevlarflow"));
         assert_eq!(r.get("mean_recovery_s").unwrap().as_f64(), Some(31.5));
+        assert_eq!(r.get("kv_bytes_streamed").unwrap().as_f64(), Some(4096.0));
+        assert_eq!(r.get("kv_replay_tokens").unwrap().as_f64(), Some(128.0));
+        assert_eq!(r.get("kv_tier_peak_host").unwrap().as_f64(), Some(512.0));
         // round-trips through the parser
         let text = doc.to_string();
         assert_eq!(Json::parse(&text).unwrap(), doc);

@@ -14,7 +14,7 @@ mod manifest;
 pub mod policy;
 pub use json::Json;
 pub use manifest::{ArtifactEntry, Goldens, Manifest, ManifestConfig, ParamSpec};
-pub use policy::{PolicySpec, RecoveryPolicy, ReplicationPolicy, RoutePolicy};
+pub use policy::{KvTier, PolicySpec, RecoveryPolicy, ReplicationPolicy, RoutePolicy};
 
 use crate::workload::WorkloadSpec;
 
@@ -81,6 +81,12 @@ impl FaultOp {
 pub struct ClusterConfig {
     pub n_instances: usize,
     pub n_stages: usize,
+    /// Disaggregated prefill/decode split: the first `prefill_instances`
+    /// instances form the prefill pool and the rest the decode pool;
+    /// prefill output transits the KV transport ([`crate::kvtier`])
+    /// before decode admission. `0` (the default) is the colocated shape
+    /// — every instance both prefills and decodes.
+    pub prefill_instances: usize,
     /// Datacenter index of each instance (all 4 nodes of an instance are
     /// co-located — §4: "each model instance on four nodes located in the
     /// same datacenter").
@@ -124,6 +130,7 @@ impl ClusterConfig {
         Self {
             n_instances,
             n_stages,
+            prefill_instances: 0,
             instance_dc: (0..n_instances).map(|i| i % 4).collect(),
             dc_latency_ms: Self::us_dc_matrix(),
             intra_dc_latency_ms: 0.25,
@@ -137,6 +144,25 @@ impl ClusterConfig {
 
     pub fn nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
         (0..self.n_instances).flat_map(move |i| (0..self.n_stages).map(move |s| NodeId::new(i, s)))
+    }
+
+    /// Is this a disaggregated prefill/decode shape?
+    pub fn is_disaggregated(&self) -> bool {
+        self.prefill_instances > 0
+    }
+
+    /// Instances of the prefill pool (empty in the colocated shape).
+    pub fn prefill_pool(&self) -> std::ops::Range<usize> {
+        0..self.prefill_instances.min(self.n_instances)
+    }
+
+    /// Instances of the decode pool (everything in the colocated shape).
+    pub fn decode_pool(&self) -> std::ops::Range<usize> {
+        if self.is_disaggregated() {
+            self.prefill_instances.min(self.n_instances)..self.n_instances
+        } else {
+            0..self.n_instances
+        }
     }
 
     /// One-way latency between two nodes in milliseconds.
@@ -292,6 +318,10 @@ pub struct SimTimingConfig {
     /// Inter-stage activation hand-off size (bytes) per request — used
     /// with the WAN bandwidth model for donor-path hops.
     pub handoff_bytes: f64,
+    /// KV-cache footprint per token (bytes, summed over the stages) —
+    /// sizes the tiered transport's flush/replay transfers
+    /// ([`crate::kvtier`]). ~200 KB/token is a 7B-class model at fp16.
+    pub kv_token_bytes: f64,
     /// Event-queue backend for the simulator ([`QueueKind::Heap`] or
     /// [`QueueKind::Wheel`]; CLI `--queue`). Pure mechanism — proven
     /// observation-identical, so it never changes a result, only how
@@ -317,6 +347,7 @@ impl Default for SimTimingConfig {
             resume_s: 2.0,
             repl_tax: 0.005,
             handoff_bytes: 2.0 * 4096.0,
+            kv_token_bytes: 204_800.0,
             queue: QueueKind::default(),
         }
     }
@@ -432,6 +463,18 @@ mod tests {
         let odd = ClusterConfig::custom(6, 2);
         assert_eq!(odd.n_nodes(), 12);
         assert_eq!(odd.instance_dc, vec![0, 1, 2, 3, 0, 1]);
+    }
+
+    #[test]
+    fn disaggregated_pools_partition_the_instances() {
+        let mut c = ClusterConfig::custom(4, 4);
+        assert!(!c.is_disaggregated());
+        assert_eq!(c.prefill_pool(), 0..0);
+        assert_eq!(c.decode_pool(), 0..4);
+        c.prefill_instances = 1;
+        assert!(c.is_disaggregated());
+        assert_eq!(c.prefill_pool(), 0..1);
+        assert_eq!(c.decode_pool(), 1..4);
     }
 
     #[test]

@@ -29,6 +29,7 @@
 //! rr+spare-pool+ring              (defaults: spares=2, interval=8)
 //! p2c+checkpoint-restore:45+off
 //! ll+donor-splice+ring:4
+//! rr+donor-splice+stream:8:host   (bandwidth Gbps, then the KV tier)
 //! ```
 //!
 //! [`PolicySpec::label`] canonicalizes: a triple equal to a preset
@@ -54,6 +55,9 @@ pub const DEFAULT_CHECKPOINT_INTERVAL_S: f64 = 60.0;
 /// Ring flush cadence (decode iterations) when `ring` has no `:N`
 /// suffix — the historical `replication_interval_iters` default.
 pub const DEFAULT_RING_INTERVAL_ITERS: u32 = 8;
+/// Stream bandwidth (Gbps) when `stream` has no `:G` suffix — a PCIe-ish
+/// device→host budget that keeps up with decode at moderate batch sizes.
+pub const DEFAULT_STREAM_GBPS: f64 = 8.0;
 
 /// How the front door places new requests over the serving LB group.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -176,8 +180,37 @@ impl RecoveryPolicy {
     }
 }
 
-/// Whether and how KV context replicates in the background.
+/// Which KV transport tier a `stream` policy flushes into (the device
+/// tier holds the primaries; streaming targets are below it).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvTier {
+    /// Host (CPU) memory over the device interconnect. Label `host`.
+    Host,
+    /// Remote/disaggregated storage over the network. Label `remote`.
+    Remote,
+}
+
+impl KvTier {
+    /// Stable grammar token.
+    pub fn label(&self) -> &'static str {
+        match self {
+            KvTier::Host => "host",
+            KvTier::Remote => "remote",
+        }
+    }
+
+    /// Inverse of [`KvTier::label`].
+    pub fn parse(s: &str) -> Option<KvTier> {
+        match s {
+            "host" => Some(KvTier::Host),
+            "remote" => Some(KvTier::Remote),
+            _ => None,
+        }
+    }
+}
+
+/// Whether and how KV context replicates in the background.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ReplicationPolicy {
     /// No background replication (failovers recompute). Label `off`.
     Off,
@@ -185,14 +218,24 @@ pub enum ReplicationPolicy {
     /// streams its newest blocks to `((i+1) mod n, s)` every
     /// `interval_iters` decode iterations. Label `ring[:N]`.
     Ring { interval_iters: u32 },
+    /// DéjàVu-style KV streaming into the tiered transport
+    /// ([`crate::kvtier`]): background flushes ride a bandwidth-limited
+    /// channel into `tier`, and recovery *replays* from the stream
+    /// watermark ([`crate::coordinator::control::ResetMode::Replay`])
+    /// instead of recomputing context. Label `stream[:G[:tier]]`
+    /// (bandwidth in Gbps, then the tier name).
+    Stream { bandwidth_gbps: f64, tier: KvTier },
 }
 
 impl ReplicationPolicy {
-    /// Stable grammar token (parameter always explicit).
+    /// Stable grammar token (parameters always explicit).
     pub fn label(&self) -> String {
         match self {
             ReplicationPolicy::Off => "off".into(),
             ReplicationPolicy::Ring { interval_iters } => format!("ring:{interval_iters}"),
+            ReplicationPolicy::Stream { bandwidth_gbps, tier } => {
+                format!("stream:{bandwidth_gbps}:{}", tier.label())
+            }
         }
     }
 
@@ -208,13 +251,31 @@ impl ReplicationPolicy {
                 };
                 Some(ReplicationPolicy::Ring { interval_iters })
             }
+            "stream" => {
+                // the remainder is `G` or `G:tier` — re-split on the
+                // second colon
+                let (bandwidth_gbps, tier) = match param {
+                    None => (DEFAULT_STREAM_GBPS, KvTier::Host),
+                    Some(p) => {
+                        let (gbps, tier) = split_param(p);
+                        let bandwidth_gbps =
+                            gbps.parse::<f64>().ok().filter(|g| g.is_finite() && *g > 0.0)?;
+                        let tier = match tier {
+                            None => KvTier::Host,
+                            Some(t) => KvTier::parse(t)?,
+                        };
+                        (bandwidth_gbps, tier)
+                    }
+                };
+                Some(ReplicationPolicy::Stream { bandwidth_gbps, tier })
+            }
             _ => None,
         }
     }
 
     /// Is background replication active at all?
     pub fn is_on(&self) -> bool {
-        matches!(self, ReplicationPolicy::Ring { .. })
+        !matches!(self, ReplicationPolicy::Off)
     }
 }
 
@@ -360,12 +421,27 @@ mod tests {
         );
         assert_eq!(spec.label(), "rr+spare-pool:2+ring:8");
 
+        let spec = PolicySpec::parse("rr+donor-splice+stream").unwrap();
+        assert_eq!(
+            spec.replication,
+            ReplicationPolicy::Stream { bandwidth_gbps: DEFAULT_STREAM_GBPS, tier: KvTier::Host }
+        );
+        assert_eq!(spec.label(), "rr+donor-splice+stream:8:host");
+        let spec = PolicySpec::parse("rr+donor-splice+stream:4").unwrap();
+        assert_eq!(
+            spec.replication,
+            ReplicationPolicy::Stream { bandwidth_gbps: 4.0, tier: KvTier::Host }
+        );
+
         for label in [
             "ll+donor-splice+ring:4",
             "p2c+checkpoint-restore:45+off",
             "rr+spare-pool:3+off",
             "p2c+full-reinit+ring:16",
             "ll+checkpoint-restore:12.5+ring:8",
+            "rr+donor-splice+stream:8:host",
+            "ll+full-reinit+stream:1.5:remote",
+            "p2c+spare-pool:2+stream:16:host",
         ] {
             let spec = PolicySpec::parse(label).unwrap_or_else(|| panic!("parse {label}"));
             assert_eq!(spec.label(), label, "label must be a parse fixed point");
@@ -390,6 +466,11 @@ mod tests {
             "rr+full-reinit+ring:0",
             "rr+full-reinit:1+off",
             "rr+full-reinit+off:1",
+            "rr+donor-splice+stream:0",
+            "rr+donor-splice+stream:-2:host",
+            "rr+donor-splice+stream:nan:host",
+            "rr+donor-splice+stream:8:disk",
+            "rr+donor-splice+stream:8:host:extra",
         ] {
             assert_eq!(PolicySpec::parse(bad), None, "must reject '{bad}'");
         }
@@ -422,6 +503,9 @@ mod tests {
         assert_eq!(RecoveryPolicy::SparePool { spares: 3 }.initial_spares(), 3);
         assert_eq!(RecoveryPolicy::DonorSplice.initial_spares(), 0);
         assert!(ReplicationPolicy::Ring { interval_iters: 8 }.is_on());
+        assert!(
+            ReplicationPolicy::Stream { bandwidth_gbps: 8.0, tier: KvTier::Host }.is_on()
+        );
         assert!(!ReplicationPolicy::Off.is_on());
     }
 }

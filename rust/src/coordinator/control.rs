@@ -101,8 +101,15 @@ pub enum Event {
     /// One pipeline pass finished traversing the stages. Decode passes
     /// drive the background-replication cadence.
     PassCompleted { instance: usize, decode: bool },
+    /// A disaggregated prefill finished and its KV handoff completed
+    /// transit through the KV transport ([`crate::kvtier`]): `req` now
+    /// needs a decode-pool placement. Only reported on disaggregated
+    /// cluster shapes ([`ClusterConfig::is_disaggregated`]).
+    PrefillCompleted { req: u64 },
     /// The substrate finished replicating `req`'s context up to `tokens`
-    /// to its ring targets (the watermark that survives a failover).
+    /// to its ring targets — or, under [`ReplicationPolicy::Stream`],
+    /// streaming it to the host/remote tier (the watermark that survives
+    /// a failover).
     ReplicaSynced { req: u64, tokens: u32 },
     /// The membership layer declared `node` dead (heartbeat timeout).
     HeartbeatMissed { node: NodeId },
@@ -141,6 +148,7 @@ impl Event {
             Event::RequestDisplaced { .. } => "request_displaced",
             Event::RequestCompleted { .. } => "request_completed",
             Event::PassCompleted { .. } => "pass_completed",
+            Event::PrefillCompleted { .. } => "prefill_completed",
             Event::ReplicaSynced { .. } => "replica_synced",
             Event::HeartbeatMissed { .. } => "heartbeat_missed",
             Event::RecoveryElapsed { .. } => "recovery_elapsed",
@@ -176,6 +184,15 @@ pub enum ResetMode {
     /// — checkpoint-restore displacement, where the context lives in the
     /// failed instance's checkpoint, not on the survivors.
     Recompute,
+    /// Stream-replication displacement: progress rolls back to the
+    /// per-request stream watermark and the context up to it is
+    /// *replayed* from the host/remote tier over the KV transport
+    /// instead of recomputed ([`crate::kvtier`]). Requests with an empty
+    /// watermark degrade to [`ResetMode::Recompute`] semantics.
+    /// `resume_tokens` is the instance-total watermark at eviction time
+    /// (advisory telemetry; the substrate replays per-request
+    /// watermarks).
+    Replay { resume_tokens: u32 },
 }
 
 /// A deadline the substrate must schedule; when it fires, feed
@@ -292,6 +309,11 @@ pub struct ControlPlane {
     /// [`Event::ReplicaSynced`]), indexed by id — advisory bookkeeping
     /// for drivers.
     synced: Vec<u32>,
+    /// Disaggregated shapes only: whether each request has completed its
+    /// prefill + KV handoff (from [`Event::PrefillCompleted`]), indexed
+    /// by id. Unprefilled requests route over the prefill pool,
+    /// prefilled ones over the decode pool.
+    prefilled: Vec<bool>,
     /// In-flight recovery per instance.
     pub(crate) pending: Vec<Option<PendingFailure>>,
     /// Hot standbys currently available (spare-pool recovery; 0 under
@@ -320,6 +342,7 @@ impl ControlPlane {
             assigned: Vec::new(),
             iters: vec![0; n],
             synced: Vec::new(),
+            prefilled: Vec::new(),
             pending: vec![None; n],
             spares: serving.policy.recovery.initial_spares(),
         }
@@ -334,6 +357,9 @@ impl ControlPlane {
         }
         if self.synced.len() < n {
             self.synced.resize(n, 0);
+        }
+        if self.cluster.is_disaggregated() && self.prefilled.len() < n {
+            self.prefilled.resize(n, false);
         }
     }
 
@@ -370,6 +396,17 @@ impl ControlPlane {
             }
             Event::PassCompleted { instance, decode } => {
                 self.pass_completed(instance, decode, out)
+            }
+            Event::PrefillCompleted { req } => {
+                let idx = self.req_index(req);
+                if idx >= self.prefilled.len() {
+                    self.prefilled.resize(idx + 1, false);
+                }
+                self.prefilled[idx] = true;
+                // decode-pool admission balances like a displaced
+                // backlog: the handoff already serialized on the
+                // transport, don't also dogpile one decode instance
+                self.route(req, true, out)
             }
             Event::ReplicaSynced { req, tokens } => self.set_synced(req, tokens),
             Event::HeartbeatMissed { node } => self.node_failed(now_s, node, out),
@@ -435,6 +472,28 @@ impl ControlPlane {
             .unwrap_or(0)
     }
 
+    /// Whether `req` completed its prefill + KV handoff (disaggregated
+    /// shapes; always `false` on colocated clusters).
+    pub fn is_prefilled(&self, req: u64) -> bool {
+        usize::try_from(req)
+            .ok()
+            .and_then(|idx| self.prefilled.get(idx))
+            .copied()
+            .unwrap_or(false)
+    }
+
+    /// Sum of the stream watermarks of every request currently placed on
+    /// `instance` — the `resume_tokens` telemetry carried by
+    /// [`ResetMode::Replay`]. O(requests), but only walked on the rare
+    /// eviction path.
+    pub(crate) fn instance_synced_total(&self, instance: usize) -> u32 {
+        self.assigned
+            .iter()
+            .zip(self.synced.iter())
+            .filter(|(&a, _)| a == instance)
+            .fold(0u32, |acc, (_, &s)| acc.saturating_add(s))
+    }
+
     // ------------------------------------------------------- dense tables
 
     /// State changes flow through here so the router's incremental view
@@ -471,6 +530,23 @@ impl ControlPlane {
 
     // -------------------------------------------------------------- routing
 
+    /// The `views` sub-range `req` may be routed over. Colocated shapes
+    /// route over everything; disaggregated shapes route unprefilled
+    /// requests over the prefill pool and prefilled ones over the decode
+    /// pool (`ClusterConfig::{prefill_pool, decode_pool}`).
+    fn pool_bounds(&self, idx: usize) -> (usize, usize) {
+        let n = self.cluster.n_instances;
+        let p = self.cluster.prefill_instances;
+        if p == 0 || p >= n {
+            return (0, n);
+        }
+        if self.prefilled.get(idx).copied().unwrap_or(false) {
+            (p, n)
+        } else {
+            (0, p)
+        }
+    }
+
     fn route(&mut self, req: u64, least_loaded: bool, out: &mut Vec<Action>) {
         let idx = self.req_index(req);
         if idx >= self.assigned.len() {
@@ -482,14 +558,17 @@ impl ControlPlane {
         }
         // arrivals follow the configured route policy; a displaced
         // backlog always re-dispatches least-loaded so it cannot dogpile
+        let (lo, hi) = self.pool_bounds(idx);
+        let pool = &self.views[lo..hi];
         let pick = if least_loaded {
-            self.router.pick_least_loaded(&self.views)
+            self.router.pick_least_loaded(pool)
         } else {
-            self.router.pick(&self.views)
+            self.router.pick(pool)
         };
         // total outage: park at a deterministic DOWN instance's queue; it
-        // serves on rejoin (only reachable when no pipeline serves).
-        let instance = pick.unwrap_or(idx % self.cluster.n_instances);
+        // serves on rejoin (only reachable when no pipeline in the pool
+        // serves).
+        let instance = pick.unwrap_or(lo + idx % (hi - lo));
         self.assigned[idx] = instance;
         self.views[instance].load += 1;
         out.push(Action::Dispatch { req, instance });
@@ -502,10 +581,19 @@ impl ControlPlane {
             return;
         }
         self.iters[instance] += 1;
-        if let ReplicationPolicy::Ring { interval_iters } = self.serving.policy.replication {
-            if self.iters[instance] % interval_iters as u64 == 0 {
-                out.push(Action::FlushReplicas { instance });
+        let interval = match self.serving.policy.replication {
+            ReplicationPolicy::Off => return,
+            ReplicationPolicy::Ring { interval_iters } => interval_iters as u64,
+            // stream flushes ride the same iteration cadence as the
+            // ring; what differs is the substrate's flush executor
+            // (ring targets vs the tiered transport) and how long the
+            // transfer takes to raise the watermark
+            ReplicationPolicy::Stream { .. } => {
+                crate::config::policy::DEFAULT_RING_INTERVAL_ITERS as u64
             }
+        };
+        if self.iters[instance] % interval == 0 {
+            out.push(Action::FlushReplicas { instance });
         }
     }
 }
@@ -609,6 +697,54 @@ mod tests {
         // prefill passes never drive the cadence
         let a = cp.handle(0.0, Event::PassCompleted { instance: 0, decode: false });
         assert!(a.is_empty());
+    }
+
+    #[test]
+    fn stream_cadence_fires_like_ring() {
+        use crate::config::{KvTier, ReplicationPolicy};
+        let spec = PolicySpec {
+            replication: ReplicationPolicy::Stream { bandwidth_gbps: 8.0, tier: KvTier::Host },
+            ..PolicySpec::kevlarflow()
+        };
+        let mut cp = cp(ClusterConfig::paper_8node(), spec);
+        let every = crate::config::policy::DEFAULT_RING_INTERVAL_ITERS as u64;
+        let mut flushes = 0;
+        for _ in 0..(2 * every) {
+            let a = cp.handle(0.0, Event::PassCompleted { instance: 0, decode: true });
+            for act in &a {
+                assert!(matches!(act, Action::FlushReplicas { instance: 0 }));
+                flushes += 1;
+            }
+        }
+        assert_eq!(flushes, 2, "stream rides the ring cadence");
+        assert!(cp.handle(0.0, Event::PassCompleted { instance: 0, decode: false }).is_empty());
+    }
+
+    #[test]
+    fn disaggregated_shapes_route_over_the_two_pools() {
+        let mut cluster = ClusterConfig::paper_16node(); // 4 instances
+        cluster.prefill_instances = 1;
+        let mut cp = cp(cluster, PolicySpec::kevlarflow());
+        // arrivals (unprefilled) all land on the prefill pool
+        for req in 0..3u64 {
+            let a = cp.handle(req as f64, Event::RequestArrived { req });
+            assert_eq!(a, vec![Action::Dispatch { req, instance: 0 }]);
+            assert!(!cp.is_prefilled(req));
+        }
+        // the handoff completes: decode placement over instances 1..4
+        let a = cp.handle(5.0, Event::PrefillCompleted { req: 0 });
+        assert_eq!(a, vec![Action::Dispatch { req: 0, instance: 1 }]);
+        assert!(cp.is_prefilled(0));
+        assert_eq!(cp.load(0), 2, "prefill load released on handoff");
+        // a displaced prefilled request stays in the decode pool
+        let a = cp.handle(6.0, Event::RequestDisplaced { req: 0 });
+        assert!(matches!(a[0], Action::Dispatch { req: 0, instance } if instance >= 1));
+        // decode-pool outage parks inside the decode pool
+        for i in 1..4 {
+            cp.handle(10.0, Event::HeartbeatMissed { node: NodeId::new(i, 0) });
+        }
+        let a = cp.handle(11.0, Event::PrefillCompleted { req: 1 });
+        assert!(matches!(a[0], Action::Dispatch { req: 1, instance } if instance >= 1));
     }
 
     #[test]

@@ -33,7 +33,7 @@
 //!   full re-init. Displaced requests keep their emitted tokens and
 //!   recompute their context on survivors ([`ResetMode::Recompute`]).
 
-use crate::config::{NodeId, RecoveryPolicy};
+use crate::config::{NodeId, RecoveryPolicy, ReplicationPolicy};
 use crate::coordinator::recovery::{RecoveryPlan, RecoveryRecord};
 use crate::coordinator::reroute::{select_donor, PipelineState};
 
@@ -59,6 +59,21 @@ pub(crate) struct PendingFailure {
 }
 
 impl ControlPlane {
+    /// The displacement reset when an instance's device KV is lost
+    /// (re-init, spare swap, checkpoint restore, or post-splice resume).
+    /// Under [`ReplicationPolicy::Stream`] the context survives in the
+    /// host/remote tier, so displaced requests *replay* from their
+    /// stream watermark instead of restarting or recomputing
+    /// ([`ResetMode::Replay`]); any other replication policy keeps the
+    /// strategy's native `fallback`.
+    fn kv_lost_reset(&self, instance: usize, fallback: ResetMode) -> ResetMode {
+        if matches!(self.serving.policy.replication, ReplicationPolicy::Stream { .. }) {
+            ResetMode::Replay { resume_tokens: self.instance_synced_total(instance) }
+        } else {
+            fallback
+        }
+    }
+
     // ------------------------------------------------------------ failures
 
     pub(crate) fn node_failed(&mut self, now_s: f64, node: NodeId, out: &mut Vec<Action>) {
@@ -130,7 +145,7 @@ impl ControlPlane {
         out.push(Action::Evict {
             instance,
             scope: EvictScope::All,
-            reset: ResetMode::Restart,
+            reset: self.kv_lost_reset(instance, ResetMode::Restart),
         });
         out.push(Action::StartTimer {
             after_s: self.serving.baseline_mttr_s,
@@ -254,7 +269,7 @@ impl ControlPlane {
         out.push(Action::Evict {
             instance,
             scope: EvictScope::All,
-            reset: ResetMode::Restart,
+            reset: self.kv_lost_reset(instance, ResetMode::Restart),
         });
         out.push(Action::StartTimer {
             after_s: swap_s,
@@ -298,7 +313,7 @@ impl ControlPlane {
         out.push(Action::Evict {
             instance,
             scope: EvictScope::All,
-            reset: ResetMode::Recompute,
+            reset: self.kv_lost_reset(instance, ResetMode::Recompute),
         });
         out.push(Action::StartTimer {
             after_s: restore_s,
@@ -346,7 +361,18 @@ impl ControlPlane {
             phases_s,
         });
         self.planner.replan(&self.cluster, &self.health, &[]);
-        out.push(Action::PromoteReplicas { instance, donor });
+        if matches!(self.serving.policy.replication, ReplicationPolicy::Stream { .. }) {
+            // no device replicas to promote — the context lives in the
+            // stream tier: displace the held requests so the substrate
+            // replays each from its watermark onto the re-formed pipeline
+            out.push(Action::Evict {
+                instance,
+                scope: EvictScope::All,
+                reset: ResetMode::Replay { resume_tokens: self.instance_synced_total(instance) },
+            });
+        } else {
+            out.push(Action::PromoteReplicas { instance, donor });
+        }
     }
 
     pub(crate) fn node_provisioned(&mut self, instance: usize, out: &mut Vec<Action>) {
@@ -569,6 +595,45 @@ mod tests {
                 "{policy}: straggler response mismatch: {a:?}"
             );
             assert_eq!(cp.state(0).serving(), !expect_quarantine, "{policy}");
+        }
+    }
+
+    #[test]
+    fn stream_replication_switches_displacement_to_replay() {
+        let replay = |a: &[Action], instance: usize| {
+            a.iter().any(|x| {
+                matches!(
+                    x,
+                    Action::Evict { instance: i, scope: EvictScope::All, reset: ResetMode::Replay { .. } }
+                    if *i == instance
+                )
+            })
+        };
+        // donor splice: failover choreography unchanged, but the resume
+        // replays from the stream instead of promoting device replicas
+        let mut c = cp(ClusterConfig::paper_16node(), "rr+donor-splice+stream:8:host");
+        let a = c.handle(124.0, Event::HeartbeatMissed { node: NodeId::new(0, 2) });
+        assert!(a.contains(&Action::Evict {
+            instance: 0,
+            scope: EvictScope::Queued,
+            reset: ResetMode::KeepProgress,
+        }));
+        assert!(a.iter().any(|x| matches!(x, Action::SpliceDonor { .. })));
+        let a = c.handle(155.0, Event::RecoveryElapsed { instance: 0 });
+        assert!(!a.iter().any(|x| matches!(x, Action::PromoteReplicas { .. })));
+        assert!(replay(&a, 0), "stream resume must evict-with-replay: {a:?}");
+        assert_eq!(c.recovery().completed.len(), 1);
+
+        // spare swap / full re-init / checkpoint restore: the native
+        // Restart/Recompute resets become Replay under stream
+        for policy in [
+            "rr+spare-pool:1+stream:8:host",
+            "rr+full-reinit+stream:8:host",
+            "rr+checkpoint-restore:60+stream:8:remote",
+        ] {
+            let mut c = cp(ClusterConfig::paper_16node(), policy);
+            let a = c.handle(124.0, Event::HeartbeatMissed { node: NodeId::new(0, 2) });
+            assert!(replay(&a, 0), "{policy}: {a:?}");
         }
     }
 

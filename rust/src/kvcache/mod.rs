@@ -60,6 +60,18 @@ pub struct Evictions {
 }
 
 /// Per-node paged KV cache accounting.
+///
+/// ## Determinism audit (the HashMap-order rule)
+///
+/// `seqs` and `replicas` stay `HashMap` for O(1) lookups on the hot
+/// decode path, which is only sound because no consumer ever observes
+/// their iteration order: every path that *iterates* them either sorts
+/// first (`grow_primary`'s pressure victims, [`NodeKv::replica_ids`])
+/// or is order-independent (the sums in [`NodeKv::check_invariants`]).
+/// The tiered KV transport ([`crate::kvtier`]) keys its own state on
+/// `BTreeMap` outright; flush-order byte-identity across runs is pinned
+/// by `rust/tests/kv_stream_props.rs`. Any new iteration over these
+/// maps must go through a sorted view.
 #[derive(Debug, Clone)]
 pub struct NodeKv {
     pub node: NodeId,
@@ -108,8 +120,12 @@ impl NodeKv {
     pub fn replica(&self, id: u64) -> Option<&ReplicaKv> {
         self.replicas.get(&id)
     }
-    pub fn replica_ids(&self) -> impl Iterator<Item = u64> + '_ {
-        self.replicas.keys().copied()
+    /// Resident replica ids, ascending — a sorted view, never raw
+    /// `HashMap` order (see the struct docs' determinism audit).
+    pub fn replica_ids(&self) -> impl Iterator<Item = u64> {
+        let mut ids: Vec<u64> = self.replicas.keys().copied().collect();
+        ids.sort_unstable();
+        ids.into_iter()
     }
 
     /// Grow (or create) a sequence's primary KV to `tokens`. Drops replica
@@ -323,6 +339,17 @@ mod tests {
         // continues growing as a normal primary
         kv.grow_primary(7, 50).unwrap();
         assert_eq!(kv.primary_blocks(), 4);
+    }
+
+    #[test]
+    fn replica_ids_are_a_sorted_view() {
+        let mut kv = node();
+        let owner = NodeId::new(1, 0);
+        for id in [9, 3, 7, 1] {
+            assert!(kv.write_replica(id, owner, 16, 0.0));
+        }
+        let ids: Vec<u64> = kv.replica_ids().collect();
+        assert_eq!(ids, vec![1, 3, 7, 9], "must never expose HashMap order");
     }
 
     #[test]

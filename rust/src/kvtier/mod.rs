@@ -1,0 +1,335 @@
+//! Tiered KV transport: the device / host / remote storage hierarchy
+//! behind `ReplicationPolicy::Stream` and the disaggregated
+//! prefill→decode handoff (DESIGN.md §9).
+//!
+//! The **device** tier is the per-node paged KV accounted by
+//! [`crate::kvcache`] — primaries and ring replicas live there and are
+//! lost with the node. This module models the tiers *below* it
+//! ([`KvTier::Host`], [`KvTier::Remote`]): each has an explicit
+//! capacity (tokens), a transfer channel with finite bandwidth, and
+//! per-request occupancy. The simulator drives it with first-class
+//! events — a flush/replay/handoff *starts* by reserving the channel
+//! here ([`KvTierStore::begin_transfer`]) and *completes* when the
+//! matching `KvFlushDone`/`KvReplayDone`/`KvHandoffDone` event pops off
+//! the [`crate::sim::EventQueue`].
+//!
+//! ## Determinism contract
+//!
+//! Everything the store iterates is ordered: entries are
+//! `BTreeMap`-keyed by request id and capacity eviction scans victims in
+//! `(touched_s, req)` order under `f64::total_cmp` (the PR 4
+//! HashMap-order rule — no path may depend on hash-map iteration
+//! order). Channel serialization is pure arithmetic over `busy_until_s`,
+//! so transfer completion times — and therefore every downstream event —
+//! are identical under both queue backends and any `--jobs` count.
+//!
+//! ## Transfer model
+//!
+//! A transfer of `tokens` costs
+//! `tokens · kv_token_bytes · 8 / (bandwidth_gbps · 1e9)` seconds and
+//! the per-tier channel is half-duplex FIFO: a transfer begins at
+//! `max(now, busy_until)` and advances `busy_until` to its completion.
+//! Flush backlog therefore *lags the watermark* — at low bandwidth a
+//! failure finds less streamed context, which is exactly the
+//! recovery-latency vs bandwidth frontier the sweep measures.
+
+use std::collections::BTreeMap;
+
+use crate::config::KvTier;
+
+/// Host-tier capacity in tokens (~CPU DRAM of a serving node: 2M tokens
+/// × ~200 KB/token ≈ 400 GB).
+pub const HOST_CAPACITY_TOKENS: u64 = 1 << 21;
+/// Remote-tier capacity in tokens (disaggregated storage — effectively
+/// unbounded relative to a run).
+pub const REMOTE_CAPACITY_TOKENS: u64 = 1 << 27;
+
+/// One request's footprint in a tier.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TierEntry {
+    /// Tokens of this request's KV the tier holds (the stream
+    /// watermark: recovery can replay up to here).
+    pub tokens: u32,
+    /// Last touch time — the eviction clock.
+    pub touched_s: f64,
+    /// A flush transfer for this request is in flight (coalescing
+    /// guard: at most one outstanding flush per request).
+    pub inflight: bool,
+}
+
+/// One storage tier: capacity, occupancy, and a serialized transfer
+/// channel.
+#[derive(Debug, Clone)]
+struct TierState {
+    capacity_tokens: u64,
+    busy_until_s: f64,
+    /// Per-request entries, ordered by request id (deterministic
+    /// iteration for victim scans and introspection).
+    entries: BTreeMap<u64, TierEntry>,
+    occupancy_tokens: u64,
+    peak_occupancy_tokens: u64,
+    bytes_streamed: u64,
+}
+
+impl TierState {
+    fn new(capacity_tokens: u64) -> Self {
+        Self {
+            capacity_tokens,
+            busy_until_s: 0.0,
+            entries: BTreeMap::new(),
+            occupancy_tokens: 0,
+            peak_occupancy_tokens: 0,
+            bytes_streamed: 0,
+        }
+    }
+}
+
+/// The tiered KV store the simulator owns: one [`TierState`] per
+/// non-device tier plus the per-token transfer cost shared by all
+/// channels.
+#[derive(Debug, Clone)]
+pub struct KvTierStore {
+    kv_token_bytes: f64,
+    host: TierState,
+    remote: TierState,
+}
+
+impl KvTierStore {
+    pub fn new(kv_token_bytes: f64) -> Self {
+        assert!(
+            kv_token_bytes.is_finite() && kv_token_bytes > 0.0,
+            "degenerate per-token KV size"
+        );
+        Self {
+            kv_token_bytes,
+            host: TierState::new(HOST_CAPACITY_TOKENS),
+            remote: TierState::new(REMOTE_CAPACITY_TOKENS),
+        }
+    }
+
+    fn tier(&self, tier: KvTier) -> &TierState {
+        match tier {
+            KvTier::Host => &self.host,
+            KvTier::Remote => &self.remote,
+        }
+    }
+
+    fn tier_mut(&mut self, tier: KvTier) -> &mut TierState {
+        match tier {
+            KvTier::Host => &mut self.host,
+            KvTier::Remote => &mut self.remote,
+        }
+    }
+
+    /// Wire time (s) of moving `tokens` over a `bandwidth_gbps` channel.
+    pub fn transfer_s(&self, tokens: u32, bandwidth_gbps: f64) -> f64 {
+        debug_assert!(bandwidth_gbps > 0.0);
+        tokens as f64 * self.kv_token_bytes * 8.0 / (bandwidth_gbps * 1e9)
+    }
+
+    /// Reserve the tier's channel for a `tokens`-sized transfer starting
+    /// no earlier than `now_s`; returns the completion time (the event
+    /// timestamp) and advances the channel's `busy_until_s` to it.
+    pub fn begin_transfer(
+        &mut self,
+        tier: KvTier,
+        now_s: f64,
+        tokens: u32,
+        bandwidth_gbps: f64,
+    ) -> f64 {
+        let dur = self.transfer_s(tokens, bandwidth_gbps);
+        let t = self.tier_mut(tier);
+        let start = if t.busy_until_s > now_s { t.busy_until_s } else { now_s };
+        t.busy_until_s = start + dur;
+        t.busy_until_s
+    }
+
+    /// Mark a flush transfer for `req` as in flight (the coalescing
+    /// guard). Returns `false` — and reserves nothing — if one already
+    /// is.
+    pub fn try_start_flush(&mut self, tier: KvTier, req: u64) -> bool {
+        let e = self.tier_mut(tier).entries.entry(req).or_default();
+        if e.inflight {
+            return false;
+        }
+        e.inflight = true;
+        true
+    }
+
+    /// Commit a completed flush: raise `req`'s watermark to `tokens`
+    /// (monotone), account the moved bytes, clear the inflight guard,
+    /// and evict colder entries in `(touched_s, req)` order if the tier
+    /// overflowed. Returns the evicted request ids (deterministic
+    /// order); their streamed context is gone.
+    pub fn commit_flush(&mut self, tier: KvTier, req: u64, tokens: u32, now_s: f64) -> Vec<u64> {
+        let bytes_per_token = self.kv_token_bytes;
+        let t = self.tier_mut(tier);
+        let e = t.entries.entry(req).or_default();
+        e.inflight = false;
+        let delta = tokens.saturating_sub(e.tokens);
+        if delta == 0 {
+            return Vec::new();
+        }
+        e.tokens = tokens;
+        e.touched_s = now_s;
+        t.occupancy_tokens += delta as u64;
+        t.bytes_streamed += (delta as f64 * bytes_per_token) as u64;
+
+        let mut evicted = Vec::new();
+        while t.occupancy_tokens > t.capacity_tokens {
+            // coldest first: (touched_s, req) under the total order —
+            // never the request that just flushed
+            let victim = t
+                .entries
+                .iter()
+                .filter(|&(&id, _)| id != req)
+                .min_by(|a, b| {
+                    a.1.touched_s.total_cmp(&b.1.touched_s).then(a.0.cmp(b.0))
+                })
+                .map(|(&id, _)| id);
+            let Some(id) = victim else { break };
+            let gone = t.entries.remove(&id).expect("victim exists");
+            t.occupancy_tokens -= gone.tokens as u64;
+            evicted.push(id);
+        }
+        if t.occupancy_tokens > t.peak_occupancy_tokens {
+            t.peak_occupancy_tokens = t.occupancy_tokens;
+        }
+        evicted
+    }
+
+    /// The stream watermark of `req` in `tier` (0 when absent).
+    pub fn tokens(&self, tier: KvTier, req: u64) -> u32 {
+        self.tier(tier).entries.get(&req).map_or(0, |e| e.tokens)
+    }
+
+    /// Drop `req`'s entry (request completed / abandoned); returns the
+    /// freed tokens.
+    pub fn drop_entry(&mut self, tier: KvTier, req: u64) -> u32 {
+        let t = self.tier_mut(tier);
+        match t.entries.remove(&req) {
+            Some(e) => {
+                t.occupancy_tokens -= e.tokens as u64;
+                e.tokens
+            }
+            None => 0,
+        }
+    }
+
+    pub fn occupancy_tokens(&self, tier: KvTier) -> u64 {
+        self.tier(tier).occupancy_tokens
+    }
+
+    pub fn peak_occupancy_tokens(&self, tier: KvTier) -> u64 {
+        self.tier(tier).peak_occupancy_tokens
+    }
+
+    pub fn bytes_streamed(&self, tier: KvTier) -> u64 {
+        self.tier(tier).bytes_streamed
+    }
+
+    /// Total streamed bytes over every tier.
+    pub fn total_bytes_streamed(&self) -> u64 {
+        self.host.bytes_streamed + self.remote.bytes_streamed
+    }
+
+    /// Entries of a tier in request-id order (the deterministic view
+    /// audits and tests iterate).
+    pub fn entries(&self, tier: KvTier) -> impl Iterator<Item = (u64, &TierEntry)> {
+        self.tier(tier).entries.iter().map(|(&id, e)| (id, e))
+    }
+
+    /// Internal consistency: occupancy equals the entry sum and never
+    /// exceeds the capacity by more than one uncommitted delta.
+    pub fn check_invariants(&self) {
+        for tier in [KvTier::Host, KvTier::Remote] {
+            let t = self.tier(tier);
+            let sum: u64 = t.entries.values().map(|e| e.tokens as u64).sum();
+            assert_eq!(sum, t.occupancy_tokens, "{tier:?}: occupancy drifted");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_with_tokens_and_bandwidth() {
+        let s = KvTierStore::new(204_800.0);
+        // 1 token = 204800 B = 1.6384 Mbit; at 8 Gbps that is 204.8 µs
+        let one = s.transfer_s(1, 8.0);
+        assert!((one - 204.8e-6).abs() < 1e-12, "{one}");
+        assert_eq!(s.transfer_s(10, 8.0), one * 10.0);
+        // halving bandwidth exactly doubles the wire time (monotone)
+        assert_eq!(s.transfer_s(10, 4.0), s.transfer_s(10, 8.0) * 2.0);
+    }
+
+    #[test]
+    fn channel_serializes_transfers() {
+        let mut s = KvTierStore::new(204_800.0);
+        let d1 = s.begin_transfer(KvTier::Host, 0.0, 100, 8.0);
+        let d2 = s.begin_transfer(KvTier::Host, 0.0, 100, 8.0);
+        assert!(d2 > d1, "second transfer must queue behind the first");
+        assert!((d2 - 2.0 * d1).abs() < 1e-12);
+        // an idle channel starts at `now`
+        let d3 = s.begin_transfer(KvTier::Host, d2 + 5.0, 100, 8.0);
+        assert!((d3 - (d2 + 5.0 + d1)).abs() < 1e-9);
+        // tiers have independent channels
+        let r = s.begin_transfer(KvTier::Remote, 0.0, 100, 8.0);
+        assert!((r - d1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn watermarks_are_monotone_and_bytes_account_deltas() {
+        let mut s = KvTierStore::new(100.0);
+        assert!(s.try_start_flush(KvTier::Host, 7));
+        assert!(!s.try_start_flush(KvTier::Host, 7), "coalescing guard");
+        assert!(s.commit_flush(KvTier::Host, 7, 50, 1.0).is_empty());
+        assert_eq!(s.tokens(KvTier::Host, 7), 50);
+        assert!(s.try_start_flush(KvTier::Host, 7));
+        s.commit_flush(KvTier::Host, 7, 80, 2.0);
+        assert_eq!(s.tokens(KvTier::Host, 7), 80);
+        // a stale commit (lower watermark) is a no-op
+        assert!(s.try_start_flush(KvTier::Host, 7));
+        s.commit_flush(KvTier::Host, 7, 60, 3.0);
+        assert_eq!(s.tokens(KvTier::Host, 7), 80);
+        // bytes = delta tokens × per-token size
+        assert_eq!(s.bytes_streamed(KvTier::Host), 80 * 100);
+        assert_eq!(s.occupancy_tokens(KvTier::Host), 80);
+        s.check_invariants();
+        assert_eq!(s.drop_entry(KvTier::Host, 7), 80);
+        assert_eq!(s.occupancy_tokens(KvTier::Host), 0);
+        assert_eq!(s.peak_occupancy_tokens(KvTier::Host), 80);
+    }
+
+    #[test]
+    fn eviction_is_coldest_first_and_deterministic() {
+        let mut s = KvTierStore::new(1.0);
+        s.host.capacity_tokens = 100;
+        for (req, tokens, t) in [(3u64, 40u32, 1.0), (1, 40, 2.0), (2, 10, 1.0)] {
+            s.try_start_flush(KvTier::Host, req);
+            assert!(s.commit_flush(KvTier::Host, req, tokens, t).is_empty());
+        }
+        // req 9 pushes occupancy to 130: evict (1.0, 2) then (1.0, 3) —
+        // same touch time breaks ties on the request id
+        s.try_start_flush(KvTier::Host, 9);
+        let evicted = s.commit_flush(KvTier::Host, 9, 40, 3.0);
+        assert_eq!(evicted, vec![2, 3]);
+        assert_eq!(s.tokens(KvTier::Host, 2), 0);
+        assert_eq!(s.tokens(KvTier::Host, 1), 40);
+        assert_eq!(s.occupancy_tokens(KvTier::Host), 80);
+        s.check_invariants();
+    }
+
+    #[test]
+    fn entries_iterate_in_request_order() {
+        let mut s = KvTierStore::new(1.0);
+        for req in [9u64, 2, 5] {
+            s.try_start_flush(KvTier::Host, req);
+            s.commit_flush(KvTier::Host, req, 1, 0.0);
+        }
+        let ids: Vec<u64> = s.entries(KvTier::Host).map(|(id, _)| id).collect();
+        assert_eq!(ids, vec![2, 5, 9]);
+    }
+}

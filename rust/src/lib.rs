@@ -56,6 +56,7 @@ pub mod coordinator;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod kvcache;
+pub mod kvtier;
 pub mod metrics;
 pub mod obs;
 #[cfg(feature = "pjrt")]
@@ -67,7 +68,7 @@ pub mod workload;
 pub mod bench;
 
 pub use config::{
-    ClusterConfig, PolicySpec, RecoveryPolicy, ReplicationPolicy, RoutePolicy, ServingConfig,
-    SimTimingConfig,
+    ClusterConfig, KvTier, PolicySpec, RecoveryPolicy, ReplicationPolicy, RoutePolicy,
+    ServingConfig, SimTimingConfig,
 };
 pub use coordinator::ControlPlane;

@@ -75,7 +75,9 @@ USAGE:
 Policy SPECs are preset names (standard, kevlarflow) or
 route+recovery+replication triples: route rr|ll|p2c, recovery
 full-reinit|donor-splice|spare-pool[:N]|checkpoint-restore[:S],
-replication off|ring[:N] — e.g. rr+spare-pool:2+ring:8.
+replication off|ring[:N]|stream[:GBPS[:host|remote]] — e.g.
+rr+spare-pool:2+ring:8 or rr+donor-splice+stream:8:host (stream
+flushes KV to a transport tier; recovery replays the watermark).
 
 --queue selects the simulator's event-queue backend (default heap).
 The backends are proven result-identical; wheel is the throughput
@@ -208,7 +210,8 @@ fn parse_policy(spec: &str) -> Result<PolicySpec> {
     PolicySpec::parse(spec).ok_or_else(|| {
         anyhow::anyhow!(
             "unknown policy '{spec}' (preset standard|kevlarflow, or a \
-             route+recovery+replication triple like rr+spare-pool:2+ring:8)"
+             route+recovery+replication triple like rr+spare-pool:2+ring:8 \
+             or rr+donor-splice+stream:8:host)"
         )
     })
 }

@@ -816,6 +816,58 @@ impl Recorder {
         }
     }
 
+    /// Record one tiered-KV flush (or prefill→decode handoff) landing:
+    /// transfer duration into the flush histogram plus the streamed bytes
+    /// counter, both labeled by destination tier.
+    pub fn kv_flush(&mut self, now_s: f64, tier: &str, bytes: u64, dur_s: f64) {
+        self.advance(now_s);
+        let labels = LabelSet::empty().with("tier", tier);
+        self.cum.observe(
+            "kf_kv_flush_seconds",
+            "tiered-KV flush/handoff transfer durations, by destination tier",
+            &labels,
+            &latency_buckets_s(),
+            dur_s,
+        );
+        self.cum.counter(
+            "kf_kv_stream_bytes_total",
+            "KV bytes streamed into a tier (watermark deltas), by tier",
+            &labels,
+            bytes,
+        );
+    }
+
+    /// Record one watermark replay completing during recovery: transfer
+    /// duration plus the tokens restored without recompute.
+    pub fn kv_replay(&mut self, now_s: f64, tokens: u64, dur_s: f64) {
+        self.advance(now_s);
+        let none = LabelSet::empty();
+        self.cum.observe(
+            "kf_kv_replay_seconds",
+            "KV watermark-replay transfer durations on recovery",
+            &none,
+            &latency_buckets_s(),
+            dur_s,
+        );
+        self.cum.counter(
+            "kf_kv_replay_tokens_total",
+            "context tokens restored from the stream watermark instead of recompute",
+            &none,
+            tokens,
+        );
+    }
+
+    /// Record one tier's KV occupancy at a sampling tick.
+    pub fn sample_kv_tier(&mut self, now_s: f64, tier: &str, occupancy_tokens: u64) {
+        self.advance(now_s);
+        self.cum.gauge(
+            "kf_kv_tier_occupancy",
+            "tokens resident in a KV transport tier (last sample)",
+            &LabelSet::empty().with("tier", tier),
+            occupancy_tokens as f64,
+        );
+    }
+
     // ------------------------------------------------------------- export
 
     /// The full metrics document of this recorder: run totals plus the

@@ -216,6 +216,28 @@ pub fn perfetto_json(meta: &TraceMeta, res: &SimResult) -> Json {
         for s in 0..meta.n_stages {
             b.meta(pid, Some(s + 1), "thread_name", &format!("stage-{s}"));
         }
+        // the kv-transport track only exists for runs that moved tiered
+        // KV, so traces of off/ring runs keep their exact prior bytes
+        if !res.kv_slices.is_empty() {
+            b.meta(pid, Some(meta.n_stages + 1), "thread_name", "kv");
+        }
+    }
+
+    // tiered-KV transfers (stream flushes, watermark replays, prefill
+    // handoffs): duration slices on the dispatching pipeline's kv track
+    for s in &res.kv_slices {
+        let mut args = BTreeMap::new();
+        args.insert("tier".into(), Json::Str(s.tier.into()));
+        args.insert("req".into(), Json::Num(s.req as f64));
+        args.insert("tokens".into(), Json::Num(s.tokens as f64));
+        b.slice(
+            s.instance + 1,
+            meta.n_stages + 1,
+            &format!("{} ({})", s.kind, s.tier),
+            s.t0_s,
+            s.t1_s,
+            args,
+        );
     }
 
     // recovery choreography: duration slices on the failed pipeline's

@@ -205,6 +205,7 @@ impl FleetScenario {
             expected_winner: String::new(),
             n_instances: self.n_instances,
             n_stages: self.n_stages,
+            prefill_instances: 0,
             workload: self.workload,
             arrival_window_s: self.arrival_window_s,
             default_rps: self.default_rps,

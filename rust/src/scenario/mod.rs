@@ -97,6 +97,11 @@ pub struct Scenario {
     pub expected_winner: String,
     pub n_instances: usize,
     pub n_stages: usize,
+    /// Disaggregated serving: the first `prefill_instances` pipelines
+    /// form the prefill pool, the rest decode (0 = colocated, the
+    /// default — see [`ClusterConfig::prefill_instances`]). Prefill
+    /// output transits the tiered KV transport before decode admission.
+    pub prefill_instances: usize,
     pub workload: WorkloadSpec,
     /// Seconds of request arrivals (the run then drains).
     pub arrival_window_s: f64,
@@ -117,7 +122,9 @@ pub struct Scenario {
 impl Scenario {
     /// The cluster topology this scenario runs on.
     pub fn cluster(&self) -> ClusterConfig {
-        ClusterConfig::custom(self.n_instances, self.n_stages)
+        let mut c = ClusterConfig::custom(self.n_instances, self.n_stages);
+        c.prefill_instances = self.prefill_instances;
+        c
     }
 
     /// Lower the spec into a runnable [`ExperimentConfig`] at `rps` —
@@ -216,6 +223,12 @@ impl Scenario {
         if self.n_instances == 0 || self.n_stages == 0 {
             return bad("cluster shape must be at least 1x1".into());
         }
+        if self.prefill_instances >= self.n_instances && self.prefill_instances != 0 {
+            return bad(format!(
+                "prefill pool ({}) must leave at least one decode instance of {}",
+                self.prefill_instances, self.n_instances
+            ));
+        }
         if self.rps_grid.is_empty() || self.default_rps <= 0.0 {
             return bad("rps grid must be non-empty and default_rps positive".into());
         }
@@ -276,6 +289,11 @@ impl Scenario {
         let mut cluster = BTreeMap::new();
         cluster.insert("instances".into(), num(self.n_instances as f64));
         cluster.insert("stages".into(), num(self.n_stages as f64));
+        // omitted when zero: colocated specs (the whole registry)
+        // serialize byte-for-byte as before disaggregation existed
+        if self.prefill_instances > 0 {
+            cluster.insert("prefill".into(), num(self.prefill_instances as f64));
+        }
         m.insert("cluster".into(), Json::Obj(cluster));
         m.insert("workload".into(), workload_json(&self.workload));
         m.insert("arrival_window_s".into(), num(self.arrival_window_s));
@@ -310,6 +328,8 @@ impl Scenario {
             expected_winner: str_field(v, "expected_winner").unwrap_or_default(),
             n_instances: num_field(cluster, "instances")? as usize,
             n_stages: num_field(cluster, "stages")? as usize,
+            prefill_instances: cluster.get("prefill").and_then(Json::as_f64).unwrap_or(0.0)
+                as usize,
             workload: workload_from_json(field(v, "workload")?)?,
             arrival_window_s: num_field(v, "arrival_window_s")?,
             default_rps: num_field(v, "default_rps")?,
@@ -506,6 +526,7 @@ fn base(
         expected_winner: expected_winner.into(),
         n_instances,
         n_stages: 4,
+        prefill_instances: 0,
         workload: WorkloadSpec::sharegpt_like(),
         arrival_window_s: 400.0,
         default_rps: 2.0,
@@ -759,6 +780,25 @@ mod tests {
         // a malformed spec label is a typed parse error
         let bad = text.replace("rr+spare-pool:2+ring:8", "rr+melt+ring");
         assert!(matches!(Scenario::from_json_str(&bad), Err(ScenarioError::Parse(_))));
+    }
+
+    #[test]
+    fn disaggregated_shape_roundtrips_and_validates() {
+        let mut s = find("paper-2").unwrap();
+        s.prefill_instances = 1;
+        let text = s.to_json().to_string();
+        assert!(text.contains("\"prefill\":1"), "{text}");
+        let back = Scenario::from_json_str(&text).unwrap();
+        assert_eq!(back.prefill_instances, 1);
+        assert_eq!(back.to_json().to_string(), text);
+        let c = back.cluster();
+        assert_eq!(c.prefill_instances, 1);
+        assert!(c.is_disaggregated());
+        // a pool that swallows every instance leaves nothing to decode
+        s.prefill_instances = 4;
+        assert!(matches!(s.validate(), Err(ScenarioError::Invalid(_))));
+        // colocated specs serialize without the key (byte stability)
+        assert!(!find("paper-2").unwrap().to_json().to_string().contains("prefill"));
     }
 
     #[test]

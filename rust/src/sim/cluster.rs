@@ -6,12 +6,13 @@
 //! and executes its memory effects. See module docs in [`super`] and the
 //! mechanics in [`super::state`].
 
-use crate::config::{ExperimentConfig, FaultOp, NodeId};
+use crate::config::{ExperimentConfig, FaultOp, KvTier, NodeId};
 use crate::coordinator::control::{
     Action, ControlPlane, Event as Ctl, EvictScope, ResetMode, Wake,
 };
 use crate::coordinator::RecoveryManager;
 use crate::kvcache::NodeKv;
+use crate::kvtier::KvTierStore;
 use crate::metrics::Recorder;
 use crate::obs;
 use crate::workload::{generate_trace, Pcg32, Request, TraceStream, WorkloadSpec};
@@ -68,6 +69,26 @@ const REJOIN_RETRY_S: f64 = 5.0;
 /// `rust/tests/fleet_props.rs`).
 const STREAM_SEQ_BASE: u64 = 1 << 48;
 
+/// One tiered-KV transfer captured for trace export: recorded at
+/// dispatch (start and landing time are both known then — the channel
+/// model is deterministic), in event order, so the slice list is
+/// byte-stable across `--jobs` and `--queue` like everything else in
+/// [`SimResult`]. `t0_s` is the dispatch time; the gap to `t1_s`
+/// includes any wait for the tier channel.
+#[derive(Debug, Clone)]
+pub struct KvSlice {
+    pub t0_s: f64,
+    pub t1_s: f64,
+    /// Pipeline the transfer was dispatched from.
+    pub instance: usize,
+    /// `"kv_flush"`, `"kv_replay"`, or `"kv_handoff"`.
+    pub kind: &'static str,
+    /// Destination tier label (`"host"` / `"remote"`).
+    pub tier: &'static str,
+    pub req: u64,
+    pub tokens: u32,
+}
+
 /// Outputs of one simulation run.
 #[derive(Debug)]
 pub struct SimResult {
@@ -85,6 +106,19 @@ pub struct SimResult {
     /// or replication disabled).
     pub full_recomputes: u64,
     pub incomplete: usize,
+    /// Bytes moved into the stream tiers by background KV flushes
+    /// (`ReplicationPolicy::Stream`; 0 otherwise).
+    pub kv_bytes_streamed: u64,
+    /// Tokens of context displaced requests resumed from the stream
+    /// watermark instead of recomputing (`ResetMode::Replay`).
+    pub kv_replay_tokens: u64,
+    /// Peak host-tier occupancy (tokens) over the run.
+    pub kv_tier_peak_host: u64,
+    /// Peak remote-tier occupancy (tokens) over the run.
+    pub kv_tier_peak_remote: u64,
+    /// Tiered-KV transfers in dispatch order, for the Perfetto "kv"
+    /// tracks. Empty unless the run streamed, replayed, or handed off KV.
+    pub kv_slices: Vec<KvSlice>,
     /// Max event-queue occupancy observed at event-handling boundaries.
     /// Eager builds start at O(trace) (the whole arrival script is
     /// queued up front); streaming builds stay O(inflight) because only
@@ -116,6 +150,12 @@ pub struct ClusterSim {
     pub(crate) preemptions: u64,
     pub(crate) replica_stalls: u64,
     pub(crate) full_recomputes: u64,
+    /// Tiered KV transport (stream flushes, replay reads, disaggregated
+    /// handoffs) — pure arithmetic over channel deadlines, so it adds no
+    /// nondeterminism.
+    pub(crate) kvtier: KvTierStore,
+    pub(crate) kv_replay_tokens: u64,
+    pub(crate) kv_slices: Vec<KvSlice>,
     /// Max concurrent prefill passes per instance (pipeline depth).
     pub(crate) max_prefills: usize,
     pub(crate) log_mode: LogMode,
@@ -284,6 +324,7 @@ impl ClusterSim {
         // set_synced treat missing exactly like reserved-UNASSIGNED)
         cp.reserve_requests(total.unwrap_or(0));
         let rng = Pcg32::with_stream(cfg.seed, 0x5e0);
+        let timing_kv_token_bytes = cfg.timing.kv_token_bytes;
 
         Self {
             cfg,
@@ -300,6 +341,9 @@ impl ClusterSim {
             preemptions: 0,
             replica_stalls: 0,
             full_recomputes: 0,
+            kvtier: KvTierStore::new(timing_kv_token_bytes),
+            kv_replay_tokens: 0,
+            kv_slices: Vec::new(),
             max_prefills: PREFILL_PIPELINE_DEPTH,
             log_mode: LogMode::Off,
             control_log: Vec::new(),
@@ -413,12 +457,16 @@ impl ClusterSim {
             displaced.extend(self.instances.running[instance].drain(..));
         }
         displaced.extend(self.instances.waiting[instance].drain(..));
-        for &req in &displaced {
+        // requests held on a replay transfer re-enter routing when their
+        // KvReplayDone event fires, not now
+        let mut held = vec![false; displaced.len()];
+        for (slot, &req) in displaced.iter().enumerate() {
             let id = self.reqs[req].spec.id;
             for s in 0..self.cfg.cluster.n_stages {
                 let ni = self.node_index(NodeId::new(instance, s));
                 let _ = self.nodes.kv[ni].free_primary(id);
             }
+            self.reqs[req].staged = false;
             match reset {
                 ResetMode::Restart => {
                     let r = &mut self.reqs[req];
@@ -432,10 +480,50 @@ impl ClusterSim {
                     let r = &mut self.reqs[req];
                     r.resume_ctx = r.context_tokens();
                 }
+                // stream displacement: roll progress back to the stream
+                // watermark and replay that context from the tier over
+                // the transport; an empty watermark degrades to a full
+                // recompute
+                ResetMode::Replay { .. } => {
+                    let (bandwidth_gbps, tier) = self
+                        .stream_params()
+                        .expect("Replay reset requires a Stream replication policy");
+                    let ctx = self.reqs[req].context_tokens();
+                    let wm = self.kvtier.tokens(tier, id).min(ctx);
+                    if wm > 0 {
+                        let r = &mut self.reqs[req];
+                        let kept_out = wm.saturating_sub(r.spec.prompt_len);
+                        r.tokens_out = r.tokens_out.min(kept_out);
+                        r.resume_ctx = 0;
+                        let done =
+                            self.kvtier.begin_transfer(tier, self.now, wm, bandwidth_gbps);
+                        self.q.push(
+                            done,
+                            Event::KvReplayDone { req, tokens: wm, started_s: self.now },
+                        );
+                        self.kv_slices.push(KvSlice {
+                            t0_s: self.now,
+                            t1_s: done,
+                            instance,
+                            kind: "kv_replay",
+                            tier: tier.label(),
+                            req: id,
+                            tokens: wm,
+                        });
+                        held[slot] = true;
+                    } else {
+                        self.full_recomputes += 1;
+                        let r = &mut self.reqs[req];
+                        r.resume_ctx = r.context_tokens();
+                    }
+                }
                 ResetMode::KeepProgress => {}
             }
         }
-        for req in displaced {
+        for (slot, req) in displaced.into_iter().enumerate() {
+            if held[slot] {
+                continue;
+            }
             let id = self.reqs[req].spec.id;
             self.control(Ctl::RequestDisplaced { req: id });
         }
@@ -660,6 +748,15 @@ impl ClusterSim {
                 Event::SlowEnd { node } => self.slow_end(node),
                 Event::StragglerNotice { node } => self.straggler_notice(node),
                 Event::Control { wake } => self.wake(wake),
+                Event::KvFlushDone { req, tokens, started_s } => {
+                    self.kv_flush_done(req, tokens, started_s)
+                }
+                Event::KvReplayDone { req, tokens, started_s } => {
+                    self.kv_replay_done(req, tokens, started_s)
+                }
+                Event::KvHandoffDone { req, from_instance, started_s } => {
+                    self.kv_handoff_done(req, from_instance, started_s)
+                }
                 Event::Sample => self.sample_util(),
             }
         }
@@ -688,6 +785,11 @@ impl ClusterSim {
             replica_stalls: self.replica_stalls,
             full_recomputes: self.full_recomputes,
             incomplete,
+            kv_bytes_streamed: self.kvtier.total_bytes_streamed(),
+            kv_replay_tokens: self.kv_replay_tokens,
+            kv_tier_peak_host: self.kvtier.peak_occupancy_tokens(KvTier::Host),
+            kv_tier_peak_remote: self.kvtier.peak_occupancy_tokens(KvTier::Remote),
+            kv_slices: self.kv_slices,
             peak_queue_len: self.peak_queue_len,
             control_log: self.control_log,
             obs: self.obs,

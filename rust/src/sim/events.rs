@@ -53,6 +53,18 @@ pub enum Event {
     /// A control-plane deadline (recovery phases elapsed, replacement
     /// provisioned, full re-init finished) fires.
     Control { wake: Wake },
+    /// A background KV flush to the stream tier finished transferring:
+    /// commit `req`'s watermark at `tokens` (`ReplicationPolicy::Stream`).
+    /// `started_s` is when the flush was enqueued, for the latency
+    /// histogram.
+    KvFlushDone { req: usize, tokens: u32, started_s: f64 },
+    /// A displaced request finished replaying `tokens` of streamed KV
+    /// back onto the device tier; it re-enters routing now
+    /// (`ResetMode::Replay`).
+    KvReplayDone { req: usize, tokens: u32, started_s: f64 },
+    /// A disaggregated prefill→decode KV handoff finished transiting the
+    /// transport; the request may now be admitted to the decode pool.
+    KvHandoffDone { req: usize, from_instance: usize, started_s: f64 },
     /// Periodic utilization sampling.
     Sample,
 }

@@ -84,6 +84,6 @@ pub mod handoff;
 mod state;
 mod timeq;
 
-pub use cluster::{ClusterSim, ControlRecord, LogMode, SimResult};
+pub use cluster::{ClusterSim, ControlRecord, KvSlice, LogMode, SimResult};
 pub use events::{Event, EventQueue};
 pub use fleet::{FleetResult, FleetSim, FleetSpec, RoutedStream};

@@ -15,13 +15,13 @@
 
 use std::collections::VecDeque;
 
-use crate::config::NodeId;
+use crate::config::{KvTier, NodeId, ReplicationPolicy};
 use crate::coordinator::control::Event as Ctl;
 use crate::kvcache::{KvError, NodeKv};
 use crate::metrics::RequestRecord;
 use crate::workload::Request;
 
-use super::cluster::ClusterSim;
+use super::cluster::{ClusterSim, KvSlice};
 use super::events::Event;
 
 pub(crate) const SAMPLE_INTERVAL_S: f64 = 10.0;
@@ -58,6 +58,9 @@ pub(crate) struct ReqState {
     /// Tokens of context that must be recomputed by the next prefill
     /// pass (0 = fresh request; >0 after preemption/migration).
     pub(crate) resume_ctx: u32,
+    /// Disaggregated handoff landed: the request's KV arrived with it,
+    /// so decode admission skips the prefill pass (consumed by `pump`).
+    pub(crate) staged: bool,
 }
 
 impl ReqState {
@@ -69,6 +72,7 @@ impl ReqState {
             retries: 0,
             done: false,
             resume_ctx: 0,
+            staged: false,
         }
     }
 
@@ -243,6 +247,14 @@ impl ClusterSim {
                 break; // KV pressure: head-of-line waits for space
             }
             self.instances.waiting[instance].pop_front();
+            if self.reqs[req].staged {
+                // disaggregated handoff: the KV just transited the
+                // transport, so the request enters decode directly —
+                // no prefill pass on the decode pool
+                self.reqs[req].staged = false;
+                self.instances.running[instance].push(req);
+                continue;
+            }
             self.instances.prefills_inflight[instance] += 1;
             self.instances.prefilling[instance].push(req);
             self.start_pass(instance, PassKind::Prefill { req });
@@ -370,6 +382,11 @@ impl ClusterSim {
                     r.tokens_out = r.tokens_out.max(1);
                     if r.tokens_out >= r.spec.output_len {
                         self.complete(instance, req);
+                    } else if self.cfg.cluster.prefill_pool().contains(&instance) {
+                        // disaggregated shape: decode happens in the
+                        // other pool — the prefilled KV transits the
+                        // transport before decode admission
+                        self.start_handoff(instance, req);
                     } else {
                         self.instances.running[instance].push(req);
                     }
@@ -405,7 +422,7 @@ impl ClusterSim {
                         continue;
                     }
                     if flush {
-                        self.replicate(instance, req);
+                        self.flush_request_kv(instance, req);
                     }
                     keep.push(req);
                 }
@@ -452,6 +469,135 @@ impl ClusterSim {
         }
     }
 
+    // --------------------------------------------- tiered KV transport
+
+    /// The stream tier and bandwidth, when the serving policy streams
+    /// ([`ReplicationPolicy::Stream`]).
+    pub(crate) fn stream_params(&self) -> Option<(f64, KvTier)> {
+        match self.cfg.serving.policy.replication {
+            ReplicationPolicy::Stream { bandwidth_gbps, tier } => Some((bandwidth_gbps, tier)),
+            _ => None,
+        }
+    }
+
+    /// The transport channel a disaggregated prefill→decode handoff
+    /// rides: the stream tier when streaming is on, the host tier at the
+    /// default bandwidth otherwise (the transport exists independently of
+    /// the replication axis).
+    pub(crate) fn handoff_params(&self) -> (f64, KvTier) {
+        self.stream_params()
+            .unwrap_or((crate::config::policy::DEFAULT_STREAM_GBPS, KvTier::Host))
+    }
+
+    /// Dispatch one request's cadence flush onto the configured
+    /// replication transport: ring writes device replicas synchronously;
+    /// stream enqueues a tier transfer whose completion event raises the
+    /// watermark ([`Event::KvFlushDone`]).
+    pub(crate) fn flush_request_kv(&mut self, instance: usize, req: usize) {
+        match self.cfg.serving.policy.replication {
+            ReplicationPolicy::Ring { .. } => self.replicate(instance, req),
+            ReplicationPolicy::Stream { bandwidth_gbps, tier } => {
+                let id = self.reqs[req].spec.id;
+                let ctx = self.reqs[req].context_tokens();
+                if ctx <= self.kvtier.tokens(tier, id) {
+                    return; // watermark already covers the context
+                }
+                // one outstanding transfer per request: a still-queued
+                // flush absorbs this cadence tick (the next one retries)
+                if !self.kvtier.try_start_flush(tier, id) {
+                    return;
+                }
+                let delta = ctx - self.kvtier.tokens(tier, id);
+                let done = self.kvtier.begin_transfer(tier, self.now, delta, bandwidth_gbps);
+                self.q.push(done, Event::KvFlushDone { req, tokens: ctx, started_s: self.now });
+                self.kv_slices.push(KvSlice {
+                    t0_s: self.now,
+                    t1_s: done,
+                    instance,
+                    kind: "kv_flush",
+                    tier: tier.label(),
+                    req: id,
+                    tokens: delta,
+                });
+            }
+            ReplicationPolicy::Off => {}
+        }
+    }
+
+    /// A stream flush finished transferring: commit the watermark and
+    /// report it to the control plane (the same [`Ctl::ReplicaSynced`]
+    /// bookkeeping the ring uses).
+    pub(crate) fn kv_flush_done(&mut self, req: usize, tokens: u32, started_s: f64) {
+        let Some((_, tier)) = self.stream_params() else { return };
+        if self.reqs[req].done {
+            return; // completed mid-transfer; its entry is already dropped
+        }
+        let id = self.reqs[req].spec.id;
+        let delta = tokens.saturating_sub(self.kvtier.tokens(tier, id));
+        // capacity overflow evicts the coldest entries — their streamed
+        // context is simply gone (their next flush starts over)
+        let _evicted = self.kvtier.commit_flush(tier, id, tokens, self.now);
+        if let Some(o) = self.obs.as_mut() {
+            let bytes = delta as f64 * self.cfg.timing.kv_token_bytes;
+            o.kv_flush(self.now, tier.label(), bytes as u64, self.now - started_s);
+        }
+        self.control(Ctl::ReplicaSynced { req: id, tokens });
+    }
+
+    /// A displaced request finished replaying its streamed KV back onto
+    /// the device tier ([`ResetMode::Replay`] hold): it re-enters
+    /// routing now.
+    pub(crate) fn kv_replay_done(&mut self, req: usize, tokens: u32, started_s: f64) {
+        if self.reqs[req].done {
+            return;
+        }
+        self.kv_replay_tokens += tokens as u64;
+        if let Some(o) = self.obs.as_mut() {
+            o.kv_replay(self.now, tokens as u64, self.now - started_s);
+        }
+        let id = self.reqs[req].spec.id;
+        self.control(Ctl::RequestDisplaced { req: id });
+    }
+
+    /// A disaggregated prefill→decode handoff finished transiting the
+    /// transport: release the prefill pool's copy and hand the request
+    /// to the control plane for a decode-pool placement.
+    pub(crate) fn kv_handoff_done(&mut self, req: usize, from_instance: usize, started_s: f64) {
+        if self.reqs[req].done {
+            return;
+        }
+        self.free_request_kv(from_instance, req);
+        self.reqs[req].staged = true;
+        if let Some(o) = self.obs.as_mut() {
+            let (_, tier) = self.handoff_params();
+            let bytes =
+                self.reqs[req].context_tokens() as f64 * self.cfg.timing.kv_token_bytes;
+            o.kv_flush(self.now, tier.label(), bytes as u64, self.now - started_s);
+        }
+        let id = self.reqs[req].spec.id;
+        self.control(Ctl::PrefillCompleted { req: id });
+    }
+
+    /// Begin the prefill→decode KV handoff for `req` (disaggregated
+    /// shapes): the prefilled context transits the transport channel
+    /// serialized behind any in-flight stream traffic.
+    pub(crate) fn start_handoff(&mut self, instance: usize, req: usize) {
+        let ctx = self.reqs[req].context_tokens();
+        let (bandwidth_gbps, tier) = self.handoff_params();
+        let done = self.kvtier.begin_transfer(tier, self.now, ctx, bandwidth_gbps);
+        self.q
+            .push(done, Event::KvHandoffDone { req, from_instance: instance, started_s: self.now });
+        self.kv_slices.push(KvSlice {
+            t0_s: self.now,
+            t1_s: done,
+            instance,
+            kind: "kv_handoff",
+            tier: tier.label(),
+            req: self.reqs[req].spec.id,
+            tokens: ctx,
+        });
+    }
+
     pub(crate) fn free_request_kv(&mut self, instance: usize, req: usize) {
         let id = self.reqs[req].spec.id;
         for s in 0..self.cfg.cluster.n_stages {
@@ -470,6 +616,9 @@ impl ClusterSim {
 
     pub(crate) fn complete(&mut self, instance: usize, req: usize) {
         self.free_request_kv(instance, req);
+        if let Some((_, tier)) = self.stream_params() {
+            self.kvtier.drop_entry(tier, self.reqs[req].spec.id);
+        }
         let r = &mut self.reqs[req];
         r.done = true;
         let record = RequestRecord {
@@ -529,6 +678,14 @@ impl ClusterSim {
                 (0..self.cfg.cluster.n_instances).filter(|&i| self.cp.state(i).serving()).count();
             if n > 0 {
                 o.sample_cluster(self.now, sum / n as f64, serving, self.cfg.cluster.n_instances);
+            }
+        }
+        if self.stream_params().is_some() || self.cfg.cluster.is_disaggregated() {
+            for tier in [KvTier::Host, KvTier::Remote] {
+                let occ = self.kvtier.occupancy_tokens(tier);
+                if let Some(o) = self.obs.as_mut() {
+                    o.sample_kv_tier(self.now, tier.label(), occ);
+                }
             }
         }
         // stop sampling once all requests are done (lets the queue

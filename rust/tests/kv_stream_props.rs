@@ -1,0 +1,246 @@
+//! Properties of the tiered KV transport (`ReplicationPolicy::Stream`
+//! and the disaggregated prefill/decode shape): Stream runs are
+//! deterministic, replayable into a fresh facade, and strand nothing
+//! (the `policy_props.rs` contract); an infinitely-fast stream matches
+//! ring replication's recovery outcomes on the paper scenes; halving
+//! stream bandwidth never *improves* recovery (watermarks only lag
+//! further behind); disaggregation conserves requests end to end; and
+//! sweep bytes with a Stream policy stay identical across `--jobs` and
+//! `--queue` — the determinism contract every other subsystem obeys.
+
+use kevlarflow::bench::sweep;
+use kevlarflow::config::{PolicySpec, QueueKind};
+use kevlarflow::coordinator::control::{ControlPlane, Event};
+use kevlarflow::scenario::{find, Scenario};
+use kevlarflow::sim::SimResult;
+
+fn run_quick(s: &Scenario, policy: PolicySpec, window_s: f64) -> SimResult {
+    let mut s = s.clone();
+    s.arrival_window_s = s.arrival_window_s.min(window_s);
+    s.run_logged(s.default_rps, policy)
+}
+
+/// Replay a run's logged event trace into a fresh facade, asserting the
+/// identical action stream (the purity contract from `policy_props.rs`).
+fn replay(s: &Scenario, policy: PolicySpec, window_s: f64, res: &SimResult) {
+    let mut quick = s.clone();
+    quick.arrival_window_s = quick.arrival_window_s.min(window_s);
+    let cfg = quick.to_experiment(quick.default_rps, policy);
+    let mut cp = ControlPlane::new(&cfg.cluster, &cfg.serving, &cfg.timing, cfg.seed);
+    for (i, (t, ev, actions)) in res.control_log.iter().enumerate() {
+        let replayed = cp.handle(*t, ev.clone());
+        assert_eq!(
+            &replayed,
+            actions,
+            "{} ({}): exchange {i} diverged at t={t}: {ev:?}",
+            s.name,
+            policy.label()
+        );
+    }
+}
+
+/// The flush ordering of a run: every `ReplicaSynced` report (stream
+/// watermark commits), in exchange order.
+fn flush_order(res: &SimResult) -> Vec<(u64, u32)> {
+    res.control_log
+        .iter()
+        .filter_map(|(_, ev, _)| match ev {
+            Event::ReplicaSynced { req, tokens } if *tokens > 0 => Some((*req, *tokens)),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn stream_policies_are_deterministic_replayable_and_strand_nothing() {
+    // Stream across every recovery arm and both tiers, over scenarios
+    // that exercise kills, flaps, cascades, and stragglers
+    let combos = [
+        ("paper-1", "rr+donor-splice+stream:8:host"),
+        ("flap", "ll+spare-pool:1+stream:4:remote"),
+        ("cascade", "p2c+checkpoint-restore:45+stream:8:host"),
+        ("slow-node", "rr+full-reinit+stream:2:host"),
+    ];
+    for (name, spec) in combos {
+        let s = find(name).unwrap();
+        let policy = PolicySpec::parse(spec).unwrap();
+        let a = run_quick(&s, policy, 120.0);
+        let b = run_quick(&s, policy, 120.0);
+        let tag = format!("{name} ({spec})");
+        assert_eq!(a.control_log.len(), b.control_log.len(), "{tag}: log lengths diverged");
+        assert!(
+            a.control_log.iter().zip(b.control_log.iter()).all(|(x, y)| x == y),
+            "{tag}: control logs diverged"
+        );
+        assert_eq!(a.incomplete, 0, "{tag}: stranded requests");
+        // the satellite regression: identical runs commit their flush
+        // watermarks in the identical order (no HashMap order leaks
+        // anywhere on the flush path)
+        let fa = flush_order(&a);
+        assert!(!fa.is_empty(), "{tag}: stream must commit at least one watermark");
+        assert_eq!(fa, flush_order(&b), "{tag}: flush orderings diverged");
+        assert!(a.kv_bytes_streamed > 0, "{tag}: no bytes streamed");
+        assert_eq!(a.kv_bytes_streamed, b.kv_bytes_streamed, "{tag}: streamed bytes diverged");
+        replay(&s, policy, 120.0, &a);
+    }
+}
+
+#[test]
+fn infinite_bandwidth_stream_matches_ring_recovery_outcomes() {
+    // with effectively infinite bandwidth the watermark tracks every
+    // flush cadence exactly like the ring's synced counter, so recovery
+    // outcomes (fast recoveries, zero retries, zero stranded) must match
+    // ring replication on the paper scenes
+    let stream = PolicySpec::parse("rr+donor-splice+stream:1000000:host").unwrap();
+    let ring = PolicySpec::parse("rr+donor-splice+ring:8").unwrap();
+    for scene in ["paper-1", "paper-2", "paper-3"] {
+        let s = find(scene).unwrap();
+        let a = run_quick(&s, stream, 200.0);
+        let b = run_quick(&s, ring, 200.0);
+        assert_eq!(
+            a.recovery.completed.len(),
+            b.recovery.completed.len(),
+            "{scene}: recovery counts diverged"
+        );
+        assert_eq!(a.incomplete, 0, "{scene}: stream stranded requests");
+        assert_eq!(b.incomplete, 0, "{scene}: ring stranded requests");
+        let retries = |r: &SimResult| {
+            r.recorder.records.iter().map(|rec| rec.retries as u64).sum::<u64>()
+        };
+        assert_eq!(retries(&a), 0, "{scene}: an instant watermark must preserve progress");
+        assert_eq!(retries(&b), 0, "{scene}: ring replication must preserve progress");
+        assert!(a.kv_bytes_streamed > 0, "{scene}: stream must move bytes");
+        assert_eq!(b.kv_bytes_streamed, 0, "{scene}: ring must not touch the tier store");
+    }
+}
+
+#[test]
+fn halving_bandwidth_never_improves_recovery() {
+    // a slower stream means watermarks lag further behind the context at
+    // failure time: fewer tokens replay (more recompute), and the
+    // service-visible latency can only get worse, never better
+    let s = find("paper-1").unwrap();
+    let mut prev: Option<SimResult> = None;
+    for gbps in ["8", "1", "0.125"] {
+        let policy =
+            PolicySpec::parse(&format!("rr+donor-splice+stream:{gbps}:host")).unwrap();
+        let res = run_quick(&s, policy, 200.0);
+        assert_eq!(res.incomplete, 0, "{gbps} Gbps: stranded requests");
+        if let Some(fast) = prev.take() {
+            assert!(
+                res.kv_replay_tokens <= fast.kv_replay_tokens,
+                "{gbps} Gbps replayed {} tokens > faster stream's {}",
+                res.kv_replay_tokens,
+                fast.kv_replay_tokens
+            );
+            assert!(
+                res.recorder.summary().latency_avg >= fast.recorder.summary().latency_avg - 1e-9,
+                "{gbps} Gbps must not beat the faster stream's mean latency"
+            );
+        }
+        prev = Some(res);
+    }
+}
+
+#[test]
+fn stream_and_ring_rows_are_distinct_on_the_failure_path() {
+    // the acceptance pin: at finite bandwidth the Stream policy is a
+    // genuinely different failure story from the ring — displacement
+    // goes through watermark replay instead of replica promotion, so
+    // the latency/TTFT row diverges while both recover exactly once
+    let s = find("paper-1").unwrap();
+    let stream = run_quick(&s, PolicySpec::parse("rr+donor-splice+stream:8:host").unwrap(), 400.0);
+    let ring = run_quick(&s, PolicySpec::kevlarflow(), 400.0);
+    assert_eq!(stream.recovery.completed.len(), 1);
+    assert_eq!(ring.recovery.completed.len(), 1);
+    assert_eq!(stream.incomplete, 0);
+    assert_eq!(ring.incomplete, 0);
+    let (ss, rs) = (stream.recorder.summary(), ring.recorder.summary());
+    assert!(
+        ss.latency_avg != rs.latency_avg || ss.ttft_avg != rs.ttft_avg,
+        "stream and ring rows must be distinguishable: lat {} vs {}, ttft {} vs {}",
+        ss.latency_avg,
+        rs.latency_avg,
+        ss.ttft_avg,
+        rs.ttft_avg
+    );
+    assert!(stream.kv_bytes_streamed > 0);
+    assert!(stream.kv_tier_peak_host > 0);
+    assert_eq!(ring.kv_bytes_streamed, 0);
+}
+
+#[test]
+fn disaggregated_shape_conserves_requests() {
+    // every admitted request prefills in the prefill pool, transits the
+    // KV transport exactly once, and decodes to completion in the decode
+    // pool: admits = completions, nothing stranded in the handoff
+    let mut s = find("paper-2").unwrap();
+    s.prefill_instances = 1;
+    s.faults.clear();
+    s.arrival_window_s = 100.0;
+    let res = s.run_logged(s.default_rps, PolicySpec::parse("rr+donor-splice+stream:8:host").unwrap());
+    assert_eq!(res.incomplete, 0, "disaggregation stranded requests");
+    let n = res.recorder.summary().n;
+    assert!(n > 50, "too few served ({n}) to exercise the handoff path");
+    let handoffs = res.kv_slices.iter().filter(|sl| sl.kind == "kv_handoff").count();
+    assert_eq!(handoffs, n, "every admitted request must transit the handoff exactly once");
+    // prefill completions are first-class control-plane events
+    let prefill_events = res
+        .control_log
+        .iter()
+        .filter(|(_, ev, _)| matches!(ev, Event::PrefillCompleted { .. }))
+        .count();
+    assert_eq!(prefill_events, n, "one prefill-completed report per request");
+}
+
+#[test]
+fn disaggregated_run_survives_a_decode_pool_failure() {
+    // the kill in paper-2 hits instance 0; with instance 0 as the
+    // prefill pool, re-home the fault to a decode instance so the
+    // failure path and the handoff path compose
+    use kevlarflow::config::{FaultOp, NodeId};
+    let mut s = find("paper-2").unwrap();
+    s.prefill_instances = 1;
+    s.faults = vec![FaultOp::Kill { t_s: 120.0, node: NodeId::new(2, 2) }];
+    s.arrival_window_s = 200.0;
+    let policy = PolicySpec::parse("rr+donor-splice+stream:8:host").unwrap();
+    let a = s.run_logged(s.default_rps, policy);
+    let b = s.run_logged(s.default_rps, policy);
+    assert_eq!(a.incomplete, 0, "stranded requests after decode-pool failure");
+    assert_eq!(a.recovery.completed.len(), 1, "the decode-pool kill must recover");
+    assert!(
+        a.control_log.iter().zip(b.control_log.iter()).all(|(x, y)| x == y)
+            && a.control_log.len() == b.control_log.len(),
+        "disaggregated failure runs diverged"
+    );
+}
+
+#[test]
+fn stream_sweep_bytes_identical_across_jobs_and_queue_backends() {
+    // THE determinism contract, now with a Stream policy in the matrix:
+    // worker-thread count and event-queue backend may not move a byte
+    let names = vec!["paper-1".to_string()];
+    let policies = [
+        PolicySpec::kevlarflow(),
+        PolicySpec::parse("rr+donor-splice+stream:8:host").unwrap(),
+        PolicySpec::parse("rr+checkpoint-restore:30+stream:4:remote").unwrap(),
+    ];
+    let base = sweep::run_sweep(&names, false, Some(120.0), true, 1, &policies, QueueKind::Heap)
+        .unwrap();
+    let text = sweep::sweep_json(&base).to_string();
+    assert!(text.contains("stream:8:host"), "stream rows must carry their grammar label");
+    let jobs8 = sweep::run_sweep(&names, false, Some(120.0), true, 8, &policies, QueueKind::Heap)
+        .unwrap();
+    assert_eq!(
+        text,
+        sweep::sweep_json(&jobs8).to_string(),
+        "stream sweep bytes must not depend on --jobs"
+    );
+    let wheel = sweep::run_sweep(&names, false, Some(120.0), true, 8, &policies, QueueKind::Wheel)
+        .unwrap();
+    assert_eq!(
+        text,
+        sweep::sweep_json(&wheel).to_string(),
+        "stream sweep bytes must not depend on --queue"
+    );
+}

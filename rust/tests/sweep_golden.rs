@@ -9,9 +9,13 @@ use kevlarflow::config::{Json, PolicySpec, QueueKind};
 use kevlarflow::obs;
 
 /// Every key a sweep row must carry, in the writer's (sorted) order.
-const ROW_KEYS: [&str; 16] = [
+const ROW_KEYS: [&str; 20] = [
     "full_recomputes",
     "incomplete",
+    "kv_bytes_streamed",
+    "kv_replay_tokens",
+    "kv_tier_peak_host",
+    "kv_tier_peak_remote",
     "latency_avg_s",
     "latency_p99_s",
     "mean_recovery_s",
@@ -172,11 +176,15 @@ fn policy_matrix_rows_share_schema_and_diverge_in_results() {
 // ------------------------------------------------------------ fleet tier
 
 /// Every key a fleet sweep row must carry, in the writer's (sorted)
-/// order: the 16 scenario-row keys plus `clusters`.
-const FLEET_ROW_KEYS: [&str; 17] = [
+/// order: the 20 scenario-row keys plus `clusters`.
+const FLEET_ROW_KEYS: [&str; 21] = [
     "clusters",
     "full_recomputes",
     "incomplete",
+    "kv_bytes_streamed",
+    "kv_replay_tokens",
+    "kv_tier_peak_host",
+    "kv_tier_peak_remote",
     "latency_avg_s",
     "latency_p99_s",
     "mean_recovery_s",
